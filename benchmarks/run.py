@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (DESIGN.md §6 maps each to the
+paper's Table 1 / Figures 6-9 / §5 executor claim)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import paper_benches as pb
+
+    rows: list[dict] = []
+    print("name,us_per_call,derived")
+    benches = [
+        pb.bench_table1_step_time,
+        pb.bench_fig6_null_step,
+        pb.bench_fig7_scaling,
+        pb.bench_fig8_backup_workers,
+        pb.bench_fig9_softmax,
+        pb.bench_executor_dispatch,
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    t0 = time.time()
+    for bench in benches:
+        if only and only not in bench.__name__:
+            continue
+        try:
+            bench(rows)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}")
+    print(f"# {len(rows)} rows in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

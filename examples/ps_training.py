@@ -1,0 +1,44 @@
+"""The paper's §4.4 in one script: train the same model under async, sync
+and sync+backup-worker coordination with injected stragglers, and print the
+step-time/discard comparison (Figures 4 & 8).
+
+Run: PYTHONPATH=src python examples/ps_training.py
+"""
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.graph import Graph
+from repro.ps.training import PSTrainer, linear_model
+
+rng = np.random.default_rng(0)
+W_TRUE = rng.normal(0, 1, (32, 16)).astype(np.float32)
+
+
+def batch_fn(w, s):
+    x = rng.normal(0, 1, (64, 32)).astype(np.float32)
+    return x, (x @ W_TRUE).argmax(-1)
+
+
+def main():
+    n_workers, steps = 6, 12
+    print(f"{'mode':<10}{'median step':>14}{'p90 step':>12}"
+          f"{'final loss':>12}{'discarded':>11}")
+    for mode, backup in (("async", 0), ("sync", 0), ("backup", 2)):
+        g = Graph()
+        cl = Cluster(ps=2, worker=n_workers)
+        tr = PSTrainer(linear_model(g, 32, 16, 2), cl, mode=mode,
+                       n_workers=n_workers, backup_workers=backup, lr=0.3,
+                       straggler_s=0.03, straggler_every=3)
+        stats = tr.train(steps, batch_fn)
+        med = np.median(stats.step_times) * 1e3
+        p90 = np.percentile(stats.step_times, 90) * 1e3
+        print(f"{mode:<10}{med:>12.1f}ms{p90:>10.1f}ms"
+              f"{np.mean(stats.losses[-4:]):>12.3f}"
+              f"{stats.discarded:>11}")
+    print("\nbackup workers cut the straggler tail (paper Fig. 8); async "
+          "hides it entirely at the cost of stale gradients (Fig. 4a).")
+
+
+if __name__ == "__main__":
+    main()

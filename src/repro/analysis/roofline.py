@@ -1,0 +1,202 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e target).
+
+    compute    = HLO_FLOPs / (chips x 197e12)
+    memory     = HLO_bytes / (chips x 819e9)
+    collective = wire_bytes / (chips-normalized links x 50e9)
+
+HLO_FLOPs is the trip-scaled dot-flop volume parsed from the compiled HLO
+(per-device; analysis.hlo.dot_flops). HLO_bytes takes XLA's
+``cost_analysis()["bytes accessed"]`` re-scaled by the same trip-correction
+ratio (XLA counts while bodies once — verified; DESIGN.md §9). Wire bytes use
+ring-cost factors per collective kind over bidirectional torus axes (2 links
+x 50 GB/s per hop direction).
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (forward-only), N = active params,
+D = tokens processed; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat and
+dispatch waste. ``fraction`` = time the chips would spend at peak on useful
+math / the dominant term — an upper bound on achievable MFU under this
+sharding, which is the score we hillclimb in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.analysis import hlo as hlo_mod
+from repro.config import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+LINKS_PER_AXIS = 2           # bidirectional torus ring per mesh axis
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_device: float
+    hlo_flops_device: float
+    coll_by_kind: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """No-overlap step-time estimate = max of the three terms (perfectly
+        overlapped) — we report max() as the optimistic bound."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_time(self) -> float:
+        return self.model_flops_device / PEAK_FLOPS
+
+    @property
+    def fraction(self) -> float:
+        """Upper-bound MFU under this sharding (useful time / step bound)."""
+        t = self.t_step
+        return self.useful_time / t if t > 0 else 0.0
+
+    @property
+    def compute_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — 1.0 means zero waste; <1 means remat or
+        dispatch overhead; >1 means HLO undercount (flag for review)."""
+        return (self.model_flops_device / self.hlo_flops_device
+                if self.hlo_flops_device else 0.0)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "dominant": self.dominant,
+            "fraction": round(self.fraction, 4),
+            "model/hlo_flops": round(self.compute_ratio, 3),
+            "coll_by_kind_GiB": {k: round(v / 2**30, 3)
+                                 for k, v in self.coll_by_kind.items()},
+        }
+
+
+def wire_bytes(op: hlo_mod.CollectiveOp) -> float:
+    """Per-device bytes moved over links, ring-cost model."""
+    a = hlo_mod.replica_group_size(op.replica_groups) or 1
+    if a <= 1:
+        return 0.0
+    d = op.scaled_bytes                       # per-device shape bytes (lhs)
+    if op.kind == "all-gather":               # lhs = gathered output
+        return d * (a - 1) / a
+    if op.kind == "reduce-scatter":           # lhs = scattered output
+        return d * (a - 1)
+    if op.kind == "all-reduce":               # lhs = full tensor
+        return 2.0 * d * (a - 1) / a
+    if op.kind == "all-to-all":
+        return d * (a - 1) / a
+    if op.kind == "collective-permute":
+        return float(d)
+    return float(d)
+
+
+def model_flops(arch: str, shape_name: str, chips: int) -> float:
+    """Useful per-device FLOPs for this step (6ND / 2ND convention)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        total = 2.0 * n * tokens
+    return total / chips
+
+
+def roofline_from_artifacts(json_path: Path, hlo_path: Path) -> Roofline:
+    info = json.loads(Path(json_path).read_text())
+    arch, shape_name = info["arch"], info["shape"]
+    chips = info["devices"]
+    cfg = get_config(arch)
+
+    import gzip
+    text = gzip.open(hlo_path, "rt").read() if str(hlo_path).endswith(".gz") \
+        else Path(hlo_path).read_text()
+    comps = hlo_mod.split_computations(text)
+    ana = hlo_mod.analyze(text, default_trip=cfg.num_layers)
+    flops_dev = hlo_mod.dot_flops(comps, default_trip=cfg.num_layers)
+    bytes_dev = hlo_mod.hlo_bytes(comps, default_trip=cfg.num_layers,
+                                  f32_factor=0.5 if cfg.dtype == "bfloat16"
+                                  else 1.0)
+
+    coll = 0.0
+    by_kind: dict[str, float] = {}
+    for op in ana.collectives:
+        w = wire_bytes(op)
+        # f32 collectives of a bf16 model are CPU float-normalization
+        # artifacts — on TPU these tensors (activations/grads) stay bf16.
+        if op.dtype == "f32" and cfg.dtype == "bfloat16":
+            w *= 0.5
+        coll += w
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + w
+
+    mesh = "pod2" if info["mesh"].get("pod") else "pod1"
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh, chips=chips,
+        t_compute=flops_dev / PEAK_FLOPS,
+        t_memory=bytes_dev / HBM_BW,
+        t_collective=coll / (LINKS_PER_AXIS * LINK_BW),
+        model_flops_device=model_flops(arch, shape_name, chips),
+        hlo_flops_device=flops_dev,
+        coll_by_kind=by_kind,
+    )
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "all"])
+    args = ap.parse_args()
+    d = Path(args.dir)
+    rows = []
+    for jp in sorted(d.glob("*.json")):
+        tag = jp.stem
+        if args.mesh != "all" and not tag.endswith(args.mesh):
+            continue
+        hp = jp.with_suffix("").with_suffix("")  # strip .json
+        hp = d / f"{tag}.hlo.gz"
+        if not hp.exists():
+            continue
+        info = json.loads(jp.read_text())
+        if "error" in info or "skipped" in info:
+            continue
+        try:
+            r = roofline_from_artifacts(jp, hp)
+            rows.append(r.row())
+            print(f"{tag}: dom={r.dominant} frac={r.fraction:.3f} "
+                  f"tc={r.t_compute*1e3:.1f}ms tm={r.t_memory*1e3:.1f}ms "
+                  f"tx={r.t_collective*1e3:.1f}ms "
+                  f"ratio={r.compute_ratio:.2f}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{tag}: roofline FAILED {e}")
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""User-level checkpointing (paper §4.3) for the SPMD path.
+
+Faithful to the paper's design decisions:
+  - checkpointing is library code over primitive save/restore, not runtime
+    magic; policies (retention, best-metric, cadence) are user-configurable;
+  - one writer per host maximizes I/O bandwidth (here: one process, one
+    manifest + one .npy per pytree leaf);
+  - checkpoints are NOT consistent by default; callers who need consistency
+    take them between synchronous steps (our train driver does);
+  - restore + re-shard enables fine-tuning AND elastic restarts: the arrays
+    are host-loaded then device_put against the *new* mesh's shardings
+    (checkpoint/elastic.py), so a job can resume on a different topology.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict, spec):
+    if isinstance(spec, dict):
+        return {k: _unflatten(
+            {p[len(k) + 1:]: v for p, v in flat.items()
+             if p.split("/")[0] == k}, spec[k]) for k in spec}
+    if isinstance(spec, (list, tuple)):
+        vals = [
+            _unflatten({p[len(str(i)) + 1:]: v for p, v in flat.items()
+                        if p.split("/")[0] == str(i)}, s)
+            for i, s in enumerate(spec)]
+        return type(spec)(vals)
+    assert len(flat) == 1, flat.keys()
+    return next(iter(flat.values()))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 keep_best: int = 0, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.keep_best = keep_best
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+        self._scores: dict[int, float] = self._load_scores()
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, state: dict, metric: float | None = None):
+        """state: pytree of arrays (params/opt/whatever). Blocking host copy,
+        async disk write (the step can proceed while I/O drains)."""
+        flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+        if self._pending is not None:
+            self._pending.join()
+
+        def write():
+            path = self.dir / f"step_{step:08d}"
+            tmp = self.dir / f".tmp_{step:08d}_{time.time_ns()}"
+            tmp.mkdir(parents=True)
+            manifest = {}
+            for name, arr in flat.items():
+                fn = name.replace("/", "__") + ".npy"
+                logical = str(arr.dtype)
+                if logical == "bfloat16":      # numpy can't serialize bf16
+                    np.save(tmp / fn, arr.view(np.uint16))
+                else:
+                    np.save(tmp / fn, arr)
+                manifest[name] = {"file": fn, "shape": list(arr.shape),
+                                  "dtype": logical}
+            (tmp / "manifest.json").write_text(json.dumps(
+                {"step": step, "metric": metric, "leaves": manifest}))
+            if path.exists():
+                shutil.rmtree(path)
+            tmp.rename(path)
+            if metric is not None:
+                self._scores[step] = metric
+                self._save_scores()
+            self._gc()
+
+        if self.async_save:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # -- restore ----------------------------------------------------------------
+
+    def steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob(
+            "step_*"))
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, spec, step: int | None = None) -> tuple[int, dict]:
+        """spec: a pytree prototype (shapes irrelevant; structure used)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+
+        def load(meta):
+            arr = np.load(path / meta["file"])
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            return arr
+
+        flat = {name: load(meta)
+                for name, meta in manifest["leaves"].items()}
+        return step, _unflatten(flat, spec)
+
+    # -- retention ---------------------------------------------------------------
+
+    def _gc(self):
+        steps = self.steps()
+        protected: set[int] = set(steps[-self.keep:]) if self.keep else set()
+        if self.keep_best and self._scores:
+            best = sorted(self._scores, key=self._scores.get)
+            protected.update(best[:self.keep_best])
+        for s in steps:
+            if s not in protected:
+                shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def _load_scores(self):
+        f = self.dir / "scores.json"
+        if f.exists():
+            return {int(k): v for k, v in json.loads(f.read_text()).items()}
+        return {}
+
+    def _save_scores(self):
+        (self.dir / "scores.json").write_text(json.dumps(self._scores))

@@ -1,0 +1,33 @@
+"""Elastic restart: restore a checkpoint onto a *different* mesh.
+
+The paper's fault-tolerance story (§4.3) assumes non-dedicated resources —
+a restarted job may come back with fewer or more machines. Arrays are saved
+as host/global numpy; on restore they are device_put against whatever
+shardings the NEW mesh produces from the same logical specs, so DP/TP
+degrees can change between runs. Re-sharding = replacement placement.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+
+def restore_for_mesh(mgr: CheckpointManager, spec, shardings,
+                     step: int | None = None):
+    """Restore a pytree and place it with the given shardings tree."""
+    step, host = mgr.restore(spec, step)
+
+    def put(x, sh):
+        return jax.device_put(x, sh)
+
+    placed = jax.tree.map(put, host, shardings)
+    return step, placed
+
+
+def save_global(mgr: CheckpointManager, step: int, state, metric=None):
+    """Gather device arrays to host (fully addressable single-process) and
+    save. On multi-host this would be a per-shard write + manifest merge."""
+    host = jax.tree.map(lambda x: jax.device_get(x), state)
+    mgr.save(step, host, metric=metric)

@@ -1,0 +1,42 @@
+"""In-process cluster: named tasks with their own state stores (paper §3.3).
+
+A real deployment maps tasks to processes connected by gRPC/RDMA; here they
+are thread domains sharing a Rendezvous — the transport is swappable without
+touching the execution model (§5 lists multiple Send/Recv specializations).
+Task naming follows the paper's "/job:ps/task:0" scheme, shortened "ps:0".
+"""
+
+from __future__ import annotations
+
+from repro.core.partition import Rendezvous
+from repro.core.queues import QueueStore
+from repro.core.variables import VariableStore
+
+
+class Task:
+    def __init__(self, name: str):
+        self.name = name
+        self.var_store = VariableStore()
+        self.queue_store = QueueStore()
+
+    def __repr__(self):
+        return f"<Task {self.name}>"
+
+
+class Cluster:
+    """A set of tasks, e.g. Cluster(ps=2, worker=4)."""
+
+    def __init__(self, **jobs: int):
+        self.tasks: dict[str, Task] = {}
+        for job, n in jobs.items():
+            for i in range(n):
+                name = f"{job}:{i}"
+                self.tasks[name] = Task(name)
+        self.rendezvous = Rendezvous()
+
+    @property
+    def devices(self) -> list[str]:
+        return list(self.tasks)
+
+    def job(self, job: str) -> list[str]:
+        return [d for d in self.tasks if d.startswith(job + ":")]

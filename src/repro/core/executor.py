@@ -1,0 +1,116 @@
+"""Dataflow executor (paper §3.2, §5).
+
+Prunes the graph to the subgraph needed by the fetches (dead-code
+elimination via reverse BFS from fetches, stopping at feeds), then runs each
+device's op list in topological order inside that device's task thread.
+Blocking ops (Dequeue, Recv, barrier queues) simply block their step thread,
+which is how concurrent steps coordinate through shared state.
+
+Dead-tensor propagation (§3.4): a non-Merge op with any DEAD input skips
+execution and emits DEAD on all outputs; Merge forwards its first live
+input. This is what makes Switch/Merge conditionals work.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graph import Graph, Operation, Tensor
+from repro.core.graph import get_opdef
+from repro.core.ops import DEAD
+
+
+@dataclass
+class ExecContext:
+    task: object            # owning Task (var_store, queue_store)
+    rendezvous: object
+    step_id: int
+
+
+def prune(graph: Graph, fetches: list[Tensor],
+          feeds: dict[Tensor, object],
+          extra_roots: list[Operation] = ()) -> list[Operation]:
+    """Reverse BFS from fetches (+explicit roots), stopping at fed tensors."""
+    fed = {t.name for t in feeds}
+    seen: set[str] = set()
+    stack = [t.op for t in fetches] + list(extra_roots)
+    ops: list[Operation] = []
+    while stack:
+        op = stack.pop()
+        if op.name in seen:
+            continue
+        seen.add(op.name)
+        ops.append(op)
+        for t in op.inputs:
+            if t.name not in fed:
+                stack.append(t.op)
+        stack.extend(op.control_inputs)
+    return ops
+
+
+class DeviceExecutor:
+    """Executes one device's topo-ordered op list for one step."""
+
+    def __init__(self, task):
+        self.task = task
+
+    def run(self, ops: list[Operation], feeds: dict[str, object],
+            ctx: ExecContext, values: dict[str, object]):
+        for op in ops:
+            if all(t.name in values or t.name in feeds
+                   for t in op.inputs):
+                pass
+            args = []
+            dead = False
+            for t in op.inputs:
+                v = feeds.get(t.name, values.get(t.name))
+                if v is DEAD and op.type != "Merge":
+                    dead = True
+                args.append(v)
+            if dead:
+                for out in op.outputs:
+                    values[out.name] = DEAD
+                continue
+            opdef = get_opdef(op.type)
+            outs = opdef.compute(ctx, dict(op.attrs), *args)
+            for out, v in zip(op.outputs, outs):
+                values[out.name] = v
+        return values
+
+
+def run_plan(plan, tasks: dict[str, object], rendezvous, step_id: int,
+             feeds: dict[str, object], fetch_names: list[str],
+             timeout: float = 60.0):
+    """Run a partitioned Plan: one thread per participating device (§3.3:
+    'a distributed step ... one small message to each participating task')."""
+    results: dict[str, dict] = {}
+    errors: list[BaseException] = []
+
+    def run_device(device, dplan):
+        task = tasks[device]
+        ctx = ExecContext(task=task, rendezvous=rendezvous, step_id=step_id)
+        try:
+            values: dict[str, object] = {}
+            DeviceExecutor(task).run(dplan.ops, feeds, ctx, values)
+            results[device] = values
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = []
+    for device, dplan in plan.per_device.items():
+        th = threading.Thread(target=run_device, args=(device, dplan),
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join(timeout)
+    if errors:
+        raise errors[0]
+    out = []
+    for name in fetch_names:
+        device, local = plan.fetch_map[name]
+        out.append(results[device][local])
+    return out

@@ -1,0 +1,190 @@
+"""The dataflow graph (paper §3.1): operations, tensors, mutable state.
+
+A ``Graph`` holds ``Operation`` vertices; each edge carries a ``Tensor``
+(dense n-d array at runtime). Operations may own *mutable state* (variables,
+queues) — the paper's key departure from batch dataflow: state lives at a
+vertex, is read/written by executing ops, and is shared between concurrent
+step executions of overlapping subgraphs (§3.2).
+
+Ops are created through the registry in ``core.ops``; gradients (§4.1) are
+user-level graph-to-graph construction in ``core.gradients``; placement and
+partitioning (§3.3) in ``core.placement`` / ``core.partition``.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+
+class Tensor:
+    """A symbolic output slot of an operation."""
+
+    __slots__ = ("op", "index")
+
+    def __init__(self, op: "Operation", index: int):
+        self.op = op
+        self.index = index
+
+    @property
+    def name(self) -> str:
+        return f"{self.op.name}:{self.index}"
+
+    def __repr__(self):
+        return f"<Tensor {self.name} ({self.op.type})>"
+
+    # small sugar so user-level code (optimizers §4.1) reads naturally
+    def __add__(self, other):
+        return self.op.graph.apply("Add", self, _lift(self.op.graph, other))
+
+    def __sub__(self, other):
+        return self.op.graph.apply("Sub", self, _lift(self.op.graph, other))
+
+    def __mul__(self, other):
+        return self.op.graph.apply("Mul", self, _lift(self.op.graph, other))
+
+    def __neg__(self):
+        return self.op.graph.apply("Neg", self)
+
+    def __matmul__(self, other):
+        return self.op.graph.apply("MatMul", self,
+                                   _lift(self.op.graph, other))
+
+
+def _lift(graph: "Graph", value) -> Tensor:
+    if isinstance(value, Tensor):
+        return value
+    return graph.constant(value)
+
+
+class Operation:
+    """A vertex: a named, typed unit of computation with attrs (§3.1)."""
+
+    def __init__(self, graph: "Graph", op_type: str, name: str,
+                 inputs: Sequence[Tensor], attrs: dict,
+                 num_outputs: int, control_inputs: Sequence["Operation"] = (),
+                 device: str | None = None):
+        self.graph = graph
+        self.type = op_type
+        self.name = name
+        self.inputs = list(inputs)
+        self.attrs = dict(attrs)
+        self.control_inputs = list(control_inputs)
+        self.device = device                  # constraint, e.g. "task:ps0"
+        self.colocation: str | None = attrs.pop("_colocate", None)
+        self.outputs = [Tensor(self, i) for i in range(num_outputs)]
+        self.assigned_device: str | None = None   # set by placement
+
+    def output(self, i: int = 0) -> Tensor:
+        return self.outputs[i]
+
+    def __repr__(self):
+        return f"<Op {self.name} ({self.type}) on {self.assigned_device}>"
+
+
+@dataclass
+class OpDef:
+    """Registered operation type: runtime kernel + optional gradient."""
+    name: str
+    num_outputs: int
+    # compute(ctx, attrs, *input values) -> tuple of outputs
+    compute: Callable
+    # grad(op, *output grads) -> list of input grads (Tensors or None)
+    grad: Callable | None = None
+    stateful: bool = False
+    # number of outputs may depend on attrs:
+    num_outputs_fn: Callable | None = None
+
+
+_REGISTRY: dict[str, OpDef] = {}
+
+
+def register(opdef: OpDef):
+    _REGISTRY[opdef.name] = opdef
+    return opdef
+
+
+def get_opdef(op_type: str) -> OpDef:
+    if op_type not in _REGISTRY:
+        raise KeyError(f"unregistered op type {op_type!r}")
+    return _REGISTRY[op_type]
+
+
+class Graph:
+    """A single dataflow graph for all computation and state (§3)."""
+
+    def __init__(self):
+        self.ops: dict[str, Operation] = {}
+        self._counter = itertools.count()
+        self._lock = threading.Lock()
+        self._device_stack: list[str] = []
+
+    # -- construction -------------------------------------------------------
+
+    def apply(self, op_type: str, *inputs, name: str | None = None,
+              control_inputs: Sequence[Operation] = (),
+              **attrs):
+        opdef = get_opdef(op_type)
+        inputs = [_lift(self, x) for x in inputs]
+        with self._lock:
+            if name is None:
+                name = f"{op_type}_{next(self._counter)}"
+            if name in self.ops:
+                raise ValueError(f"duplicate op name {name}")
+            n_out = (opdef.num_outputs_fn(attrs) if opdef.num_outputs_fn
+                     else opdef.num_outputs)
+            device = attrs.pop("device", None) or (
+                self._device_stack[-1] if self._device_stack else None)
+            op = Operation(self, op_type, name, inputs, attrs, n_out,
+                           control_inputs, device)
+            self.ops[name] = op
+        if len(op.outputs) == 1:
+            return op.outputs[0]
+        return tuple(op.outputs) if op.outputs else op
+
+    def constant(self, value, name: str | None = None):
+        import numpy as np
+        return self.apply("Const", value=np.asarray(value), name=name)
+
+    def placeholder(self, name: str | None = None, shape=None, dtype=None):
+        return self.apply("Placeholder", shape=shape, dtype=dtype, name=name)
+
+    def device(self, device: str):
+        """Context manager applying a device constraint (§3.3)."""
+        graph = self
+
+        class _Ctx:
+            def __enter__(self):
+                graph._device_stack.append(device)
+
+            def __exit__(self, *a):
+                graph._device_stack.pop()
+
+        return _Ctx()
+
+    # -- traversal ----------------------------------------------------------
+
+    def op_of(self, t: Tensor | Operation) -> Operation:
+        return t.op if isinstance(t, Tensor) else t
+
+    def topo_order(self, ops: set[Operation]) -> list[Operation]:
+        seen: set[str] = set()
+        order: list[Operation] = []
+
+        def visit(op: Operation):
+            if op.name in seen:
+                return
+            seen.add(op.name)
+            for t in op.inputs:
+                if t.op in ops:
+                    visit(t.op)
+            for c in op.control_inputs:
+                if c in ops:
+                    visit(c)
+            order.append(op)
+
+        for op in sorted(ops, key=lambda o: o.name):
+            visit(op)
+        return order

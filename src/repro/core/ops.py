@@ -1,0 +1,378 @@
+"""Standard operation library (paper §5: "over 200 standard operations").
+
+Kernels are numpy functions dispatched by the executor; gradients build new
+graph nodes (user-level autodiff, §4.1). The subset here covers everything
+the paper's case studies need: math, array manipulation, state (variables,
+queues via core.variables/core.queues), sparse embedding primitives
+(Gather / DynamicPartition / DynamicStitch, §4.2), control flow (Switch /
+Merge, §3.4) and checkpointing (Save / Restore, §4.3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import Graph, OpDef, Operation, Tensor, register
+
+# A sentinel flowing along untaken conditional branches (§3.4).
+
+
+class Dead:
+    _inst = None
+
+    def __new__(cls):
+        if cls._inst is None:
+            cls._inst = super().__new__(cls)
+        return cls._inst
+
+    def __repr__(self):
+        return "<dead>"
+
+
+DEAD = Dead()
+
+
+def g(t: Tensor) -> Graph:
+    return t.op.graph
+
+
+# ---------------------------------------------------------------------------
+# basic ops
+# ---------------------------------------------------------------------------
+
+register(OpDef("Const", 1, lambda ctx, attrs: (attrs["value"],)))
+register(OpDef("Placeholder", 1,
+               lambda ctx, attrs: (_ for _ in ()).throw(
+                   RuntimeError("placeholder must be fed"))))
+register(OpDef("NoOp", 0, lambda ctx, attrs: ()))
+register(OpDef("Identity", 1, lambda ctx, attrs, x: (x,),
+               grad=lambda op, dy: [dy]))
+
+
+def _binop(name, fn, grad):
+    register(OpDef(name, 1, lambda ctx, attrs, a, b: (fn(a, b),), grad=grad))
+
+
+_binop("Add", lambda a, b: a + b,
+       lambda op, dy: [_unbroadcast(dy, op.inputs[0]),
+                       _unbroadcast(dy, op.inputs[1])])
+_binop("Sub", lambda a, b: a - b,
+       lambda op, dy: [_unbroadcast(dy, op.inputs[0]),
+                       _unbroadcast(-dy, op.inputs[1])])
+_binop("Mul", lambda a, b: a * b,
+       lambda op, dy: [_unbroadcast(dy * op.inputs[1], op.inputs[0]),
+                       _unbroadcast(dy * op.inputs[0], op.inputs[1])])
+_binop("Div", lambda a, b: a / b,
+       lambda op, dy: [
+           _unbroadcast(dy * g(dy).apply("Reciprocal", op.inputs[1]),
+                        op.inputs[0]),
+           _unbroadcast(
+               -dy * op.inputs[0]
+               * g(dy).apply("Reciprocal",
+                             op.inputs[1] * op.inputs[1]), op.inputs[1])])
+_binop("Maximum", np.maximum, None)
+_binop("Pow", np.power, None)
+_binop("FloorDiv", lambda a, b: a // b, None)
+_binop("Mod", lambda a, b: a % b, None)
+_binop("Less", lambda a, b: a < b, None)
+_binop("Greater", lambda a, b: a > b, None)
+_binop("Equal", lambda a, b: a == b, None)
+
+
+def _unbroadcast(dy: Tensor, x: Tensor) -> Tensor:
+    """Sum dy down to x's shape (runtime-shaped via UnbroadcastTo kernel)."""
+    return g(dy).apply("UnbroadcastLike", dy, x)
+
+
+def _unbroadcast_kernel(ctx, attrs, dy, x):
+    dy = np.asarray(dy)
+    x = np.asarray(x)
+    if dy.shape == x.shape:
+        return (dy,)
+    extra = dy.ndim - x.ndim
+    if extra > 0:
+        dy = dy.sum(axis=tuple(range(extra)))
+    axes = tuple(i for i, (a, b) in enumerate(zip(dy.shape, x.shape))
+                 if b == 1 and a != 1)
+    if axes:
+        dy = dy.sum(axis=axes, keepdims=True)
+    return (dy.reshape(x.shape),)
+
+
+register(OpDef("UnbroadcastLike", 1, _unbroadcast_kernel))
+
+register(OpDef("Neg", 1, lambda ctx, attrs, x: (-x,),
+               grad=lambda op, dy: [-dy]))
+register(OpDef("Reciprocal", 1, lambda ctx, attrs, x: (1.0 / x,)))
+register(OpDef("Exp", 1, lambda ctx, attrs, x: (np.exp(x),),
+               grad=lambda op, dy: [dy * op.outputs[0]]))
+register(OpDef("Log", 1, lambda ctx, attrs, x: (np.log(x),),
+               grad=lambda op, dy: [
+                   dy * g(dy).apply("Reciprocal", op.inputs[0])]))
+register(OpDef("Tanh", 1, lambda ctx, attrs, x: (np.tanh(x),),
+               grad=lambda op, dy: [
+                   dy * (g(dy).constant(1.0)
+                         - op.outputs[0] * op.outputs[0])]))
+register(OpDef("Sigmoid", 1,
+               lambda ctx, attrs, x: (1.0 / (1.0 + np.exp(-x)),),
+               grad=lambda op, dy: [
+                   dy * op.outputs[0] * (g(dy).constant(1.0)
+                                         - op.outputs[0])]))
+register(OpDef("Relu", 1, lambda ctx, attrs, x: (np.maximum(x, 0.0),),
+               grad=lambda op, dy: [
+                   g(dy).apply("ReluGrad", dy, op.inputs[0])]))
+register(OpDef("ReluGrad", 1,
+               lambda ctx, attrs, dy, x: (dy * (x > 0),)))
+register(OpDef("Sqrt", 1, lambda ctx, attrs, x: (np.sqrt(x),)))
+register(OpDef("Square", 1, lambda ctx, attrs, x: (np.square(x),),
+               grad=lambda op, dy: [dy * op.inputs[0]
+                                    * g(dy).constant(2.0)]))
+
+
+def _matmul_grad(op, dy):
+    a, b = op.inputs
+    gr = g(dy)
+    da = gr.apply("MatMul", dy, gr.apply("Transpose", b))
+    db = gr.apply("MatMul", gr.apply("Transpose", a), dy)
+    return [da, db]
+
+
+register(OpDef("MatMul", 1, lambda ctx, attrs, a, b: (a @ b,),
+               grad=_matmul_grad))
+register(OpDef("Transpose", 1,
+               lambda ctx, attrs, x: (np.swapaxes(x, -1, -2),),
+               grad=lambda op, dy: [g(dy).apply("Transpose", dy)]))
+register(OpDef("Reshape", 1,
+               lambda ctx, attrs, x: (np.reshape(x, attrs["shape"]),),
+               grad=lambda op, dy: [
+                   g(dy).apply("ReshapeLike", dy, op.inputs[0])]))
+register(OpDef("ReshapeLike", 1,
+               lambda ctx, attrs, x, like: (np.reshape(x, np.shape(like)),)))
+
+
+def _reduce(name, fn, grad):
+    register(OpDef(
+        name, 1,
+        lambda ctx, attrs, x: (fn(x, axis=attrs.get("axis"),
+                                  keepdims=attrs.get("keepdims", False)),),
+        grad=grad))
+
+
+def _sum_grad(op, dy):
+    return [g(dy).apply("BroadcastLike", dy, op.inputs[0],
+                        axis=op.attrs.get("axis"),
+                        keepdims=op.attrs.get("keepdims", False))]
+
+
+def _mean_grad(op, dy):
+    gr = g(dy)
+    bl = gr.apply("BroadcastLike", dy, op.inputs[0],
+                  axis=op.attrs.get("axis"),
+                  keepdims=op.attrs.get("keepdims", False))
+    return [gr.apply("MeanScale", bl, op.inputs[0],
+                     axis=op.attrs.get("axis"))]
+
+
+_reduce("ReduceSum", np.sum, _sum_grad)
+_reduce("ReduceMean", np.mean, _mean_grad)
+_reduce("ReduceMax", np.max, None)
+
+
+def _broadcast_like(ctx, attrs, dy, x):
+    x = np.asarray(x)
+    dy = np.asarray(dy)
+    axis = attrs.get("axis")
+    if not attrs.get("keepdims", False) and axis is not None:
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        for ax in sorted(a % x.ndim for a in axes):
+            dy = np.expand_dims(dy, ax)
+    return (np.broadcast_to(dy, x.shape),)
+
+
+register(OpDef("BroadcastLike", 1, _broadcast_like))
+register(OpDef("MeanScale", 1,
+               lambda ctx, attrs, bl, x: (
+                   bl * _mean_count(np.asarray(x), attrs.get("axis")),)))
+
+
+def _mean_count(x, axis):
+    if axis is None:
+        return 1.0 / x.size
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    n = 1
+    for a in axes:
+        n *= x.shape[a % x.ndim]
+    return 1.0 / n
+
+
+def _addn(ctx, attrs, *xs):
+    out = xs[0]
+    for x in xs[1:]:
+        out = out + x
+    return (out,)
+
+
+register(OpDef("AddN", 1, _addn,
+               grad=lambda op, dy: [dy for _ in op.inputs]))
+
+register(OpDef("Softmax", 1, lambda ctx, attrs, x: (_softmax(x),)))
+
+
+def _softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def _xent(ctx, attrs, logits, labels):
+    p = _softmax(logits)
+    n = logits.shape[0]
+    ll = -np.log(np.maximum(p[np.arange(n), labels], 1e-30))
+    return (ll.mean(),)
+
+
+def _xent_grad(op, dy):
+    return [g(dy).apply("SoftmaxXentGrad", dy, op.inputs[0], op.inputs[1]),
+            None]
+
+
+def _xent_grad_kernel(ctx, attrs, dy, logits, labels):
+    p = _softmax(logits)
+    n = logits.shape[0]
+    p[np.arange(n), labels] -= 1.0
+    return (dy * p / n,)
+
+
+register(OpDef("SoftmaxXent", 1, _xent, grad=_xent_grad))
+register(OpDef("SoftmaxXentGrad", 1, _xent_grad_kernel))
+
+
+# ---------------------------------------------------------------------------
+# sparse embedding primitives (§4.2): Gather / DynamicPartition / Stitch
+# ---------------------------------------------------------------------------
+
+
+def _gather_grad(op, dy):
+    gr = g(dy)
+    # sparse gradient: scatter dy rows back at the gathered indices
+    return [gr.apply("ScatterAddGrad", dy, op.inputs[0], op.inputs[1]),
+            None]
+
+
+register(OpDef("Gather", 1,
+               lambda ctx, attrs, params, ids: (params[ids],),
+               grad=_gather_grad))
+
+
+def _scatter_add_grad(ctx, attrs, dy, params, ids):
+    out = np.zeros_like(params)
+    np.add.at(out, ids, dy)
+    return (out,)
+
+
+register(OpDef("ScatterAddGrad", 1, _scatter_add_grad))
+
+
+def _dynamic_partition(ctx, attrs, data, partitions):
+    n = attrs["num_partitions"]
+    return tuple(data[partitions == i] for i in range(n))
+
+
+def _dynamic_partition_grad(op, *dys):
+    gr = op.graph
+    n = op.attrs["num_partitions"]
+    idx = gr.apply("DynamicPartitionIndices", op.inputs[1],
+                   num_partitions=n)
+    idx = idx if isinstance(idx, tuple) else (idx,)
+    stitched = gr.apply("DynamicStitch", *idx, *dys, n=n)
+    return [stitched, None]
+
+
+register(OpDef("DynamicPartition", None, _dynamic_partition,
+               grad=_dynamic_partition_grad,
+               num_outputs_fn=lambda attrs: attrs["num_partitions"]))
+
+
+def _dp_indices(ctx, attrs, partitions):
+    n = attrs["num_partitions"]
+    idx = np.arange(len(partitions))
+    return tuple(idx[partitions == i] for i in range(n))
+
+
+register(OpDef("DynamicPartitionIndices", None, _dp_indices,
+               num_outputs_fn=lambda attrs: attrs["num_partitions"]))
+
+
+def _dynamic_stitch(ctx, attrs, *args):
+    n = attrs["n"]
+    indices, data = args[:n], args[n:]
+    total = int(sum(len(i) for i in indices))
+    sample = next((d for d in data if len(d)), data[0])
+    out = np.zeros((total,) + np.shape(sample)[1:], dtype=sample.dtype)
+    for i, d in zip(indices, data):
+        out[i] = d
+    return (out,)
+
+
+def _dynamic_stitch_grad(op, dy):
+    gr = g(dy)
+    n = op.attrs["n"]
+    grads = [None] * n
+    for i in range(n):
+        grads.append(gr.apply("Gather", dy, op.inputs[i]))
+    return grads
+
+
+register(OpDef("DynamicStitch", 1, _dynamic_stitch,
+               grad=_dynamic_stitch_grad))
+
+
+def _concat_kernel(ctx, attrs, *xs):
+    return (np.concatenate(xs, axis=attrs.get("axis", -1)),)
+
+
+def _concat_grad(op, dy):
+    gr = g(dy)
+    outs = gr.apply("ConcatGrad", dy, *op.inputs,
+                    axis=op.attrs.get("axis", -1), n=len(op.inputs))
+    outs = outs if isinstance(outs, tuple) else (outs,)
+    return list(outs)
+
+
+def _concat_grad_kernel(ctx, attrs, dy, *xs):
+    axis = attrs.get("axis", -1)
+    out, off = [], 0
+    for x in xs:
+        w = np.shape(x)[axis]
+        sl = [slice(None)] * np.ndim(dy)
+        sl[axis] = slice(off, off + w)
+        out.append(np.ascontiguousarray(dy[tuple(sl)]))
+        off += w
+    return tuple(out)
+
+
+register(OpDef("ConcatGrad", None, _concat_grad_kernel,
+               num_outputs_fn=lambda attrs: attrs["n"]))
+register(OpDef("Concat", 1, _concat_kernel, grad=_concat_grad))
+
+
+# ---------------------------------------------------------------------------
+# control flow (§3.4): Switch / Merge with dead propagation
+# ---------------------------------------------------------------------------
+
+
+def _switch(ctx, attrs, data, pred):
+    if bool(pred):
+        return (DEAD, data)
+    return (data, DEAD)
+
+
+def _merge(ctx, attrs, *xs):
+    live = [x for x in xs if x is not DEAD]
+    if not live:
+        return (DEAD, DEAD)
+    return (live[0], np.asarray(len(live)))
+
+
+register(OpDef("Switch", 2, _switch))
+register(OpDef("Merge", 2, _merge))

@@ -1,0 +1,106 @@
+"""Graph partitioning with Send/Recv (paper §3.3).
+
+After placement, the pruned subgraph splits into per-device op lists; every
+edge crossing devices is cut and replaced by a Send on the producer and a
+Recv on the consumer, matched through a *rendezvous key*
+``(tensor_name, step_id)``. Send fires as soon as its input is ready; Recv
+blocks until the value arrives — the executor threads give the asynchrony.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.graph import OpDef, Operation, Tensor, register
+
+
+class Rendezvous:
+    """In-process rendezvous: blocking key-value exchange between tasks."""
+
+    def __init__(self):
+        self._store: dict = {}
+        self._cv = threading.Condition()
+
+    def send(self, key, value):
+        with self._cv:
+            self._store[key] = value
+            self._cv.notify_all()
+
+    def recv(self, key, timeout=30.0):
+        with self._cv:
+            ok = self._cv.wait_for(lambda: key in self._store,
+                                   timeout=timeout)
+            if not ok:
+                raise TimeoutError(f"rendezvous recv timed out: {key}")
+            return self._store.pop(key)
+
+
+def _send(ctx, attrs, value):
+    ctx.rendezvous.send((attrs["key"], ctx.step_id), value)
+    return ()
+
+
+def _recv(ctx, attrs):
+    return (ctx.rendezvous.recv((attrs["key"], ctx.step_id)),)
+
+
+register(OpDef("Send", 0, _send, stateful=True))
+register(OpDef("Recv", 1, _recv, stateful=True))
+
+
+@dataclass
+class DevicePlan:
+    device: str
+    ops: list[Operation] = field(default_factory=list)
+
+
+@dataclass
+class Plan:
+    """A placed, partitioned, cached execution plan (§3.3 'step cache')."""
+    per_device: dict[str, DevicePlan]
+    fetch_map: dict[str, tuple[str, str]]   # fetch name -> (device, local)
+
+
+def partition(graph, ops: list[Operation], fetches: list[Tensor]) -> Plan:
+    per_device: dict[str, DevicePlan] = {}
+    opset = set(ops)
+
+    def plan_for(device: str) -> DevicePlan:
+        if device not in per_device:
+            per_device[device] = DevicePlan(device)
+        return per_device[device]
+
+    recv_cache: dict[tuple[str, str], Tensor] = {}
+
+    for op in graph.topo_order(opset):
+        dev = op.assigned_device
+        new_inputs = []
+        for t in op.inputs:
+            src = t.op.assigned_device
+            if src == dev or t.op not in opset:
+                new_inputs.append(t)
+                continue
+            ck = (t.name, dev)
+            if ck not in recv_cache:
+                key = f"{t.name}->{dev}"
+                send = graph.apply("Send", t, key=key,
+                                   name=f"send/{key}".replace(":", "_"))
+                send_op = send if isinstance(send, Operation) else send.op
+                send_op.assigned_device = src
+                plan_for(src).ops.append(send_op)
+                recv = graph.apply("Recv", key=key,
+                                   name=f"recv/{key}".replace(":", "_"))
+                recv.op.assigned_device = dev
+                plan_for(dev).ops.append(recv.op)
+                recv_cache[ck] = recv
+            new_inputs.append(recv_cache[ck])
+        op.inputs = new_inputs
+        plan_for(dev).ops.append(op)
+
+    fetch_map = {}
+    for t in fetches:
+        fetch_map[t.name] = (t.op.assigned_device, t.name)
+    return Plan(per_device, fetch_map)

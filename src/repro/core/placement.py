@@ -1,0 +1,84 @@
+"""Device placement (paper §3.3).
+
+The algorithm mirrors the paper: compute a feasible device set per op from
+explicit constraints ("ps:0"), partial constraints ("ps:*" = any PS task),
+then compute colocation groups — stateful ops and the ops that consume
+their reference handles must share a device — and pick a device per group.
+Variables with partial "ps:*" constraints round-robin across PS tasks,
+which is exactly how the client-side constructs of §3.3 spread parameters.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+from repro.core.graph import Graph, Operation
+
+HANDLE_PRODUCERS = {"Variable", "FIFOQueue"}
+HANDLE_CONSUMERS = {"Read", "Assign", "AssignAdd", "AssignSub",
+                    "ScatterAdd", "ScatterSub", "Enqueue", "Dequeue",
+                    "DequeueMany", "QueueClose", "QueueSize", "Save"}
+
+
+def _roots(parent, x):
+    while parent[x] != x:
+        parent[x] = parent[parent[x]]
+        x = parent[x]
+    return x
+
+
+def place(ops: list[Operation], devices: list[str],
+          default_device: str | None = None) -> None:
+    """Assign ``op.assigned_device`` for every op (in place)."""
+    default_device = default_device or devices[0]
+    parent = {op.name: op.name for op in ops}
+    by_name = {op.name: op for op in ops}
+
+    def union(a: str, b: str):
+        ra, rb = _roots(parent, a), _roots(parent, b)
+        if ra != rb:
+            parent[rb] = ra
+
+    # colocation: handle consumers join their handle producer's group
+    for op in ops:
+        if op.type in HANDLE_CONSUMERS:
+            for t in op.inputs:
+                if t.op.type in HANDLE_PRODUCERS and t.op.name in parent:
+                    union(t.op.name, op.name)
+        if op.colocation and op.colocation in parent:
+            union(op.colocation, op.name)
+
+    # feasible sets per group = intersection of member constraints
+    groups: dict[str, list[Operation]] = {}
+    for op in ops:
+        groups.setdefault(_roots(parent, op.name), []).append(op)
+
+    rr: dict[str, itertools.cycle] = {}
+    for root, members in sorted(groups.items()):
+        feasible = list(devices)
+        partial = None
+        for op in members:
+            c = op.device
+            if not c:
+                continue
+            if c.endswith(":*"):
+                job = c[:-2]
+                feasible = [d for d in feasible if d.startswith(job + ":")]
+                partial = job
+            else:
+                feasible = [d for d in feasible if d == c]
+        if not feasible:
+            raise ValueError(
+                f"unsatisfiable placement for group {root}: "
+                f"{[op.name for op in members]}")
+        if partial and len(feasible) > 1:
+            # round-robin variables across the job's tasks (§3.3 / §4.2)
+            cyc = rr.setdefault(partial, itertools.cycle(feasible))
+            device = next(cyc)
+        elif default_device in feasible and not partial:
+            device = default_device if len(feasible) == len(devices) \
+                else feasible[0]
+        else:
+            device = feasible[0]
+        for op in members:
+            op.assigned_device = device

@@ -1,0 +1,133 @@
+"""Stateful operations: variables (paper §3.1) and checkpoint ops (§4.3).
+
+A ``Variable`` op owns a mutable buffer and emits a *reference handle*; Read
+/ Assign / AssignAdd / AssignSub / ScatterAdd / ScatterSub consume the
+handle and act on the buffer in place. Buffers live in the ``VariableStore``
+of whatever task the Variable was *placed* on — placing a Variable on
+"task:ps0" is what makes ps0 a parameter server (§3: the PS architecture is
+a placement decision, not privileged code).
+
+Save / Restore (§4.3) are ordinary ops too: one Save per task writes every
+connected variable in one file (maximizing I/O bandwidth, per the paper);
+Restore + Assign re-materialize state. Consistency is the client's choice.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.core.graph import OpDef, register
+
+
+class VarHandle:
+    """Typed capability for a variable's buffer (paper's 'reference')."""
+
+    __slots__ = ("name", "store")
+
+    def __init__(self, name: str, store: "VariableStore"):
+        self.name = name
+        self.store = store
+
+    def __repr__(self):
+        return f"<VarHandle {self.name}>"
+
+
+class VariableStore:
+    """Per-task mutable state; thread-safe for concurrent steps (§3.2)."""
+
+    def __init__(self):
+        self._buffers: dict[str, np.ndarray] = {}
+        self._locks: dict[str, threading.Lock] = {}
+        self._global_lock = threading.Lock()
+
+    def ensure(self, name: str, initial) -> None:
+        with self._global_lock:
+            if name not in self._buffers:
+                self._buffers[name] = np.array(initial, dtype=np.float32) \
+                    if initial is not None else None
+                self._locks[name] = threading.Lock()
+
+    def read(self, name: str) -> np.ndarray:
+        return self._buffers[name].copy()
+
+    def assign(self, name: str, value) -> None:
+        with self._locks[name]:
+            self._buffers[name] = np.asarray(value)
+
+    def update(self, name: str, fn) -> np.ndarray:
+        with self._locks[name]:
+            self._buffers[name] = fn(self._buffers[name])
+            return self._buffers[name]
+
+    def names(self):
+        return list(self._buffers)
+
+
+def _variable(ctx, attrs):
+    name = attrs["var_name"]
+    ctx.task.var_store.ensure(name, attrs.get("initial"))
+    return (VarHandle(name, ctx.task.var_store),)
+
+
+def _read(ctx, attrs, handle):
+    return (handle.store.read(handle.name),)
+
+
+def _assign(ctx, attrs, handle, value):
+    handle.store.assign(handle.name, value)
+    return (np.asarray(value),)
+
+
+def _assign_add(ctx, attrs, handle, value):
+    return (handle.store.update(handle.name, lambda b: b + value),)
+
+
+def _assign_sub(ctx, attrs, handle, value):
+    return (handle.store.update(handle.name, lambda b: b - value),)
+
+
+def _scatter_add(ctx, attrs, handle, ids, rows):
+    def fn(b):
+        np.add.at(b, np.asarray(ids), rows)
+        return b
+    return (handle.store.update(handle.name, fn),)
+
+
+def _scatter_sub(ctx, attrs, handle, ids, rows):
+    def fn(b):
+        np.subtract.at(b, np.asarray(ids), rows)
+        return b
+    return (handle.store.update(handle.name, fn),)
+
+
+register(OpDef("Variable", 1, _variable, stateful=True))
+register(OpDef("Read", 1, _read, stateful=True))
+register(OpDef("Assign", 1, _assign, stateful=True))
+register(OpDef("AssignAdd", 1, _assign_add, stateful=True))
+register(OpDef("AssignSub", 1, _assign_sub, stateful=True))
+register(OpDef("ScatterAdd", 1, _scatter_add, stateful=True))
+register(OpDef("ScatterSub", 1, _scatter_sub, stateful=True))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing ops (§4.3)
+# ---------------------------------------------------------------------------
+
+
+def _save(ctx, attrs, *handles):
+    path = attrs["path"]
+    arrays = {h.name: h.store.read(h.name) for h in handles}
+    np.savez(path, **arrays)
+    return ()
+
+
+def _restore(ctx, attrs):
+    data = np.load(attrs["path"] + ".npz" if not str(attrs["path"]).endswith(
+        ".npz") else attrs["path"])
+    return (data[attrs["tensor_name"]],)
+
+
+register(OpDef("Save", 0, _save, stateful=True))
+register(OpDef("Restore", 1, _restore, stateful=True))

@@ -1,0 +1,88 @@
+"""Public kernel entry points with backend dispatch.
+
+Each op has three implementations:
+  1. a Pallas TPU kernel (``repro.kernels.<name>``) — the production hot path,
+     validated on CPU via ``interpret=True``;
+  2. a scalable pure-XLA path (chunked/streaming jnp) used on CPU and for the
+     dry-run lowering;
+  3. a naive oracle in ``repro.kernels.ref`` used only by tests.
+
+Dispatch: Pallas on TPU backends (or when ``REPRO_FORCE_PALLAS=interpret`` is
+set, for kernel validation), XLA path otherwise.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def _use_pallas() -> str | None:
+    """Returns None (XLA path), "compiled", or "interpret"."""
+    force = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if force == "interpret":
+        return "interpret"
+    if force == "off":
+        return None
+    if jax.default_backend() == "tpu":
+        return "compiled"
+    return None
+
+
+# XLA-path dispatch: dense attention keeps a single bf16 (Sq,Skv) block per
+# head and is the right trade under layer remat up to this many kv positions;
+# beyond it the streaming chunked form bounds memory at O(chunk).
+DENSE_ATTN_MAX_KV = 8192
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    scale=None, chunk_kv=1024, q_offset=0):
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, cap=cap, scale=scale,
+            q_offset=q_offset, interpret=(mode == "interpret"))
+    from repro.models.attention import (block_causal_attention,
+                                        chunked_attention, dense_attention)
+    if k.shape[1] <= DENSE_ATTN_MAX_KV:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               cap=cap, scale=scale, q_offset=q_offset)
+    if causal and q_offset == 0 and q.shape[1] == k.shape[1]:
+        # static triangular block skipping: ~2x fewer attention flops
+        return block_causal_attention(q, k, v, window=window, cap=cap,
+                                      scale=scale, chunk_kv=chunk_kv)
+    return chunked_attention(q, k, v, causal=causal, window=window, cap=cap,
+                             scale=scale, chunk_kv=chunk_kv,
+                             q_offset=q_offset)
+
+
+def ssd(x, dt, A, B, C, *, chunk, h0=None):
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import ssd as ssd_k
+        return ssd_k.ssd(x, dt, A, B, C, chunk=chunk, h0=h0,
+                         interpret=(mode == "interpret"))
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk=chunk, h0=h0)
+
+
+def sampled_softmax_loss(x, table, labels, sampled_ids, *, cap=None):
+    """See kernels/sampled_softmax.py and models/embedding.py."""
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import sampled_softmax as ss
+        return ss.sampled_softmax_loss(
+            x, table, labels, sampled_ids, cap=cap,
+            interpret=(mode == "interpret"))
+    from repro.kernels.ref import sampled_softmax_loss_ref
+    return sampled_softmax_loss_ref(x, table, labels, sampled_ids, cap=cap)
+
+
+def embedding_gather(table, ids):
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import embedding as emb
+        return emb.gather(table, ids, interpret=(mode == "interpret"))
+    return table[ids]

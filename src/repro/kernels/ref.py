@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every kernel. Naive, exact, O(S^2)/O(S·N) memory —
+tests only. The scalable XLA paths live in repro.models.*; the TPU paths in
+repro.kernels.<name>."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, cap=None, scale=None,
+                  q_offset=0):
+    """Naive full-materialization attention. q: (B,Sq,H,hd); k/v: (B,Skv,K,hd)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    # g-major GQA grouping (head h uses kv head h % K) — matches models/.
+    qg = q.reshape(B, Sq, G, K, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bqgkh,bskh->bqgks", qg, kf) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    if causal:
+        qp = q_offset + jnp.arange(Sq)
+        kp = jnp.arange(Skv)
+        d = qp[:, None] - kp[None, :]
+        ok = d >= 0
+        if window is not None:
+            ok &= d < window
+        logits = jnp.where(ok[None, :, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqgks,bskh->bqgkh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, h0=None):
+    """Exact SSD recurrence, step by step (lax.scan over time).
+
+    x: (b,S,nh,hp); dt: (b,S,nh); A: (nh,); B,C: (b,S,G,N).
+    Returns (y (b,S,nh,hp), h_last (b,nh,hp,N)).
+    """
+    b, S, nh, hp = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = nh // G
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # (b,S,nh,N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        dec = jnp.exp(dtt * A)                            # (b,nh)
+        h = h * dec[..., None, None] + jnp.einsum(
+            "bh,bhs,bhp->bhps", dtt, Bt, xt)
+        y = jnp.einsum("bhs,bhps->bhp", Ct, h)
+        return h, y
+
+    h_init = (jnp.zeros((b, nh, hp, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, ys = jax.lax.scan(
+        step, h_init,
+        (x32.transpose(1, 0, 2, 3), dt32.transpose(1, 0, 2),
+         Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_last
+
+
+def sampled_softmax_loss_ref(x, table, labels, sampled_ids, *, cap=None):
+    """Sampled softmax (paper §4.2/§6.4). Per-token loss over the true class
+    + a shared set of sampled false classes.
+
+    x: (T, d); table: (V, d); labels: (T,); sampled_ids: (S,).
+    Returns mean loss (scalar, fp32). No sampling-correction term (uniform
+    proposal, matching the paper's microbenchmark usage).
+    """
+    x32 = x.astype(jnp.float32)
+    w_true = table[labels].astype(jnp.float32)            # (T, d)
+    w_samp = table[sampled_ids].astype(jnp.float32)       # (S, d)
+    logit_true = jnp.sum(x32 * w_true, axis=-1)           # (T,)
+    logit_samp = x32 @ w_samp.T                           # (T, S)
+    if cap is not None:
+        logit_true = cap * jnp.tanh(logit_true / cap)
+        logit_samp = cap * jnp.tanh(logit_samp / cap)
+    # mask accidental hits (sampled id == true label)
+    hit = sampled_ids[None, :] == labels[:, None]
+    logit_samp = jnp.where(hit, -1e30, logit_samp)
+    allz = jnp.concatenate([logit_true[:, None], logit_samp], axis=1)
+    lse = jax.scipy.special.logsumexp(allz, axis=1)
+    return jnp.mean(lse - logit_true)
+
+
+def softmax_xent_ref(logits, labels):
+    """Full-softmax cross entropy oracle. logits: (T, V); labels: (T,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - true)

@@ -1,0 +1,80 @@
+"""Fused sampled-softmax loss as a Pallas TPU kernel (paper §4.2 / §6.4).
+
+The paper's sampled softmax replaces the (T x V) logit matrix with logits
+against {true class} ∪ {n sampled classes}. This kernel fuses the remaining
+hot loop — (T x d) @ (d x n) logits, accidental-hit masking, LSE and the
+loss reduction — over (BLOCK_T x d) activation tiles, so the (T x n) logit
+block never leaves VMEM. Row gathers for w_true/w_samp use the embedding
+gather kernel (sparse reads colocated with the vocab shard).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 256
+NEG = -1.0e30
+
+
+def _loss_kernel(x_ref, wt_ref, lab_ref, ws_ref, sid_ref, o_ref, *, cap,
+                 t_len, block_t):
+    ti = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)           # (Bt, d)
+    wt = wt_ref[...].astype(jnp.float32)         # (Bt, d)
+    lab = lab_ref[...][:, 0]                     # (Bt,)
+    ws = ws_ref[...].astype(jnp.float32)         # (n, d)
+    sid = sid_ref[...][:, 0]                     # (n,)
+
+    lt = jnp.sum(x * wt, axis=-1)                # (Bt,)
+    ls = jax.lax.dot_general(x, ws, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Bt, n)
+    if cap is not None:
+        lt = cap * jnp.tanh(lt / cap)
+        ls = cap * jnp.tanh(ls / cap)
+    hit = sid[None, :] == lab[:, None]
+    ls = jnp.where(hit, NEG, ls)
+    mx = jnp.maximum(lt, ls.max(axis=-1))
+    lse = mx + jnp.log(jnp.exp(lt - mx) + jnp.exp(ls - mx[:, None]).sum(-1))
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_t, 1), 0)[:, 0]
+    valid = (ti * block_t + rows) < t_len
+    o_ref[0, 0] = jnp.sum(jnp.where(valid, lse - lt, 0.0))
+
+
+def sampled_softmax_loss(x, table, labels, sampled_ids, *, cap=None,
+                         interpret=False):
+    """x: (T, d); table: (V, d); labels: (T,); sampled_ids: (n,).
+    Mean loss over T tokens (matches kernels/ref.py oracle)."""
+    from repro.kernels.embedding import gather
+    T, d = x.shape
+    n = sampled_ids.shape[0]
+    w_true = gather(table, labels, interpret=interpret)       # (T, d)
+    w_samp = gather(table, sampled_ids, interpret=interpret)  # (n, d)
+
+    block_t = min(BLOCK_T, T)
+    nb = -(-T // block_t)
+    pad = nb * block_t - T
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        w_true = jnp.pad(w_true, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+
+    partial = pl.pallas_call(
+        functools.partial(_loss_kernel, cap=cap, t_len=T, block_t=block_t),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        interpret=interpret,
+    )(x, w_true, labels.astype(jnp.int32)[:, None], w_samp,
+      sampled_ids.astype(jnp.int32)[:, None])
+    return jnp.sum(partial) / T

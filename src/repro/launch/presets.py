@@ -1,0 +1,77 @@
+"""Per-(arch × shape) parallelism presets for the production meshes.
+
+These are the "placement decisions" a deployment would tune; the dry-run
+validates them and the roofline iterates on them. Rationale per arch in
+DESIGN.md §4; memory numbers in EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+from repro.config import OptimizerConfig, ParallelConfig
+
+
+def default_ocfg(arch: str, shape_name: str) -> OptimizerConfig:
+    # grok-1: fp32 Adam moments alone are 2.5 TB — bf16 moments (fp32
+    # masters and math) are what makes the 314B trainable on 2 pods.
+    if arch == "grok1_314b" and shape_name.startswith("train"):
+        return OptimizerConfig(slot_dtype="bfloat16")
+    return OptimizerConfig()
+
+# Training microbatch counts chosen so bf16 activations fit 16 GiB/chip
+# alongside weights + ZeRO-1 slots (validated by compiled.memory_analysis()).
+_TRAIN_MICRO = {
+    "glm4_9b": 4,
+    "starcoder2_3b": 2,
+    "gemma2_27b": 8,
+    "qwen3_32b": 8,
+    "whisper_large_v3": 2,
+    "zamba2_2p7b": 2,
+    "qwen2_vl_2b": 2,
+    "qwen3_moe_30b_a3b": 4,
+    "grok1_314b": 8,
+    "mamba2_370m": 1,
+}
+
+_FSDP = {"grok1_314b"}          # 314B cannot replicate over "data"
+_FSDP_TRAIN_ONLY = {"qwen3_32b", "gemma2_27b"}  # fp32 masters + slots
+
+
+# §Perf winners (EXPERIMENTS.md): per-arch training overrides adopted after
+# the hypothesis->measure loop. seq-shard is NOT applied to gemma2 (its
+# local-attention all-gathers regressed the collective term — refuted
+# hypothesis, recorded in §Perf).
+_TRAIN_TUNED = {
+    "glm4_9b": dict(remat="dots", seq_shard_activations=True,
+                    microbatches=2),
+    # mb=8 (not the frac-equivalent mb=4): dots-remat saves (T, d_ff/16)
+    # matmul outputs and gemma2's d_ff=36864 makes fewer/larger microbatches
+    # exceed HBM (memory_analysis: est 29.7 GiB @mb4 vs ~13 GiB @mb8).
+    "gemma2_27b": dict(remat="dots", microbatches=8),
+    # seq-sharded saved residuals make the fp32-master 314B fit pod2
+    # (with bf16 Adam moments from default_ocfg). mb must divide the
+    # per-dp-shard batch on BOTH meshes: 256/(2*16 dp shards)=8 -> mb<=8.
+    "grok1_314b": dict(seq_shard_activations=True, microbatches=8),
+}
+
+
+def default_pcfg(arch: str, shape_name: str) -> ParallelConfig:
+    train = shape_name.startswith("train")
+    fsdp = arch in _FSDP or (train and arch in _FSDP_TRAIN_ONLY)
+    # §Perf iteration: grok-1 DECODE replaces FSDP (per-step weight
+    # gathers) with 2D expert-ff sharding — weights resident, tiny psums.
+    # Decode-only: the layout replicates tokens over "data", which is the
+    # right trade at 1 token/seq but pathological for 32k-token prefill
+    # (measured: prefill tx 3.5 s -> 50.8 s; refuted there, see §Perf).
+    from repro.config import SHAPES
+    f2d = (arch == "grok1_314b"
+           and SHAPES[shape_name].kind == "decode")
+    kw = dict(
+        fsdp=fsdp and not f2d,
+        zero1=True,
+        remat="full" if train else "none",
+        microbatches=_TRAIN_MICRO.get(arch, 1) if train else 1,
+        expert_ff_2d=f2d,
+    )
+    if train and arch in _TRAIN_TUNED:
+        kw.update(_TRAIN_TUNED[arch])
+    return ParallelConfig(**kw)

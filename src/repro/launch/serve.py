@@ -1,0 +1,112 @@
+"""Batched serving driver: continuous decode over a request queue.
+
+Mirrors the paper's training/inference duality (§2.1: same model code for
+both). Requests carry a prompt; the server batches them, runs one prefill,
+then decodes greedily with the KV cache until max_new or EOS. The decode
+step is the same jitted function the dry-run lowers at decode_32k.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ParallelConfig, get_config
+from repro.models import api
+from repro.spmd import steps as steps_mod
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new: int = 16
+
+
+class Server:
+    def __init__(self, cfg, mesh, pcfg=None, max_batch: int = 8,
+                 prompt_len: int = 32, max_len: int = 128, seed: int = 0):
+        self.cfg, self.mesh = cfg, mesh
+        self.pcfg = pcfg or ParallelConfig(remat="none")
+        self.max_batch, self.prompt_len, self.max_len = (max_batch,
+                                                         prompt_len, max_len)
+        with jax.set_mesh(mesh):
+            params_f32, specs = api.init_model(cfg, jax.random.key(seed))
+            self.params = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16), params_f32)
+            self._prefill = jax.jit(
+                steps_mod.make_prefill_step(cfg, self.pcfg))
+            self._decode = jax.jit(
+                steps_mod.make_decode_step(cfg, self.pcfg),
+                donate_argnums=(1,))
+
+    def serve_batch(self, requests: list[Request]) -> list[np.ndarray]:
+        assert len(requests) <= self.max_batch
+        B = len(requests)
+        toks = np.stack([r.prompt[:self.prompt_len] for r in requests])
+        with jax.set_mesh(self.mesh):
+            # prefill at full cache capacity: pad prompt region
+            batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+            if self.cfg.frontend == "vision":
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(self.prompt_len, dtype=jnp.int32)[None, None],
+                    (3, B, self.prompt_len))
+            if self.cfg.frontend == "audio":
+                batch["frames"] = jnp.zeros(
+                    (B, self.cfg.encoder_seq_len, self.cfg.d_model),
+                    jnp.bfloat16)
+            cache, tok = self._prefill(self.params, batch)
+            # grow cache to max_len capacity
+            cache = jax.tree.map(self._grow, cache)
+            outs = [tok]
+            max_new = max(r.max_new for r in requests)
+            pos = jnp.full((B,), self.prompt_len, jnp.int32)
+            for _ in range(max_new - 1):
+                tok, cache = self._decode(
+                    self.params, cache,
+                    {"token": tok[:, None], "pos": pos})
+                outs.append(tok)
+                pos = pos + 1
+        gen = np.stack([np.asarray(t) for t in outs], axis=1)
+        return [gen[i, :requests[i].max_new] for i in range(B)]
+
+    def _grow(self, x):
+        # pad attention caches (L, B, S, K, hd) from prompt_len to max_len
+        if x.ndim == 5 and x.shape[2] == self.prompt_len and \
+                self.cfg.num_kv_heads and x.shape[-1] == self.cfg.head_dim:
+            pad = self.max_len - self.prompt_len
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return x
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4_9b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    cfg = get_config(args.arch, smoke=True)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    server = Server(cfg, mesh)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
+                    max_new=args.max_new)
+            for _ in range(args.requests)]
+    t0 = time.time()
+    outs = server.serve_batch(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(o) for o in outs)
+    print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s)")
+    print("[serve] sample output ids:", outs[0][:8].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,323 @@
+"""Attention: GQA projections, chunked online-softmax attention (the pure-XLA
+scalable path; the Pallas kernel in ``repro.kernels`` is the TPU hot path),
+sliding windows, logit softcaps, qk-norm, and a sequence-sharded
+flash-decode for serving against huge KV caches.
+
+The flash-decode (``decode_attention``) is the paper's §4.2 idea transposed:
+*computation moves to where the state lives*. The KV cache is sharded over
+the "model" axis on its sequence dim; each shard computes a partial
+softmax-attention over its slice and the partials are stitched with an
+LSE-combine (pmax/psum) — Part → Gather-at-shard → Stitch, exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import modules as m
+from repro.models.layers import apply_rope, rms_norm_fp32, softcap
+
+NEG_INF = -1.0e30
+
+
+def init_attention(cfg: ModelConfig, key):
+    ks = m.split_keys(key, 4)
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pairs = [
+        m.named("wq", m.dense_init(ks[0], (d, H, hd),
+                                   ("embed", "heads", "head_dim"))),
+        m.named("wk", m.dense_init(ks[1], (d, K, hd),
+                                   ("embed", "kv_heads", "head_dim"))),
+        m.named("wv", m.dense_init(ks[2], (d, K, hd),
+                                   ("embed", "kv_heads", "head_dim"))),
+        m.named("wo", m.dense_init(ks[3], (H, hd, d),
+                                   ("heads", "head_dim", "embed"),
+                                   scale=1.0 / math.sqrt(H * hd))),
+    ]
+    if cfg.qk_norm:
+        pairs.append(m.named("q_norm", m.ones_init((hd,), ("head_dim",))))
+        pairs.append(m.named("k_norm", m.ones_init((hd,), ("head_dim",))))
+    return m.merge(*pairs)
+
+
+def project_q(params, x, cfg: ModelConfig, cos_sin=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm_fp32(q, params["q_norm"])
+    if cos_sin is not None:
+        q = apply_rope(q, *cos_sin)
+    return q
+
+
+def project_kv(params, x, cfg: ModelConfig, cos_sin=None):
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        k = rms_norm_fp32(k, params["k_norm"])
+    if cos_sin is not None:
+        k = apply_rope(k, *cos_sin)
+    return k, v
+
+
+def out_proj(params, y, x_dtype):
+    return jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(x_dtype))
+
+
+def _attn_scale(cfg: ModelConfig) -> float:
+    return cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
+
+
+# ---------------------------------------------------------------------------
+# Dense attention (bf16 probabilities; the cheap path for short sequences —
+# under layer-remat its backward saves one (B,H,Sq,Skv) bf16 block).
+# ---------------------------------------------------------------------------
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    scale=None, q_offset=0):
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    # g-major grouping (head h uses kv head h % K): reshaping H -> (G, K)
+    # keeps a "model"-sharded H dim expressible as a sharded G dim, so the
+    # big logit tensors stay sharded under GSPMD (k-major would replicate).
+    qg = q.reshape(B, Sq, G, K, hd)
+    logits = jnp.einsum("bqgkh,bskh->bgkqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    if causal:
+        d = (q_offset + jnp.arange(Sq))[:, None] - jnp.arange(Skv)[None, :]
+        ok = d >= 0
+        if window is not None:
+            ok &= d < window
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bgkqs,bskh->bqgkh", p, v)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (pure XLA; O(chunk) memory).
+# ---------------------------------------------------------------------------
+
+
+def block_causal_attention(q, k, v, *, window=None, cap=None, scale=None,
+                           chunk_kv=1024, block_q=2048, q_offset=0):
+    """Causal attention with *static* triangular block skipping.
+
+    The q range is cut into static blocks; block i only attends to the
+    kv prefix it can see (and, with a sliding window, only from the first
+    in-window block). Halves causal-attention flops vs the rectangular
+    chunked scan — visible in the compiled HLO, hence in §Roofline.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    assert q_offset == 0 and Sq == Skv, "self-attention prefill only"
+    nb = -(-Sq // block_q)
+    outs = []
+    for qi in range(nb):
+        lo, hi = qi * block_q, min((qi + 1) * block_q, Sq)
+        start = 0
+        if window is not None:
+            start = max(0, (lo - window) // chunk_kv * chunk_kv)
+        outs.append(chunked_attention(
+            q[:, lo:hi], k[:, start:hi], v[:, start:hi], causal=True,
+            window=window, cap=cap, scale=scale, chunk_kv=chunk_kv,
+            q_offset=lo - start))
+    return jnp.concatenate(outs, axis=1)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, cap=None,
+                      scale=None, chunk_kv=1024, q_offset=0):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,K,hd) with H % K == 0 (GQA).
+
+    Scans over KV chunks with a streaming (max, sum, acc) softmax state, so
+    peak logit memory is O(Sq * chunk_kv) instead of O(Sq * Skv). ``q_offset``
+    is the absolute position of q[0] (for prefill continuation / decode).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    chunk_kv = min(chunk_kv, Skv)
+    n_chunks = -(-Skv // chunk_kv)
+    pad = n_chunks * chunk_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(B, Sq, G, K, hd)     # g-major; see dense_attention
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = k.reshape(B, n_chunks, chunk_kv, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk_kv, K, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        mx, sm, acc = carry
+        ci, k_i, v_i = inputs
+        k_pos = ci * chunk_kv + jnp.arange(chunk_kv)
+        logits = jnp.einsum("bqgkh,bckh->bqgkc", qg, k_i,
+                            preferred_element_type=jnp.float32) * scale
+        logits = softcap(logits, cap)
+        valid = (k_pos < Skv)[None, None, None, None, :]
+        if causal:
+            d = q_pos[:, None] - k_pos[None, :]
+            ok = d >= 0
+            if window is not None:
+                ok &= d < window
+            valid = valid & ok[None, :, None, None, :]
+        logits = jnp.where(valid, logits, NEG_INF)
+        new_mx = jnp.maximum(mx, logits.max(axis=-1))
+        p = jnp.exp(logits - new_mx[..., None])
+        corr = jnp.exp(mx - new_mx)
+        sm = sm * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqgkc,bckh->bqgkh", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (new_mx, sm, acc), None
+
+    init = (jnp.full((B, Sq, G, K), NEG_INF, jnp.float32),
+            jnp.zeros((B, Sq, G, K), jnp.float32),
+            jnp.zeros((B, Sq, G, K, hd), jnp.float32))
+    (mx, sm, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(sm, 1e-37)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode against a sequence-sharded KV cache (flash-decode LSE combine).
+# ---------------------------------------------------------------------------
+
+
+def _decode_attn_local(q, k, v, pos, seq_offset, *, window, cap, scale):
+    """Partial attention over a local cache slice.
+
+    Returns (o, lse) fp32 where o is the *normalized* local attention
+    output (softmax over the local slice only) and lse its log-sum-exp;
+    the cross-shard stitch is o_glob = Σ o_i·exp(lse_i - m) / Σ exp(lse_i-m).
+    """
+    B, _, H, hd = q.shape
+    _, S_l, K, _ = k.shape
+    G = H // K
+    qg = q.reshape(B, G, K, hd)         # g-major; see dense_attention
+    logits = jnp.einsum("bgkh,bskh->bgks", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    k_pos = seq_offset + jnp.arange(S_l)
+    ok = k_pos[None, :] <= pos[:, None]                       # (B, S_l)
+    if window is not None:
+        ok &= k_pos[None, :] > pos[:, None] - window
+    logits = jnp.where(ok[:, None, None, :], logits, NEG_INF)
+    mx = logits.max(axis=-1)
+    p = jnp.exp(logits - mx[..., None])
+    sm = jnp.maximum(p.sum(axis=-1), 1e-37)
+    o = jnp.einsum("bgks,bskh->bgkh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o / sm[..., None]
+    lse = mx + jnp.log(sm)
+    return o, lse
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, cap=None,
+                     scale=None, dp_axes=("data",), seq_axis="model"):
+    """q: (B,1,H,hd); caches: (B,S,K,hd) sharded (batch->dp, seq->model).
+
+    pos: (B,) int32 — index of the newest token (attends to [0, pos]).
+    Runs as shard_map over the mesh; each model shard attends over its local
+    sequence slice; partials are combined with a max/LSE psum stitch.
+    """
+    B, _, H, hd = q.shape
+    S = k_cache.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    mesh = jax.sharding.get_abstract_mesh()
+    dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+    dp_b = dp if (dp and B % math.prod(mesh.shape[a] for a in dp) == 0) else ()
+    dps = dp_b if dp_b else None
+    # drop seq sharding when the cache length doesn't divide the axis
+    # (e.g. whisper's 1500-frame cross cache on a 16-wide axis); the
+    # LSE-stitch stays correct because num and den scale identically.
+    if seq_axis not in mesh.axis_names or S % mesh.shape[seq_axis] != 0:
+        seq_axis_eff = None
+    else:
+        seq_axis_eff = seq_axis
+
+    def body(q, k, v, pos):
+        if seq_axis_eff is not None:
+            idx = jax.lax.axis_index(seq_axis_eff)
+        else:
+            idx = 0
+        S_l = k.shape[1]
+        o, lse = _decode_attn_local(q, k, v, pos, idx * S_l,
+                                    window=window, cap=cap, scale=scale)
+        mx = jax.lax.pmax(lse, seq_axis)
+        w = jnp.exp(lse - mx)
+        den = jax.lax.psum(w, seq_axis)
+        num = jax.lax.psum(o * w[..., None], seq_axis)
+        r = num / jnp.maximum(den, 1e-37)[..., None]       # (B_l, G, K, hd)
+        return r.reshape(r.shape[0], 1, H, hd)
+
+    out = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(dps, None, None, None),
+                  P(dps, seq_axis_eff, None, None),
+                  P(dps, seq_axis_eff, None, None), P(dps)),
+        out_specs=P(dps, None, None, None),
+    )(q, k_cache, v_cache, pos)
+    return out.astype(q.dtype)
+
+
+def decode_attention_local(q, k_cache, v_cache, pos, *, window=None, cap=None,
+                           scale=None):
+    """Unsharded decode attention (smoke tests / cross-attention)."""
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    o, _ = _decode_attn_local(q, k_cache, v_cache, pos, 0,
+                              window=window, cap=cap, scale=scale)
+    B, G, K, hd = o.shape       # o is already normalized
+    return o.reshape(B, 1, G * K, hd).astype(q.dtype)
+
+
+def update_cache(cache, new, pos):
+    """cache: (B,S,K,hd); new: (B,1,K,hd); pos: (B,) — scatter at positions."""
+    B = cache.shape[0]
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))(
+            cache, new, pos)
+
+
+def attention_scale(cfg: ModelConfig) -> float:
+    return _attn_scale(cfg)
+
+
+def sharded_attention(q, k, v, cfg: ModelConfig, **kw):
+    """Full-sequence attention with an automatic sequence-parallel fallback.
+
+    When num_heads doesn't divide the "model" axis (starcoder2's 24,
+    whisper's 20, qwen2-vl's 12 on a 16-wide axis), head-sharding cannot
+    apply and GSPMD would replicate the whole attention computation on every
+    chip. Instead we constrain q (and the output) to be sharded over "model"
+    on the *query sequence* dim — causal masking is position-based, so each
+    shard computes its own q rows against full K/V: attention flops drop by
+    the model-axis size.
+    """
+    from repro.kernels import ops as kops
+    mesh = jax.sharding.get_abstract_mesh()
+    tp = mesh.shape.get("model", 1)
+    Sq = q.shape[1]
+    if tp > 1 and cfg.num_heads % tp != 0 and Sq % tp == 0:
+        from repro.spmd.sharding import batch_spec
+        b = batch_spec(q.shape[0], mesh, extra_dims=0)
+        spec = P(b[0] if len(b) else None, "model", None, None)
+        sh = jax.sharding.NamedSharding(mesh, spec)
+        q = jax.lax.with_sharding_constraint(q, sh)
+        y = kops.flash_attention(q, k, v, **kw)
+        return jax.lax.with_sharding_constraint(y, sh)
+    return kops.flash_attention(q, k, v, **kw)

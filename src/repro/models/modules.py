@@ -1,0 +1,76 @@
+"""Param-tree conventions for the SPMD model zoo.
+
+Every ``init_*`` function returns ``(params, specs)`` where ``params`` is a
+nested dict of arrays and ``specs`` mirrors it with tuples of *logical axis
+names* (resolved to mesh axes by ``repro.spmd.sharding``). This mirrors the
+paper's separation of graph definition from placement: the logical spec is a
+placement *constraint*, the sharding rules are the placement *decision*.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def dense_init(key, shape, axes, scale: float | None = None, dtype=jnp.float32):
+    """He/Glorot-ish truncated-normal init; returns (param, logical axes)."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+        scale = 1.0 / math.sqrt(fan_in)
+    p = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+    assert len(axes) == len(shape), (shape, axes)
+    return p, tuple(axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), tuple(axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32):
+    return jnp.ones(shape, dtype), tuple(axes)
+
+
+def merge(*pairs: tuple[dict, dict]) -> tuple[dict, dict]:
+    params, specs = {}, {}
+    for p, s in pairs:
+        params.update(p)
+        specs.update(s)
+    return params, specs
+
+
+def named(name: str, pair: tuple[PyTree, PyTree]) -> tuple[dict, dict]:
+    return {name: pair[0]}, {name: pair[1]}
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_layer_params(pairs: list[tuple[PyTree, PyTree]]) -> tuple[PyTree, PyTree]:
+    """Stack per-layer param trees along a new leading "layers" axis (for
+    lax.scan over layers). Specs gain a leading "layers" logical axis."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in pairs])
+    specs = jax.tree.map(
+        lambda s: ("layers",) + tuple(s),
+        pairs[0][1],
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+    return params, specs
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def count_params(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

@@ -1,0 +1,215 @@
+"""Mixture-of-Experts with production sharding strategies.
+
+This is the paper's parameter-server insight at its sharpest: *move the
+computation to the shard that owns the state*. Expert weights are the sharded
+state; tokens are dynamically partitioned (`Part`), computed on the owning
+shard (`Gather` + matmul), and stitched back (`Stitch`) — §4.2's
+Part/Gather/Stitch pipeline, realized as shard_map + all_to_all / psum.
+
+Strategies (auto-chosen from num_experts vs the mesh "model" size):
+  EP  (experts >= model-axis, e.g. qwen3-moe's 128): experts sharded over
+      "model".
+      - big token counts (train/prefill): tokens additionally split over
+        "model" on the sequence dim; dispatch rows travel via all_to_all.
+      - small token counts (decode): tokens replicated over "model"; each
+        shard computes its own experts' rows and the outputs are stitched
+        with a psum.
+  TP  (experts < model-axis, e.g. grok-1's 8): every device holds all experts
+      but a 1/tp slice of d_ff; dispatch is local, the combine psums partial
+      d_ff contributions (Megatron-style).
+
+Both use fixed expert capacity with drop + zero-fill (the standard TPU MoE
+formulation) and return an auxiliary load-balancing loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import modules as m
+from repro.spmd.sharding import dp_axes
+
+_ACT = {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def init_moe(cfg: ModelConfig, key):
+    mo = cfg.moe
+    d, E, f = cfg.d_model, mo.num_experts, mo.d_ff_expert
+    ks = m.split_keys(key, 4)
+    return m.merge(
+        m.named("router", m.dense_init(ks[0], (d, E), ("embed", None))),
+        m.named("w_gate", m.dense_init(
+            ks[1], (E, d, f), ("experts", "expert_embed", "expert_ff"))),
+        m.named("w_in", m.dense_init(
+            ks[2], (E, d, f), ("experts", "expert_embed", "expert_ff"))),
+        m.named("w_out", m.dense_init(
+            ks[3], (E, f, d), ("experts", "expert_ff", "expert_embed"))),
+    )
+
+
+def _route(x, router, k: int):
+    """x: (T, d) -> (weights (T,k) fp32, idx (T,k) int32, probs (T,E))."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx, probs
+
+
+def _aux_loss(probs, idx, E: int):
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    hits = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=1)   # (T, E)
+    f = hits.mean(axis=0) / max(idx.shape[-1], 1)
+    p = probs.mean(axis=0)
+    return E * jnp.sum(f * p)
+
+
+def _positions_in_expert(idx, E: int):
+    """idx: (T, k) -> per-assignment rank within its expert (T, k)."""
+    flat = idx.reshape(-1)
+    oh = jax.nn.one_hot(flat, E, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh
+    pos = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    return pos.reshape(idx.shape)
+
+
+def _expert_ffn(disp, w_gate, w_in, w_out, act):
+    """disp: (E?, C, d); weights (E?, d, f)/(E?, f, d) -> (E?, C, d)."""
+    g = act(jnp.einsum("ecd,edf->ecf", disp, w_gate))
+    h = g * jnp.einsum("ecd,edf->ecf", disp, w_in)
+    return jnp.einsum("ecf,efd->ecd", h, w_out)
+
+
+def _moe_local(x, params, cfg: ModelConfig, *, mode: str, axis: str):
+    """Per-shard MoE body (inside shard_map). x: (T_l, d).
+
+    mode: "ep_a2a" | "ep_psum" | "tp".
+    """
+    mo = cfg.moe
+    E, k = mo.num_experts, mo.experts_per_token
+    T, d = x.shape
+    C = max(8, int(math.ceil(T * k / E * mo.capacity_factor)))
+    act = _ACT["gelu" if cfg.mlp_activation == "gelu_mlp"
+               else cfg.mlp_activation]
+
+    w, idx, probs = _route(x, params["router"].astype(x.dtype), k)
+    aux = _aux_loss(probs, idx, E)
+    pos = _positions_in_expert(idx, E)
+    keep = pos < C
+
+    wg = params["w_gate"].astype(x.dtype)
+    wi = params["w_in"].astype(x.dtype)
+    wo = params["w_out"].astype(x.dtype)
+
+    if mode == "ep_psum":
+        # experts sharded; tokens replicated over `axis`: each shard builds
+        # dispatch rows for its local experts only, outputs stitched by psum.
+        tp = jax.lax.axis_size(axis)
+        E_l = E // tp
+        e0 = jax.lax.axis_index(axis) * E_l
+        local = (idx >= e0) & (idx < e0 + E_l) & keep
+        lidx = jnp.where(local, idx - e0, 0)
+        lpos = jnp.minimum(pos, C - 1)
+        xk = jnp.broadcast_to(x[:, None, :], (T, k, d)).reshape(T * k, d)
+        contrib = jnp.where(local.reshape(-1, 1), xk, 0)
+        disp = jnp.zeros((E_l, C, d), x.dtype).at[
+            lidx.reshape(-1), lpos.reshape(-1)].add(contrib)
+        comb = _expert_ffn(disp, wg, wi, wo, act)
+        got = comb[lidx.reshape(-1), lpos.reshape(-1)].reshape(T, k, d)
+        wk = jnp.where(local, w, 0.0).astype(x.dtype)
+        y = jnp.einsum("tkd,tk->td", got, wk)
+        y = jax.lax.psum(y, axis)
+        return y, aux
+
+    # common dispatch build over all E buckets
+    lpos = jnp.minimum(pos, C - 1)
+    xk = jnp.broadcast_to(x[:, None, :], (T, k, d)).reshape(T * k, d)
+    contrib = jnp.where(keep.reshape(-1, 1), xk, 0)
+    disp = jnp.zeros((E, C, d), x.dtype).at[
+        idx.reshape(-1), lpos.reshape(-1)].add(contrib)
+
+    if mode == "ep_a2a":
+        tp = jax.lax.axis_size(axis)
+        E_l = E // tp
+        snd = disp.reshape(tp, E_l, C, d)
+        rcv = jax.lax.all_to_all(snd, axis, split_axis=0, concat_axis=0)
+        rows = rcv.transpose(1, 0, 2, 3).reshape(E_l, tp * C, d)
+        out_rows = _expert_ffn(rows, wg, wi, wo, act)
+        back = out_rows.reshape(E_l, tp, C, d).transpose(1, 0, 2, 3)
+        comb = jax.lax.all_to_all(back, axis, split_axis=0, concat_axis=0)
+        comb = comb.reshape(E, C, d)
+    else:  # tp: all experts local, f sharded over `axis`
+        comb = _expert_ffn(disp, wg, wi, wo, act)
+        comb = jax.lax.psum(comb, axis)
+
+    got = comb[idx.reshape(-1), lpos.reshape(-1)].reshape(T, k, d)
+    wk = jnp.where(keep, w, 0.0).astype(x.dtype)
+    y = jnp.einsum("tkd,tk->td", got, wk)
+    return y, aux
+
+
+def moe_block(params, x, cfg: ModelConfig, f2d: bool = False):
+    """x: (B, S, d) global -> (y, aux_loss scalar). shard_map wrapper.
+
+    f2d: serving layout for small-E models (grok-1) — expert d_ff sharded
+    over BOTH mesh axes, tokens replicated; the partial outputs psum over
+    (data, model). No per-step weight gathers (vs FSDP), tiny activation
+    psums — the right trade when tokens-per-step is small (decode).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    mo = cfg.moe
+    tp = mesh.shape.get("model", 1)
+    ep = (not f2d) and mo.num_experts >= tp \
+        and mo.num_experts % max(tp, 1) == 0
+    B, S, d = x.shape
+    dp = dp_axes(mesh)
+    dp_sz = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    dpb = dp if (dp and B % dp_sz == 0) else ()
+    dps = (dpb if len(dpb) > 1 else (dpb[0] if dpb else None))
+    seq_split = ep and tp > 1 and S % tp == 0
+
+    if not ep:
+        mode = "tp"
+    elif seq_split:
+        mode = "ep_a2a"
+    elif tp > 1:
+        mode = "ep_psum"
+    else:
+        mode = "tp"   # single model shard: all experts local, psum trivial
+
+    f_axes = (tuple(dp) + ("model",)) if f2d else ("model",)
+    seq_ax = "model" if mode == "ep_a2a" else None
+    e_ax = "model" if mode in ("ep_a2a", "ep_psum") else None
+    f_ax = (f_axes if len(f_axes) > 1 else f_axes[0]) \
+        if mode == "tp" else None
+    x_dps = None if f2d else dps
+    wspec = {
+        "router": P(None, None),
+        "w_gate": P(e_ax, None, f_ax),
+        "w_in": P(e_ax, None, f_ax),
+        "w_out": P(e_ax, f_ax, None),
+    }
+
+    def body(params, x):
+        b, s, _ = x.shape
+        y, aux = _moe_local(x.reshape(b * s, d), params, cfg,
+                            mode=mode,
+                            axis=f_axes if f2d else "model")
+        if dp and not f2d:
+            aux = jax.lax.pmean(aux, dp)
+        if mode != "ep_psum" and not f2d:
+            aux = jax.lax.pmean(aux, "model")
+        return y.reshape(b, s, d), aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(wspec, P(x_dps, seq_ax, None)),
+        out_specs=(P(x_dps, seq_ax, None), P()),
+    )(params, x)
+    return y, aux

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: within a chunk the
+recurrence is computed as a masked attention-like quadratic form; across
+chunks a small (heads, head_dim, state) recurrent state is carried. The
+per-chunk quadratic part is the Pallas-kernel hot spot
+(``repro.kernels.ssd``); this module holds the XLA path + decode recurrence.
+
+Shapes (per block):
+  x_in   (B, S, d_model)
+  z, x   (B, S, d_inner)        d_inner = expand * d_model
+  B, C   (B, S, G, N)           G = n_groups (1 for the assigned archs)
+  dt     (B, S, nh)             nh = d_inner / head_dim
+  state  (B, nh, hp, N)         hp = ssm head_dim
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models import modules as m
+from repro.models.layers import rms_norm_fp32
+
+
+def init_mamba(cfg: ModelConfig, key):
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.state_dim
+    ks = m.split_keys(key, 8)
+    pairs = [
+        m.named("wz", m.dense_init(ks[0], (d, di), ("embed", "ssm_inner"))),
+        m.named("wx", m.dense_init(ks[1], (d, di), ("embed", "ssm_inner"))),
+        m.named("wbc", m.dense_init(ks[2], (d, 2 * gn), ("embed", None))),
+        m.named("wdt", m.dense_init(ks[3], (d, nh), ("embed", "ssm_heads"))),
+        m.named("conv_x", m.dense_init(ks[4], (s.conv_kernel, di),
+                                       (None, "ssm_inner"), scale=0.5)),
+        m.named("conv_bc", m.dense_init(ks[5], (s.conv_kernel, 2 * gn),
+                                        (None, None), scale=0.5)),
+        m.named("dt_bias", m.zeros_init((nh,), ("ssm_heads",))),
+        # A_log init ~ log(U[1,16]) (mamba2 default); deterministic spread here.
+        ("A_log", jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32))),
+        m.named("D", m.ones_init((nh,), ("ssm_heads",))),
+        m.named("norm_scale", m.ones_init((di,), ("ssm_inner",))),
+        m.named("w_out", m.dense_init(ks[6], (di, d), ("ssm_inner", "embed"))),
+    ]
+    pairs[7] = m.named("A_log", (pairs[7][1], ("ssm_heads",)))
+    return m.merge(*pairs)
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # windowed sum: y_t = sum_k w[k] * x[t-K+1+k]
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        y = y + w[k] * jax.lax.dynamic_slice_in_dim(xp, k, x.shape[1], axis=1)
+    return y
+
+
+def segsum(log_a):
+    """Stable 'segment sum': out[..., i, j] = sum_{j < m <= i} log_a[..., m],
+    lower-triangular (i >= j), -inf above diagonal. log_a: (..., T)."""
+    T = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]      # sum over (j, i]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (b, S, nh, hp); dt: (b, S, nh); A: (nh,) negative; B, C: (b, S, G, N).
+    Returns y: (b, S, nh, hp) and final state (b, nh, hp, N). fp32 inside.
+    """
+    b, S, nh, hp = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = nh // G
+    dtype = x.dtype
+    x, dt, B, C = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    # reshape into chunks
+    xc = x.reshape(b, nc, chunk, nh, hp)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = B.reshape(b, nc, chunk, G, N)
+    Cc = C.reshape(b, nc, chunk, G, N)
+    Bh = jnp.repeat(Bc, rep, axis=3)                   # (b,nc,Q,nh,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A                                        # (b,nc,Q,nh) log decay
+    dA_cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic) term --------------------------------------
+    Lmask = segsum(dA.transpose(0, 1, 3, 2))            # (b,nc,nh,Q,Q)
+    CB = jnp.einsum("bnqhs,bnkhs->bnhqk", Ch, Bh)       # (b,nc,nh,Q,Q)
+    scores = CB * jnp.exp(Lmask)
+    xdt = xc * dtc[..., None]                           # (b,nc,Q,nh,hp)
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", scores, xdt)
+
+    # ---- chunk states + inter-chunk recurrence ------------------------------
+    # state contribution of chunk: sum_j exp(dA_cum[Q-1]-dA_cum[j]) * dt_j B_j x_j
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)    # (b,nc,Q,nh)
+    states = jnp.einsum("bnqh,bnqhs,bnqhp->bnhps",
+                        decay_to_end * dtc, Bh, xc)          # (b,nc,nh,hp,N)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b,nc,nh)
+
+    def carry_fn(h, inp):
+        st, dec = inp                                       # (b,nh,hp,N),(b,nh)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                     # emit h_in per chunk
+
+    h_init = (jnp.zeros((b, nh, hp, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_ins = jax.lax.scan(
+        carry_fn, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)                  # (b,nc,nh,hp,N)
+
+    # inter-chunk output: y_i += exp(dA_cum_i) * C_i . h_in
+    y_inter = jnp.einsum("bnqh,bnqhs,bnhps->bnqhp",
+                         jnp.exp(dA_cum), Ch, h_ins)
+    y = (y_intra + y_inter).reshape(b, S, nh, hp)
+    return y.astype(dtype), h_last
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token recurrence. x: (b,nh,hp); dt: (b,nh); B,C: (b,G,N);
+    state: (b,nh,hp,N). Returns (y, new_state)."""
+    G = B.shape[1]
+    nh = x.shape[1]
+    rep = nh // G
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)      # (b,nh,N)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dec = jnp.exp(dt32 * A)                                  # (b,nh)
+    new_state = (state * dec[..., None, None]
+                 + jnp.einsum("bh,bhs,bhp->bhps", dt32, Bh, x32))
+    y = jnp.einsum("bhs,bhps->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    s = cfg.ssm
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(x.dtype))
+    xi = jnp.einsum("bsd,de->bse", x, params["wx"].astype(x.dtype))
+    bc = jnp.einsum("bsd,de->bse", x, params["wbc"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(x.dtype))
+    return z, xi, bc, dt
+
+
+def mamba_block(params, x, cfg: ModelConfig, state=None):
+    """Full-sequence Mamba2 block (train / prefill). Returns (y, final_states)
+    where final_states = (conv_tail, ssm_state) for decode continuation."""
+    s: SSMConfig = cfg.ssm
+    B_, S, d = x.shape
+    di, nh, gn = s.d_inner(d), s.n_heads(d), s.n_groups * s.state_dim
+
+    z, xi, bc, dt = _split_proj(params, x, cfg)
+    conv_in_x, conv_in_bc = xi, bc
+    xi = jax.nn.silu(_causal_conv(xi, params["conv_x"].astype(x.dtype)))
+    bc = jax.nn.silu(_causal_conv(bc, params["conv_bc"].astype(x.dtype)))
+    Bmat = bc[..., :gn].reshape(B_, S, s.n_groups, s.state_dim)
+    Cmat = bc[..., gn:].reshape(B_, S, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xi.reshape(B_, S, nh, s.head_dim)
+    # pad S to a chunk multiple; dt=0 padding is an exact identity step
+    # (decay exp(0)=1, contribution dt*B*x = 0), so the state is untouched.
+    pad = (-S) % s.chunk_size
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    from repro.kernels import ops as kops
+    y, h_last = kops.ssd(xh, dt, A, Bmat, Cmat, chunk=s.chunk_size,
+                         h0=None if state is None else state[1])
+    if pad:
+        y, xh = y[:, :S], xh[:, :S]
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B_, S, di)
+    y = rms_norm_fp32(y * jax.nn.silu(z.astype(jnp.float32)),
+                      params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     params["w_out"].astype(x.dtype))
+    conv_tail = jnp.concatenate(
+        [conv_in_x, conv_in_bc], axis=-1)[:, -(s.conv_kernel - 1):, :]
+    return out, (conv_tail, h_last)
+
+
+def mamba_decode(params, x, cfg: ModelConfig, state):
+    """Single-token decode. x: (B,1,d); state = (conv_tail (B,K-1,di+2gn),
+    ssm_state (B,nh,hp,N)). Returns (y (B,1,d), new_state)."""
+    s: SSMConfig = cfg.ssm
+    B_, _, d = x.shape
+    di, nh, gn = s.d_inner(d), s.n_heads(d), s.n_groups * s.state_dim
+    conv_tail, h = state
+
+    z, xi, bc, dt = _split_proj(params, x, cfg)
+    conv_new = jnp.concatenate([xi, bc], axis=-1)       # (B,1,di+2gn)
+    window = jnp.concatenate([conv_tail, conv_new], axis=1)  # (B,K,di+2gn)
+    wx = params["conv_x"].astype(x.dtype)
+    wbc = params["conv_bc"].astype(x.dtype)
+    w_full = jnp.concatenate([wx, wbc], axis=-1)        # (K, di+2gn)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w_full)
+    conv_out = jax.nn.silu(conv_out)
+    xi1, bc1 = conv_out[..., :di], conv_out[..., di:]
+    Bmat = bc1[..., :gn].reshape(B_, s.n_groups, s.state_dim)
+    Cmat = bc1[..., gn:].reshape(B_, s.n_groups, s.state_dim)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xi1.reshape(B_, nh, s.head_dim)
+    y, h_new = ssd_decode_step(h, xh, dt1, A, Bmat, Cmat)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B_, di)
+    y = rms_norm_fp32(y * jax.nn.silu(z[:, 0].astype(jnp.float32)),
+                      params["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype),
+                     params["w_out"].astype(x.dtype))
+    new_tail = window[:, 1:, :]
+    return out[:, None, :], (new_tail, h_new)

@@ -1,0 +1,161 @@
+"""Optimizers as user-level pytree code (paper §4.1).
+
+The paper's argument: optimizers must not be privileged runtime code. In
+DistBelief, adding Momentum meant editing the C++ parameter server; in
+TensorFlow (and here) an optimizer is a pure function over (param, grad,
+slots) built from primitive ops. We implement the paper's §4.1 list —
+SGD, Momentum, Adagrad, Adadelta, RMSProp, Adam — plus AdamW (the default
+for the LM zoo). L-BFGS is a documented non-goal (DESIGN.md §7).
+
+All state is a pytree of slot variables mirroring the params, so ZeRO-1
+sharding (spmd/zero.py) and checkpointing treat it like any other state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+PyTree = Any
+
+
+def _zeros_like_tree(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def init_train_state(ocfg: OptimizerConfig, params_f32: PyTree) -> dict:
+    """Mixed-precision training state: fp32 master weights live INSIDE the
+    optimizer state (ZeRO-sharded over "data" with the slots); the working
+    params handed to forward/backward are bf16 casts. The all-gather after
+    the sharded update therefore moves bf16, not fp32."""
+    return {"master": params_f32, **init_opt_state(ocfg, params_f32)}
+
+
+def apply_updates_master(ocfg: OptimizerConfig, state: dict, grads: PyTree,
+                         step, out_dtype=jnp.bfloat16):
+    """Returns (new working params in out_dtype, new state)."""
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    slots = {k: v for k, v in state.items() if k != "master"}
+    new_master, new_slots = apply_updates(ocfg, state["master"], g32, slots,
+                                          step)
+    params = jax.tree.map(lambda p: p.astype(out_dtype), new_master)
+    return params, {"master": new_master, **new_slots}
+
+
+def init_opt_state(ocfg: OptimizerConfig, params: PyTree) -> dict:
+    name = ocfg.name
+    sd = jnp.dtype(ocfg.slot_dtype)
+    if name == "sgd":
+        return {}
+    if name in ("momentum", "adagrad", "rmsprop"):
+        return {"s0": _zeros_like_tree(params, sd)}
+    if name == "adadelta":
+        return {"s0": _zeros_like_tree(params, sd), "s1": _zeros_like_tree(params, sd)}
+    if name in ("adam", "adamw"):
+        return {"s0": _zeros_like_tree(params, sd), "s1": _zeros_like_tree(params, sd)}
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def schedule(ocfg: OptimizerConfig, step) -> jnp.ndarray:
+    """Learning-rate schedule (fp32 scalar)."""
+    s = jnp.asarray(step, jnp.float32)
+    if ocfg.warmup_steps > 0:
+        warm = jnp.minimum((s + 1.0) / ocfg.warmup_steps, 1.0)
+    else:
+        warm = 1.0
+    if ocfg.schedule == "constant":
+        dec = 1.0
+    elif ocfg.schedule == "linear":
+        dec = jnp.maximum(1.0 - s / ocfg.total_steps, 0.0)
+    else:  # cosine
+        t = jnp.clip(s / ocfg.total_steps, 0.0, 1.0)
+        dec = 0.5 * (1.0 + jnp.cos(math.pi * t))
+    return ocfg.lr * warm * dec
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def apply_updates(ocfg: OptimizerConfig, params: PyTree, grads: PyTree,
+                  state: dict, step) -> tuple[PyTree, dict]:
+    """One optimizer step. All math in fp32 (params are fp32 masters)."""
+    lr = schedule(ocfg, step)
+    name = ocfg.name
+    b1, b2, eps = ocfg.beta1, ocfg.beta2, ocfg.eps
+
+    if name == "sgd":
+        new_p = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new_p, state
+
+    if name == "momentum":
+        new_v = jax.tree.map(lambda v, g: b1 * v + g, state["s0"], grads)
+        new_p = jax.tree.map(lambda p, v: p - lr * v, params, new_v)
+        return new_p, {"s0": new_v}
+
+    if name == "adagrad":
+        new_a = jax.tree.map(lambda a, g: a + g * g, state["s0"], grads)
+        new_p = jax.tree.map(
+            lambda p, g, a: p - lr * g / (jnp.sqrt(a) + eps),
+            params, grads, new_a)
+        return new_p, {"s0": new_a}
+
+    if name == "rmsprop":
+        new_a = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g,
+                             state["s0"], grads)
+        new_p = jax.tree.map(
+            lambda p, g, a: p - lr * g / (jnp.sqrt(a) + eps),
+            params, grads, new_a)
+        return new_p, {"s0": new_a}
+
+    if name == "adadelta":
+        rho = b2
+        acc_g = jax.tree.map(lambda a, g: rho * a + (1 - rho) * g * g,
+                             state["s0"], grads)
+        upd = jax.tree.map(
+            lambda g, ag, ax: g * jnp.sqrt(ax + eps) / jnp.sqrt(ag + eps),
+            grads, acc_g, state["s1"])
+        acc_x = jax.tree.map(lambda a, u: rho * a + (1 - rho) * u * u,
+                             state["s1"], upd)
+        new_p = jax.tree.map(lambda p, u: p - lr * u, params, upd)
+        return new_p, {"s0": acc_g, "s1": acc_x}
+
+    if name in ("adam", "adamw"):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+        # moment math in fp32, stored back at the slot dtype (slot_dtype
+        # "bfloat16" halves moment memory for the largest models)
+        new_m = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g).astype(m.dtype),
+            state["s0"], grads)
+        new_v = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * g * g).astype(v.dtype),
+            state["s1"], grads)
+
+        def upd(p, mh, vh):
+            u = ((mh.astype(jnp.float32) / c1)
+                 / (jnp.sqrt(vh.astype(jnp.float32) / c2) + eps))
+            if name == "adamw" and ocfg.weight_decay:
+                u = u + ocfg.weight_decay * p
+            return p - lr * u
+
+        new_p = jax.tree.map(upd, params, new_m, new_v)
+        return new_p, {"s0": new_m, "s1": new_v}
+
+    raise ValueError(name)

@@ -1,0 +1,79 @@
+"""Gradient compression: int8 error-feedback all-reduce.
+
+The wire cost of a ring all-reduce is ~2 x tensor bytes; quantizing the two
+transfer stages to int8 cuts it ~4x vs fp32 (2x vs bf16). The algorithm is
+the standard EF-compressed reduce-scatter / all-gather:
+
+  1. sender adds its error-feedback residual, quantizes per-chunk to int8
+     with an fp32 scale, and keeps e' = g - dequant(q(g)),
+  2. all_to_all distributes int8 chunks (reduce-scatter leg),
+  3. each rank dequantizes + averages its chunk, requantizes,
+  4. all_gather of int8 chunks (all-gather leg), dequantize.
+
+Runs inside shard_map over the reduction axis. On a multi-pod mesh the
+intended axis is "pod" (the slow inter-pod links); EXPERIMENTS.md §Perf
+measures the collective-bytes reduction on a collective-bound cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant(x32, axis_size):
+    """Per-chunk symmetric int8 quantization. x32: (n,) fp32, n % A == 0."""
+    chunks = x32.reshape(axis_size, -1)
+    scale = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(chunks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def compressed_psum_mean(x, err, axis: str):
+    """Mean of x over `axis` with int8 EF compression (inside shard_map).
+
+    x: any-shape fp32/bf16 array (same shape on every rank); err: same
+    shape fp32 error-feedback state. Returns (mean, new_err).
+    """
+    a = jax.lax.axis_size(axis)
+    shape = x.shape
+    x32 = x.astype(jnp.float32).reshape(-1) + err.reshape(-1)
+    n = x32.shape[0]
+    pad = (-n) % a
+    if pad:
+        x32 = jnp.pad(x32, (0, pad))
+
+    q, scale = _quant(x32, a)                        # (a, c) int8, (a,1) f32
+    deq = q.astype(jnp.float32) * scale
+    new_err = (x32 - deq.reshape(-1))[:n].reshape(shape)
+
+    # reduce-scatter leg: every rank receives chunk r from all ranks
+    qt = jax.lax.all_to_all(q[:, None], axis, split_axis=0, concat_axis=1)
+    st = jax.lax.all_to_all(scale[:, None], axis, split_axis=0,
+                            concat_axis=1)
+    # (1, a, c): contributions to MY chunk from every rank
+    part = (qt.astype(jnp.float32) * st).sum(axis=1)[0] / a   # (c,)
+
+    q2, s2 = _quant(part, 1)                          # (1, c)
+    gq = jax.lax.all_gather(q2[0], axis)              # (a, c) int8
+    gs = jax.lax.all_gather(s2[0], axis)              # (a, 1)
+    full = (gq.astype(jnp.float32) * gs).reshape(-1)
+    out = full[:n].reshape(shape).astype(x.dtype)
+    return out, new_err
+
+
+def compressed_psum_mean_tree(tree, err_tree, axis: str):
+    flat, treedef = jax.tree.flatten(tree)
+    errs = jax.tree.leaves(err_tree)
+    outs, new_errs = [], []
+    for x, e in zip(flat, errs):
+        o, ne = compressed_psum_mean(x, e, axis)
+        outs.append(o)
+        new_errs.append(ne)
+    return (jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, new_errs))
+
+
+def init_error_state(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)

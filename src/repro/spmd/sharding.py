@@ -1,0 +1,117 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+The paper separates the *graph* from its *placement* (§3.3): users express
+constraints ("put parameters on PS tasks"), the runtime picks devices. Here
+parameters carry logical axis names (repro.models.modules specs) and a rules
+table maps them to mesh axes. Changing a parallelism strategy = changing the
+rules — the model code never mentions mesh axes (except the explicitly
+collective shard_map blocks, which take their axes from helpers here).
+
+Mesh axes: ("pod",)? + ("data", "model"). "pod" is the multi-pod DP/PP axis.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig
+
+Rules = dict[str, Any]   # logical name -> mesh axis | tuple | None
+
+
+def dp_axes(mesh=None) -> tuple[str, ...]:
+    """Data-parallel axes present in the mesh (pod folds into DP by default)."""
+    mesh = mesh or jax.sharding.get_abstract_mesh()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(cfg: ModelConfig, pcfg: ParallelConfig) -> Rules:
+    """Baseline rules; per-arch auto choices documented in DESIGN.md."""
+    moe_ep = cfg.moe is not None and cfg.moe.num_experts >= 16
+    rules: Rules = {
+        "vocab": "model",
+        "embed": "data" if pcfg.fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",       # dropped automatically if not divisible
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model" if moe_ep else None,
+        "expert_ff": (("data", "model") if pcfg.expert_ff_2d
+                      else (None if moe_ep else "model")),
+        "expert_embed": "data" if (pcfg.fsdp and not pcfg.expert_ff_2d)
+                        else None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "layers": None,
+        None: None,
+    }
+    return rules
+
+
+def resolve_spec(shape: tuple[int, ...], logical: tuple[str | None, ...],
+                 rules: Rules, mesh) -> P:
+    """Map logical axes to a PartitionSpec, dropping any assignment whose
+    mesh-axis product does not divide the dim (the paper's "feasible set")."""
+    out = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        ax = rules.get(name, None)
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        if axes and dim % size == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def tree_shardings(params, specs, rules: Rules, mesh):
+    """NamedSharding tree for a (params, logical-specs) pair."""
+    def one(p, s):
+        return NamedSharding(mesh, resolve_spec(p.shape, s, rules, mesh))
+    return _map2(one, params, specs)
+
+
+def _map2(fn, params, specs):
+    if isinstance(params, dict):
+        return {k: _map2(fn, params[k], specs[k]) for k in params}
+    return fn(params, specs)
+
+
+def tree_pspecs(params, specs, rules: Rules, mesh):
+    def one(p, s):
+        return resolve_spec(p.shape, s, rules, mesh)
+    return _map2(one, params, specs)
+
+
+def abstract_params(params):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+
+
+def batch_spec(global_batch: int, mesh, extra_dims: int = 1) -> P:
+    """Spec for (B, ...) activations: batch over DP axes when divisible."""
+    dp = dp_axes(mesh)
+    size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    first = dp if (dp and global_batch % size == 0) else None
+    if isinstance(first, tuple) and len(first) == 1:
+        first = first[0]
+    return P(first, *([None] * extra_dims))
+
+
+def kv_cache_spec(global_batch: int, seq: int, mesh) -> P:
+    """(B, S, K, hd): batch over DP, sequence over "model" (flash-decode)."""
+    b = batch_spec(global_batch, mesh, extra_dims=0)
+    seq_ax = "model" if ("model" in mesh.axis_names
+                         and seq % mesh.shape["model"] == 0) else None
+    return P(b[0] if len(b) else None, seq_ax, None, None)

@@ -1,0 +1,172 @@
+"""Step builders: train / prefill / decode, plus their sharding assignments.
+
+``make_train_step`` returns a pure function (params, opt_state, step, batch)
+-> (params, opt_state, metrics) with gradient-accumulation microbatching.
+``shardings_for_*`` compute the NamedShardings handed to jax.jit — the
+"placement" half of the paper's model (§3.3): the step function is the
+graph; these assignments are where each vertex's state lives.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (ModelConfig, OptimizerConfig, ParallelConfig,
+                          ShapeConfig)
+from repro.models import api
+from repro.optim import optimizers as opt
+from repro.spmd import sharding as shd
+from repro.spmd import zero
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Microbatching
+# ---------------------------------------------------------------------------
+
+_BATCH_AXIS = {"positions": 1}   # (3, B, S) M-RoPE ids; everything else dim 0
+
+
+def _split_microbatches(batch: dict, m: int) -> dict:
+    def split(name, x):
+        ax = _BATCH_AXIS.get(name, 0)
+        B = x.shape[ax]
+        assert B % m == 0, (name, B, m)
+        shp = x.shape[:ax] + (m, B // m) + x.shape[ax + 1:]
+        return jnp.moveaxis(x.reshape(shp), ax, 0)
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def _merge_metrics(ms):
+    return ms
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
+                    ocfg: OptimizerConfig):
+    def loss_of(params, mb):
+        sampled = mb.pop("sampled_ids") if "sampled_ids" in mb else None
+        loss, metr = api.loss_fn(params, mb, cfg, pcfg, sampled_ids=sampled)
+        return loss, metr
+
+    def grads_of(params, batch):
+        if pcfg.microbatches <= 1:
+            (loss, metr), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metr, grads
+
+        mbs = _split_microbatches(batch, pcfg.microbatches)
+        # accumulate in fp32 even though per-microbatch grads are bf16
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            gacc, lacc = carry
+            (loss, metr), g = jax.value_and_grad(
+                loss_of, has_aux=True)(params, mb)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / pcfg.microbatches,
+                gacc, g)
+            return (gacc, lacc + loss / pcfg.microbatches), metr
+
+        (grads, loss), metr = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32)), mbs)
+        metr = jax.tree.map(lambda x: x.mean(), metr)
+        return loss, metr, grads
+
+    def train_step(params, opt_state, step, batch):
+        """params: bf16 working copy; opt_state holds fp32 masters + slots."""
+        loss, metr, grads = grads_of(params, batch)
+        if ocfg.grad_clip:
+            grads, gnorm = opt.clip_by_global_norm(grads, ocfg.grad_clip)
+        else:
+            gnorm = opt.global_norm(grads)
+        params, opt_state = opt.apply_updates_master(ocfg, opt_state, grads,
+                                                     step)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.schedule(ocfg, step), **metr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, pcfg: ParallelConfig):
+    def prefill_step(params, batch):
+        return api.prefill_fn(params, batch, cfg, pcfg)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, pcfg: ParallelConfig):
+    def decode_step(params, cache, batch):
+        return api.decode_fn(params, cache, batch, cfg, pcfg)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    out = {}
+    for name, (shp, _) in api.batch_shapes(cfg, shape).items():
+        ax = _BATCH_AXIS.get(name, 0)
+        b = shd.batch_spec(shp[ax], mesh, extra_dims=0)
+        entries = [None] * len(shp)
+        entries[ax] = b[0] if len(b) else None
+        out[name] = NamedSharding(mesh, P(*entries))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, B: int, S: int, mesh):
+    """Shardings for the cache pytree (layer-stacked leading dim)."""
+    shapes = api.init_cache_shapes(cfg, B, S)
+    dp = shd.batch_spec(B, mesh, extra_dims=0)
+    dp0 = dp[0] if len(dp) else None
+
+    def leaf(sds):
+        shp = sds.shape
+        if len(shp) == 5 and shp[-1] == cfg.head_dim and cfg.num_kv_heads:
+            # (L, B, S_or_Te, K, hd) attention cache
+            seq = shp[2]
+            seq_ax = ("model" if "model" in mesh.axis_names
+                      and seq % mesh.shape["model"] == 0 else None)
+            return NamedSharding(mesh, P(None, dp0, seq_ax, None, None))
+        if len(shp) == 5:          # (L, B, nh, hp, N) ssm state
+            nh = shp[2]
+            ax = ("model" if "model" in mesh.axis_names
+                  and nh % mesh.shape["model"] == 0 else None)
+            return NamedSharding(mesh, P(None, dp0, ax, None, None))
+        if len(shp) == 4:          # (L, B, K-1, conv_ch) conv tail
+            return NamedSharding(mesh, P(None, dp0, None, None))
+        return NamedSharding(mesh, P(*([None] * len(shp))))
+
+    return jax.tree.map(leaf, shapes)
+
+
+def param_shardings(cfg: ModelConfig, pcfg: ParallelConfig, mesh, specs):
+    rules = shd.make_rules(cfg, pcfg)
+    params_shapes = None  # not needed; resolve per leaf with shapes from specs
+    return rules
+
+
+def resolve_param_shardings(params_or_shapes, specs, cfg, pcfg, mesh):
+    rules = shd.make_rules(cfg, pcfg)
+    return shd.tree_shardings(params_or_shapes, specs, rules, mesh)
+
+
+def opt_state_shardings(opt_shapes, params_shapes, specs, cfg, pcfg, mesh):
+    rules = shd.make_rules(cfg, pcfg)
+    pspecs = shd.tree_pspecs(params_shapes, specs, rules, mesh)
+    if pcfg.zero1:
+        return zero.zero1_state_shardings(opt_shapes, pspecs, mesh)
+    return zero.plain_state_shardings(opt_shapes, pspecs, mesh)

@@ -1,0 +1,70 @@
+"""ZeRO-1: shard optimizer slot variables over the data-parallel axes.
+
+With pure DP+TP, optimizer moments replicate across "data" — for grok-1
+(314B) that alone exceeds HBM. ZeRO-1 assigns each slot leaf an extra
+"data"-axis sharding on its first divisible, otherwise-unsharded dim; GSPMD
+then computes the update sharded and all-gathers only the fp32->param
+delta. Expressed entirely as out_shardings — no optimizer code changes,
+which is the §4.1 extensibility point all over again.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.spmd.sharding import dp_axes
+
+
+def zero1_leaf_spec(shape, base_spec: P, mesh) -> P:
+    """Add DP sharding to the first free, divisible dim of a slot leaf."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return base_spec
+    entries = list(base_spec) + [None] * (len(shape) - len(base_spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a:
+                used.add(a)
+    free_dp = tuple(a for a in dp if a not in used)
+    if not free_dp:
+        return base_spec
+    import math
+    size = math.prod(mesh.shape[a] for a in free_dp)
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % size == 0 and dim >= size:
+            entries[i] = free_dp if len(free_dp) > 1 else free_dp[0]
+            return P(*entries)
+    return base_spec
+
+
+def zero1_state_shardings(opt_state_shapes, param_pspecs, mesh):
+    """Shardings for the optimizer state given param PartitionSpecs.
+
+    opt_state is {"s0": tree, "s1": tree, ...} with trees mirroring params.
+    """
+    def shard_slot(tree_shapes, tree_specs):
+        def one(shp, spec):
+            return NamedSharding(
+                mesh, zero1_leaf_spec(shp.shape, spec, mesh))
+        return _map2(one, tree_shapes, tree_specs)
+
+    return {k: shard_slot(v, param_pspecs) for k, v in
+            opt_state_shapes.items()}
+
+
+def plain_state_shardings(opt_state_shapes, param_pspecs, mesh):
+    def shard_slot(tree_shapes, tree_specs):
+        return _map2(lambda shp, spec: NamedSharding(mesh, spec),
+                     tree_shapes, tree_specs)
+    return {k: shard_slot(v, param_pspecs)
+            for k, v in opt_state_shapes.items()}
+
+
+def _map2(fn, a, b):
+    if isinstance(a, dict):
+        return {k: _map2(fn, a[k], b[k]) for k in a}
+    if isinstance(a, tuple):
+        return tuple(_map2(fn, x, y) for x, y in zip(a, b))
+    return fn(a, b)

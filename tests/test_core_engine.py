@@ -1,0 +1,180 @@
+"""Core dataflow engine tests (paper §3-4): graph, autodiff, variables,
+queues, Switch/Merge, placement/partition with Send/Recv, sparse embedding
+Part/Gather/Stitch, concurrent steps."""
+
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core.ops          # noqa: F401
+import repro.core.partition    # noqa: F401
+import repro.core.queues       # noqa: F401
+import repro.core.variables    # noqa: F401
+from repro.core.cluster import Cluster
+from repro.core.control_flow import cond
+from repro.core.gradients import gradients
+from repro.core.graph import Graph
+from repro.core.session import Session
+
+
+@pytest.fixture()
+def sess():
+    g = Graph()
+    cl = Cluster(ps=2, worker=2)
+    return g, Session(g, cl, default_device="worker:0")
+
+
+def test_autodiff_matmul_mean(sess):
+    g, s = sess
+    x = g.placeholder("x")
+    w = g.apply("Variable", var_name="w",
+                initial=np.array([[1., 2.], [3., 4.]], np.float32),
+                device="ps:0")
+    wv = g.apply("Read", w)
+    loss = g.apply("ReduceMean", g.apply("Square", g.apply("MatMul", x, wv)))
+    (gw,) = gradients(loss, [wv])
+    xv = np.eye(2, dtype=np.float32)
+    lv, gv = s.run([loss, gw], {x: xv})
+    assert np.isclose(lv, 7.5)
+    np.testing.assert_allclose(gv, np.array([[.5, 1.], [1.5, 2.]]))
+
+
+def test_variable_update_cross_device(sess):
+    g, s = sess
+    w = g.apply("Variable", var_name="w", initial=np.ones(3, np.float32),
+                device="ps:1")
+    wv = g.apply("Read", w)
+    upd = g.apply("AssignAdd", w, g.constant(np.float32(2.0)))
+    s.run(upd)
+    np.testing.assert_allclose(s.run(wv), 3.0 * np.ones(3))
+
+
+def test_scatter_add_sparse_update(sess):
+    g, s = sess
+    w = g.apply("Variable", var_name="emb",
+                initial=np.zeros((4, 2), np.float32), device="ps:0")
+    ids = g.placeholder("ids")
+    rows = g.placeholder("rows")
+    upd = g.apply("ScatterAdd", w, ids, rows)
+    s.run(upd, {ids: np.array([1, 1, 3]),
+                rows: np.ones((3, 2), np.float32)})
+    out = s.run(g.apply("Read", w))
+    np.testing.assert_allclose(out, [[0, 0], [2, 2], [0, 0], [1, 1]])
+
+
+def test_queue_blocking_backpressure(sess):
+    g, s = sess
+    q = g.apply("FIFOQueue", queue_name="q", capacity=2, device="worker:1")
+    item = g.placeholder("item")
+    enq = g.apply("Enqueue", q, item)
+    deq = g.apply("Dequeue", q)
+    s.run(enq, {item: np.array(1.0)})
+    s.run(enq, {item: np.array(2.0)})
+    # third enqueue blocks until a consumer dequeues (backpressure)
+    done = threading.Event()
+
+    def producer():
+        s.run(enq, {item: np.array(3.0)})
+        done.set()
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    assert not done.wait(0.3), "enqueue should block on a full queue"
+    assert s.run(deq) == 1.0
+    assert done.wait(2.0), "enqueue should complete after dequeue"
+    assert s.run(deq) == 2.0
+    assert s.run(deq) == 3.0
+
+
+def test_switch_merge_cond(sess):
+    g, s = sess
+    p = g.placeholder("p")
+    a = g.placeholder("a")
+    r = cond(p, lambda t: t * g.constant(2.0),
+             lambda f: f + g.constant(100.0), [a])
+    assert s.run(r, {p: np.array(True), a: np.array(3.0)}) == 6.0
+    assert s.run(r, {p: np.array(False), a: np.array(3.0)}) == 103.0
+
+
+def test_sharded_embedding_part_gather_stitch(sess):
+    """Figure 3: two-way sharded embedding lookup, gradients included."""
+    g, s = sess
+    e0 = g.apply("Variable", var_name="e0",
+                 initial=np.arange(8.).reshape(4, 2).astype(np.float32),
+                 device="ps:0")
+    e1 = g.apply("Variable", var_name="e1",
+                 initial=(np.arange(8.) + 100).reshape(4, 2).astype(
+                     np.float32), device="ps:1")
+    ids = g.placeholder("ids")
+    shard = g.apply("FloorDiv", ids, g.constant(4))
+    l0, l1 = g.apply("DynamicPartition", ids, shard, num_partitions=2)
+    i0, i1 = g.apply("DynamicPartitionIndices", shard, num_partitions=2)
+    r0 = g.apply("Read", e0)
+    r1 = g.apply("Read", e1)
+    g0 = g.apply("Gather", r0, l0)
+    g1 = g.apply("Gather", r1, g.apply("Sub", l1, g.constant(4)))
+    emb = g.apply("DynamicStitch", i0, i1, g0, g1, n=2)
+    loss = g.apply("ReduceSum", emb)
+    (d0, d1) = gradients(loss, [r0, r1])
+    idv = np.array([0, 5, 3, 4])
+    out, gv0, gv1 = s.run([emb, d0, d1], {ids: idv})
+    np.testing.assert_allclose(out[0], [0, 1])
+    np.testing.assert_allclose(out[1], [102, 103])
+    np.testing.assert_allclose(out[2], [6, 7])
+    np.testing.assert_allclose(out[3], [100, 101])
+    # gradient lands only on touched rows
+    np.testing.assert_allclose(gv0.sum(axis=1), [2, 0, 0, 2])
+    np.testing.assert_allclose(gv1.sum(axis=1), [2, 2, 0, 0])
+
+
+def test_placement_round_robin_and_colocation(sess):
+    g, s = sess
+    handles = [g.apply("Variable", var_name=f"v{i}",
+                       initial=np.zeros(1, np.float32), device="ps:*")
+               for i in range(4)]
+    reads = [g.apply("Read", h) for h in handles]
+    s.run(reads)
+    devs = [h.op.assigned_device for h in handles]
+    assert set(devs) == {"ps:0", "ps:1"}, devs
+    # Read colocates with its Variable
+    for h, r in zip(handles, reads):
+        assert r.op.assigned_device == h.op.assigned_device
+
+
+def test_send_recv_inserted_for_cross_device_edges(sess):
+    g, s = sess
+    a = g.apply("Variable", var_name="a",
+                initial=np.array([2.0], np.float32), device="ps:0")
+    b = g.apply("Read", a)
+    c = g.apply("Mul", b, g.constant(np.float32(3.0)))
+    c.op.device = "worker:1"
+    out = s.run(c)
+    np.testing.assert_allclose(out, [6.0])
+    sends = [op for op in g.ops.values() if op.type == "Send"]
+    recvs = [op for op in g.ops.values() if op.type == "Recv"]
+    assert sends and recvs
+
+
+def test_concurrent_steps_shared_state(sess):
+    g, s = sess
+    w = g.apply("Variable", var_name="ctr",
+                initial=np.zeros(1, np.float32), device="ps:0")
+    inc = g.apply("AssignAdd", w, g.constant(np.float32(1.0)))
+    threads = [threading.Thread(target=lambda: s.run(inc), daemon=True)
+               for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert float(s.run(g.apply("Read", w))[0]) == 16.0
+
+
+def test_step_cache_reused(sess):
+    g, s = sess
+    x = g.placeholder("x")
+    y = g.apply("Mul", x, g.constant(2.0))
+    s.run(y, {x: np.array(1.0)})
+    n_plans = len(s._plan_cache)
+    s.run(y, {x: np.array(2.0)})
+    assert len(s._plan_cache) == n_plans  # same plan reused

@@ -1,0 +1,96 @@
+"""Vocab-parallel embedding/losses vs naive oracles (paper §4.2/§6.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.kernels.ref import sampled_softmax_loss_ref, softmax_xent_ref
+from repro.models import embedding as emb
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.fixture()
+def cfg():
+    return get_config("glm4_9b", smoke=True)
+
+
+def test_embed_matches_table_rows(cfg, tiny_mesh):
+    with jax.set_mesh(tiny_mesh):
+        params, _ = emb.init_embedding(cfg, jax.random.key(0))
+        toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+        out = emb.embed(params["table"], toks, cfg)
+        expect = params["table"][toks].astype(out.dtype)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32), atol=1e-2)
+
+
+def test_lm_loss_matches_full_softmax(cfg, tiny_mesh):
+    B, S, d = 2, 8, cfg.d_model
+    with jax.set_mesh(tiny_mesh):
+        params, _ = emb.init_embedding(cfg, jax.random.key(0))
+        x = jnp.asarray(RNG.normal(0, 1, (B, S, d)), jnp.float32)
+        labels = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                             jnp.int32)
+        loss = emb.lm_loss(x, params["table"], labels, cfg, chunk=4)
+        logits = np.asarray(x.reshape(-1, d) @ params["table"].T,
+                            np.float32)
+        # padded vocab columns must not contribute
+        logits = logits[:, :cfg.vocab_size]
+        ref = softmax_xent_ref(jnp.asarray(logits), labels.reshape(-1))
+    assert abs(float(loss) - float(ref)) < 1e-3
+
+
+def test_lm_loss_grads_flow(cfg, tiny_mesh):
+    with jax.set_mesh(tiny_mesh):
+        params, _ = emb.init_embedding(cfg, jax.random.key(0))
+        x = jnp.asarray(RNG.normal(0, 1, (2, 4, cfg.d_model)), jnp.float32)
+        labels = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 4)),
+                             jnp.int32)
+
+        def f(x, t):
+            return emb.lm_loss(x, t, labels, cfg)
+
+        gx, gt = jax.grad(f, (0, 1))(x, params["table"])
+        assert float(jnp.max(jnp.abs(gx))) > 0
+        assert float(jnp.max(jnp.abs(gt))) > 0
+        assert bool(jnp.all(jnp.isfinite(gx)))
+        # padded rows get zero gradient
+        pad_rows = np.asarray(gt)[cfg.vocab_size:]
+        if pad_rows.size:
+            np.testing.assert_allclose(pad_rows, 0.0)
+
+
+def test_sampled_softmax_matches_ref(cfg, tiny_mesh):
+    B, S, d = 2, 8, cfg.d_model
+    with jax.set_mesh(tiny_mesh):
+        params, _ = emb.init_embedding(cfg, jax.random.key(0))
+        x = jnp.asarray(RNG.normal(0, 1, (B, S, d)), jnp.float32)
+        labels = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                             jnp.int32)
+        sids = jnp.asarray(RNG.choice(cfg.vocab_size, 16, replace=False),
+                           jnp.int32)
+        loss = emb.sampled_softmax_loss(x, params["table"], labels, sids,
+                                        cfg)
+        ref = sampled_softmax_loss_ref(
+            x.reshape(-1, d), params["table"], labels.reshape(-1), sids)
+    assert abs(float(loss) - float(ref)) < 1e-4
+
+
+def test_decode_argmax_matches_naive(cfg, tiny_mesh):
+    with jax.set_mesh(tiny_mesh):
+        params, _ = emb.init_embedding(cfg, jax.random.key(0))
+        x = jnp.asarray(RNG.normal(0, 1, (4, 1, cfg.d_model)), jnp.float32)
+        tok = emb.decode_logits_argmax(x, params["table"], cfg)
+        logits = np.asarray(x[:, 0] @ params["table"].T)[:, :cfg.vocab_size]
+        np.testing.assert_array_equal(np.asarray(tok), logits.argmax(-1))
+
+
+def test_padded_vocab_multiple_of_256():
+    for arch in ("mamba2_370m", "whisper_large_v3", "glm4_9b"):
+        cfg = get_config(arch)
+        assert cfg.padded_vocab_size % 256 == 0
+        assert cfg.padded_vocab_size >= cfg.vocab_size
+        assert cfg.padded_vocab_size - cfg.vocab_size < 256

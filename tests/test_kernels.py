@@ -1,0 +1,171 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps against the
+pure-jnp oracles in repro.kernels.ref, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.embedding import gather
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.sampled_softmax import sampled_softmax_loss
+from repro.kernels.ssd import ssd
+from repro.models.attention import chunked_attention, dense_attention
+from repro.models.ssm import ssd_chunked
+
+RNG = np.random.default_rng(0)
+
+
+def arr(*shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jnp.asarray(RNG.normal(0, 1, shape), jnp.float32)
+            ).astype(dtype)
+
+
+ATTN_CASES = [
+    # B, Sq, Skv, H, K, hd, causal, window, cap, dtype
+    (2, 256, 256, 4, 2, 64, True, None, None, jnp.bfloat16),
+    (1, 128, 384, 4, 4, 128, True, None, 50.0, jnp.float32),
+    (2, 256, 256, 8, 2, 64, True, 64, None, jnp.bfloat16),
+    (1, 200, 200, 2, 1, 64, False, None, None, jnp.float32),
+    (1, 64, 512, 6, 2, 32, True, 128, 30.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_vs_oracle(case):
+    B, Sq, Skv, H, K, hd, causal, window, cap, dt = case
+    q, k, v = arr(B, Sq, H, hd, dtype=dt), arr(B, Skv, K, hd, dtype=dt), \
+        arr(B, Skv, K, hd, dtype=dt)
+    o = flash_attention(q, k, v, causal, window, cap, None, 0, 128, 128,
+                        True)
+    r = ref.attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    tol = 0.05 if dt == jnp.bfloat16 else 5e-3
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES[:3])
+def test_xla_attention_paths_vs_oracle(case):
+    B, Sq, Skv, H, K, hd, causal, window, cap, dt = case
+    q, k, v = arr(B, Sq, H, hd, dtype=dt), arr(B, Skv, K, hd, dtype=dt), \
+        arr(B, Skv, K, hd, dtype=dt)
+    r = ref.attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    for fn in (dense_attention, chunked_attention):
+        o = fn(q, k, v, causal=causal, window=window, cap=cap)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32), atol=0.05)
+
+
+def test_flash_attention_grads_match_ref():
+    q = arr(1, 128, 4, 64)
+    k = arr(1, 128, 2, 64)
+    v = arr(1, 128, 2, 64)
+
+    def f_k(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, None, 30.0, None, 0,
+                                       64, 64, True) ** 2)
+
+    def f_r(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True, cap=30.0)**2)
+
+    gk = jax.grad(f_k, (0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, (0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3,
+                                   rtol=2e-2)
+
+
+SSD_CASES = [
+    (2, 64, 4, 16, 1, 16, 16),
+    (1, 128, 8, 64, 1, 64, 32),
+    (2, 96, 4, 32, 2, 16, 16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_vs_oracle(case):
+    b, S, nh, hp, G, N, Q = case
+    x = arr(b, S, nh, hp)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, S, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4, (nh,)), jnp.float32)
+    B = arr(b, S, G, N)
+    C = arr(b, S, G, N)
+    h0 = arr(b, nh, hp, N, scale=0.5)
+    yr, hr = ref.ssd_ref(x, dt, A, B, C, h0=h0)
+    yk, hk = ssd(x, dt, A, B, C, chunk=Q, h0=h0, interpret=True)
+    yc, hc = ssd_chunked(x, dt, A, B, C, chunk=Q, h0=h0)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yr), atol=1e-3)
+
+
+def test_ssd_decode_matches_scan_tail():
+    """Chunked prefill state + one decode step == running S+1 steps."""
+    from repro.models.ssm import ssd_decode_step
+    b, S, nh, hp, G, N = 1, 32, 2, 16, 1, 16
+    x = arr(b, S + 1, nh, hp)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.1, (b, S + 1, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2, (nh,)), jnp.float32)
+    B = arr(b, S + 1, G, N)
+    C = arr(b, S + 1, G, N)
+    y_all, h_all = ref.ssd_ref(x, dt, A, B, C)
+    _, h_prefill = ssd_chunked(x[:, :S], dt[:, :S], A, B[:, :S], C[:, :S],
+                               chunk=8)
+    y1, h1 = ssd_decode_step(h_prefill, x[:, S], dt[:, S], A, B[:, S, :],
+                             C[:, S, :])
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_all[:, S]),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h_all), atol=1e-3)
+
+
+@given(st.integers(2, 50), st.integers(2, 9), st.integers(1, 64))
+@settings(max_examples=10, deadline=None)
+def test_gather_property(v, d, n):
+    """Pallas gather == table[ids] for random sizes (hypothesis)."""
+    rng = np.random.default_rng(v * 1000 + d)
+    table = jnp.asarray(rng.normal(0, 1, (v, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, v, (n,)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(gather(table, ids, interpret=True)),
+        np.asarray(table[ids]))
+
+
+@pytest.mark.parametrize("T,d,V,n,cap", [
+    (100, 64, 512, 32, None), (256, 128, 1024, 64, 30.0),
+    (513, 64, 300, 16, None)])
+def test_sampled_softmax_vs_oracle(T, d, V, n, cap):
+    x = arr(T, d)
+    table = arr(V, d, scale=0.05)
+    labels = jnp.asarray(RNG.integers(0, V, (T,)), jnp.int32)
+    sids = jnp.asarray(RNG.choice(V, n, replace=False), jnp.int32)
+    lk = sampled_softmax_loss(x, table, labels, sids, cap=cap,
+                              interpret=True)
+    lr = ref.sampled_softmax_loss_ref(x, table, labels, sids, cap=cap)
+    assert abs(float(lk) - float(lr)) < 1e-4
+
+
+@pytest.mark.parametrize("S,window", [(512, None), (384, 128), (700, None)])
+def test_block_causal_attention_vs_oracle(S, window):
+    from repro.models.attention import block_causal_attention
+    q = arr(1, S, 4, 32)
+    k = arr(1, S, 2, 32)
+    v = arr(1, S, 2, 32)
+    o = block_causal_attention(q, k, v, window=window, chunk_kv=128,
+                               block_q=256)
+    r = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-4)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(16, 64))
+@settings(max_examples=8, deadline=None)
+def test_attention_softmax_rows_sum_to_one(b, h, s):
+    """Property: output of attention is a convex combination of v rows, so
+    with constant v the output equals that constant."""
+    s = (s // 8) * 8
+    q = arr(b, s, h, 16)
+    k = arr(b, s, h, 16)
+    v = jnp.ones((b, s, h, 16), jnp.float32) * 3.5
+    o = flash_attention(q, k, v, True, None, None, None, 0, 32, 32, True)
+    np.testing.assert_allclose(np.asarray(o), 3.5, atol=1e-3)

@@ -1,0 +1,81 @@
+"""MoE block correctness: the capacity-dispatch shard_map implementation vs
+a dense reference that evaluates the routed experts directly."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.models import moe as moe_mod
+
+RNG = np.random.default_rng(11)
+
+
+def dense_moe_reference(params, x, cfg):
+    """Evaluate top-k experts per token exactly (no capacity, no drops)."""
+    mo = cfg.moe
+    T, d = x.shape
+    w, idx, probs = moe_mod._route(
+        jnp.asarray(x), params["router"].astype(jnp.float32),
+        mo.experts_per_token)
+    wg = np.asarray(params["w_gate"], np.float32)
+    wi = np.asarray(params["w_in"], np.float32)
+    wo = np.asarray(params["w_out"], np.float32)
+    act = jax.nn.silu if cfg.mlp_activation == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    y = np.zeros((T, d), np.float32)
+    for t in range(T):
+        for j in range(mo.experts_per_token):
+            e = int(idx[t, j])
+            h = np.asarray(act(jnp.asarray(x[t] @ wg[e]))) * (x[t] @ wi[e])
+            y[t] += float(w[t, j]) * (h @ wo[e])
+    return y
+
+
+@pytest.mark.parametrize("arch", ["qwen3_moe_30b_a3b", "grok1_314b"])
+def test_moe_block_matches_dense_reference(arch, tiny_mesh):
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    B, S = 2, 8
+    x = RNG.normal(0, 0.5, (B, S, cfg.d_model)).astype(np.float32)
+    with jax.set_mesh(tiny_mesh):
+        params, _ = moe_mod.init_moe(cfg, jax.random.key(0))
+        y, aux = moe_mod.moe_block(params, jnp.asarray(x), cfg)
+    ref = dense_moe_reference(params, x.reshape(-1, cfg.d_model), cfg)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, cfg.d_model), ref,
+                               atol=2e-3, rtol=1e-2)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens(tiny_mesh):
+    """With capacity_factor -> tiny, overflowing tokens contribute zeros."""
+    cfg = get_config("qwen3_moe_30b_a3b", smoke=True)
+    tiny = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.01))
+    x = jnp.asarray(RNG.normal(0, 0.5, (1, 64, cfg.d_model)), jnp.float32)
+    with jax.set_mesh(tiny_mesh):
+        params, _ = moe_mod.init_moe(cfg, jax.random.key(0))
+        y_tiny, _ = moe_mod.moe_block(params, x, tiny)
+        y_full, _ = moe_mod.moe_block(params, x, cfg)
+    # dropped rows -> strictly smaller output norm
+    assert float(jnp.linalg.norm(y_tiny)) < float(jnp.linalg.norm(y_full))
+
+
+def test_moe_grads_flow_to_experts_and_router(tiny_mesh):
+    cfg = get_config("qwen3_moe_30b_a3b", smoke=True)
+    x = jnp.asarray(RNG.normal(0, 0.5, (1, 16, cfg.d_model)), jnp.float32)
+    with jax.set_mesh(tiny_mesh):
+        params, _ = moe_mod.init_moe(cfg, jax.random.key(0))
+
+        def f(p):
+            y, aux = moe_mod.moe_block(p, x, cfg)
+            return jnp.sum(y * y) + 0.01 * aux
+
+        grads = jax.grad(f)(params)
+    for name in ("router", "w_gate", "w_in", "w_out"):
+        assert float(jnp.max(jnp.abs(grads[name]))) > 0, name
+        assert bool(jnp.all(jnp.isfinite(grads[name]))), name

@@ -1,0 +1,139 @@
+"""Optimizer tests (§4.1): each update rule vs a hand-written numpy
+reference, schedules, clipping, mixed-precision master updates, and a
+hypothesis property for Adam's bias correction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import OptimizerConfig
+from repro.optim import optimizers as opt
+
+
+def _tree():
+    return {"a": jnp.asarray([1.0, -2.0, 3.0]),
+            "b": {"c": jnp.asarray([[0.5, -0.5]])}}
+
+
+def _grads():
+    return {"a": jnp.asarray([0.1, 0.2, -0.3]),
+            "b": {"c": jnp.asarray([[1.0, -1.0]])}}
+
+
+def _cfg(name, **kw):
+    base = dict(name=name, lr=0.1, warmup_steps=0, schedule="constant",
+                weight_decay=0.0, grad_clip=0.0)
+    base.update(kw)
+    return OptimizerConfig(**base)
+
+
+def _np(t):
+    return np.asarray(t["a"]), np.asarray(t["b"]["c"])
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adagrad", "rmsprop",
+                                  "adadelta", "adam", "adamw"])
+def test_optimizers_match_numpy_reference(name):
+    ocfg = _cfg(name)
+    params, grads = _tree(), _grads()
+    state = opt.init_opt_state(ocfg, params)
+    p1, s1 = opt.apply_updates(ocfg, params, grads, state, 0)
+    p2, s2 = opt.apply_updates(ocfg, p1, grads, s1, 1)
+
+    # numpy reference, two steps
+    pa, pc = _np(params)
+    ga, gc = _np(grads)
+    lr, b1, b2, eps = 0.1, ocfg.beta1, ocfg.beta2, ocfg.eps
+
+    def two_steps(p, g):
+        if name == "sgd":
+            return p - lr * g - lr * g
+        if name == "momentum":
+            v = b1 * 0 + g
+            p = p - lr * v
+            v = b1 * v + g
+            return p - lr * v
+        if name == "adagrad":
+            a = g * g
+            p = p - lr * g / (np.sqrt(a) + eps)
+            a = a + g * g
+            return p - lr * g / (np.sqrt(a) + eps)
+        if name == "rmsprop":
+            a = (1 - b2) * g * g
+            p = p - lr * g / (np.sqrt(a) + eps)
+            a = b2 * a + (1 - b2) * g * g
+            return p - lr * g / (np.sqrt(a) + eps)
+        if name == "adadelta":
+            rho = b2
+            ag = (1 - rho) * g * g
+            ax = np.zeros_like(g)
+            u = g * np.sqrt(ax + eps) / np.sqrt(ag + eps)
+            p = p - lr * u
+            ax = rho * ax + (1 - rho) * u * u
+            ag = rho * ag + (1 - rho) * g * g
+            u = g * np.sqrt(ax + eps) / np.sqrt(ag + eps)
+            return p - lr * u
+        if name in ("adam", "adamw"):
+            m = v = np.zeros_like(g)
+            for t in range(2):
+                m = b1 * m + (1 - b1) * g
+                v = b2 * v + (1 - b2) * g * g
+                mh = m / (1 - b1 ** (t + 1))
+                vh = v / (1 - b2 ** (t + 1))
+                p = p - lr * mh / (np.sqrt(vh) + eps)
+            return p
+        raise ValueError(name)
+
+    ra, rc = two_steps(pa, ga), two_steps(pc, gc)
+    np.testing.assert_allclose(np.asarray(p2["a"]), ra, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p2["b"]["c"]), rc, rtol=1e-5)
+
+
+def test_master_update_mixed_precision():
+    ocfg = _cfg("adamw", weight_decay=0.01)
+    params_f32 = _tree()
+    state = opt.init_train_state(ocfg, params_f32)
+    bf = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params_f32)
+    grads = jax.tree.map(lambda x: x.astype(jnp.bfloat16), _grads())
+    new_bf, new_state = opt.apply_updates_master(ocfg, state, grads, 0)
+    assert new_bf["a"].dtype == jnp.bfloat16
+    assert new_state["master"]["a"].dtype == jnp.float32
+    # master moved in fp32 precision
+    assert float(jnp.max(jnp.abs(new_state["master"]["a"]
+                                 - params_f32["a"]))) > 0
+
+
+def test_schedule_shapes():
+    ocfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                           schedule="cosine")
+    lrs = [float(opt.schedule(ocfg, s)) for s in range(101)]
+    assert abs(lrs[0] - 0.1) < 1e-6          # (0+1)/10 warmup fraction
+    assert abs(lrs[10] - 1.0 * 0.5 * (1 + np.cos(np.pi * 0.1))) < 1e-6
+    assert lrs[100] < 1e-6
+    assert max(lrs) <= 1.0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.asarray([3.0, 4.0])}       # norm 5
+    clipped, gn = opt.clip_by_global_norm(grads, 1.0)
+    assert abs(float(gn) - 5.0) < 1e-6
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               rtol=1e-5)
+
+
+@given(st.floats(1e-5, 1e-1), st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_adam_step_bounded_by_lr(g, step):
+    """Property: |Adam update| <= ~lr per element (bias-corrected)."""
+    ocfg = _cfg("adam", lr=0.01)
+    params = {"w": jnp.asarray([1.0])}
+    grads = {"w": jnp.asarray([g])}
+    state = opt.init_opt_state(ocfg, params)
+    for t in range(3):
+        params2, state = opt.apply_updates(ocfg, params, grads, state,
+                                           step + t)
+        delta = abs(float(params2["w"][0] - params["w"][0]))
+        assert delta <= 0.011 * 1.2
+        params = params2
