@@ -15,6 +15,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     benches = [
         pb.bench_table1_step_time,
+        pb.bench_serving_throughput,
         pb.bench_fig6_null_step,
         pb.bench_fig7_scaling,
         pb.bench_fig8_backup_workers,

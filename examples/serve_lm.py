@@ -1,33 +1,41 @@
-"""Batched serving example: smoke-size model, batched requests through
-prefill + KV-cache decode (the paper's production-inference requirement,
-§2.1). Run: PYTHONPATH=src python examples/serve_lm.py
-"""
+"""Continuous-batching serving example: smoke-size gemma2 (alternating
+local/global attention + logit softcaps — both flow through the paged
+decode kernel) served through the block-paged engine with staggered
+arrivals and per-request horizons.
 
-import time
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
 
 import numpy as np
 
 from repro.config import get_config
 from repro.launch.mesh import make_host_mesh
-from repro.launch.serve import Request, Server
+from repro.serving import InferenceEngine, Request, SamplingParams
 
 
 def main():
-    cfg = get_config("gemma2_27b", smoke=True)   # local/global + softcaps
-    server = Server(cfg, make_host_mesh(1, 1), max_batch=8,
-                    prompt_len=32, max_len=96)
+    cfg = get_config("gemma2_27b", smoke=True)
+    mesh = make_host_mesh(1, 1)
+    eng = InferenceEngine(cfg, mesh, max_batch=4, block_size=16, max_len=96)
     rng = np.random.default_rng(0)
-    batches = 3
-    total_tok, t0 = 0, time.time()
-    for b in range(batches):
-        reqs = [Request(rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
-                        max_new=24) for _ in range(8)]
-        outs = server.serve_batch(reqs)
-        total_tok += sum(len(o) for o in outs)
-        print(f"[serve_lm] batch {b}: first output {outs[0][:6].tolist()}")
-    dt = time.time() - t0
-    print(f"[serve_lm] {total_tok} tokens in {dt:.2f}s "
-          f"({total_tok/dt:.1f} tok/s incl. compile)")
+    reqs = []
+    for i in range(10):
+        sp = SamplingParams(temperature=0.0 if i % 2 == 0 else 0.8,
+                            top_k=0 if i % 2 == 0 else 16, seed=i)
+        reqs.append(Request(
+            rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
+            max_new=8 + 4 * (i % 3), sampling=sp))
+    arrivals = [0, 0, 0, 2, 4, 6, 8, 10, 12, 14]
+    outs = eng.run(reqs, arrival_steps=arrivals)
+    for i, r in enumerate(reqs[:4]):
+        kind = "greedy" if r.sampling.temperature == 0 else "sampled"
+        print(f"[serve_lm] req {i} ({kind}, max_new={r.max_new}): "
+              f"{outs[r.rid][:6].tolist()}")
+    s = eng.stats
+    print(f"[serve_lm] {s['tokens']} tokens, {s['decode_steps']} decode "
+          f"steps, {s['prefills']} prefills, "
+          f"peak_block_util={s['peak_block_utilization']:.2f}, "
+          f"{s['tok_s']:.1f} tok/s incl. compile")
 
 
 if __name__ == "__main__":

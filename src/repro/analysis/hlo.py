@@ -209,9 +209,12 @@ def analyze(text: str, default_trip: int = 1) -> HloAnalysis:
     return ana
 
 
+# operands may carry inline types ("dot(f32[32,128]{1,0} %copy.1, ...)")
+# depending on the XLA version's HLO printer; both forms must parse.
+_OPERAND = r"(?:\w+\[[\d,]*\](?:\{[\d,]*\})?\s+)?%?([\w\.\-]+)"
 _DOT_RE = re.compile(
-    r"=\s*(\w+\[[\d,]*\])[^=]*\bdot\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)\)"
-    r".*?lhs_contracting_dims=\{([\d,]*)\}")
+    r"=\s*(\w+\[[\d,]*\])[^=]*\bdot\(\s*" + _OPERAND + r",\s*" + _OPERAND
+    + r"\).*?lhs_contracting_dims=\{([\d,]*)\}")
 _DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\w+\[[\d,]*\])")
 
 

@@ -1,0 +1,108 @@
+"""jax version compatibility shims.
+
+The repo targets the newer explicit-mesh API (``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``,
+``jax.shard_map``). On jax 0.4.x those names don't exist yet; the same
+machinery is spelled differently:
+
+  jax.set_mesh(m)                 ->  ``with m:`` (Mesh is a context manager
+                                      setting the thread-local physical mesh)
+  jax.sharding.get_abstract_mesh  ->  the thread-local physical mesh
+  jax.shard_map                   ->  jax.experimental.shard_map.shard_map
+  jax.make_mesh(axis_types=...)   ->  jax.make_mesh (no axis_types kwarg)
+
+``install()`` (run at import) patches the missing names onto jax itself so
+both repo code and tests can use one spelling everywhere. Each shim is only
+installed when the real name is absent, so this module is a no-op on newer
+jax. Import it before any mesh is built — ``repro/__init__.py`` and
+``tests/conftest.py`` both do.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+
+_INSTALLED = False
+
+
+def _supports_kwarg(fn, name: str) -> bool:
+    try:
+        return name in inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C funcs: assume yes
+        return True
+
+
+def install() -> None:
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    _INSTALLED = True
+
+    # --- jax.sharding.AxisType --------------------------------------------
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # --- jax.make_mesh(axis_types=...) ------------------------------------
+    if not _supports_kwarg(jax.make_mesh, "axis_types"):
+        _real_make_mesh = jax.make_mesh
+
+        @functools.wraps(_real_make_mesh)
+        def make_mesh(*args, axis_types=None, **kw):
+            return _real_make_mesh(*args, **kw)
+
+        jax.make_mesh = make_mesh
+
+    # --- jax.set_mesh ------------------------------------------------------
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    # --- jax.sharding.get_abstract_mesh ------------------------------------
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        from jax._src import mesh as _mesh_lib
+
+        def get_abstract_mesh():
+            """The ambient mesh (physical stands in for abstract on 0.4.x:
+            it has the same .shape mapping / .axis_names surface)."""
+            return _mesh_lib.thread_resources.env.physical_mesh
+
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    # --- jax.lax.axis_size --------------------------------------------------
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # psum of a literal 1 is folded to the axis size at trace time
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    # --- jax.shard_map ------------------------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      **kw):
+            # check_vma is the new-API spelling of check_rep; 0.4.x's
+            # checker predates psum-of-masked-gather patterns used here,
+            # so run unchecked either way.
+            return _shard_map(f, mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+        jax.shard_map = shard_map
+
+
+install()

@@ -58,6 +58,21 @@ def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
                              q_offset=q_offset)
 
 
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    window=None, cap=None, scale=None):
+    """Decode attention through a block table (serving hot path).
+    See kernels/paged_attention.py; the XLA path densifies the gather."""
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import paged_attention as pa
+        return pa.paged_attention(
+            q, k_pages, v_pages, block_tables, ctx_lens, window=window,
+            cap=cap, scale=scale, interpret=(mode == "interpret"))
+    from repro.kernels.ref import paged_attention_ref
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                               window=window, cap=cap, scale=scale)
+
+
 def ssd(x, dt, A, B, C, *, chunk, h0=None):
     mode = _use_pallas()
     if mode is not None:

@@ -1,0 +1,139 @@
+"""Paged-attention decode as a Pallas TPU kernel (vLLM-style).
+
+One query token per sequence attends to a KV cache that lives in fixed-size
+*blocks* scattered through two page pools shaped
+``(num_blocks, block_size, K, hd)``. A per-sequence *block table* names the
+pool rows holding that sequence's KV, in order; the serving block manager
+(``repro.serving.kv_cache``) owns the tables and the free list.
+
+Layout: grid = (B * K, max_blocks_per_seq) — one program per (sequence,
+kv-head) pair, with the kv-block index as the minormost (sequential) dim so
+an (m, l, acc) streaming-softmax state survives across blocks in VMEM
+scratch, exactly like ``flash_attention.py``. The block table and the
+context lengths are *scalar-prefetched* so the BlockSpec index maps can
+gather the right pool row per grid step — the pages are never densified.
+
+GQA uses the repo-wide g-major convention: q head h reads kv head h % K,
+so q is regrouped to (B*K, G, hd) and each program computes all G query
+heads of its kv head. Blocks wholly past the context length are skipped via
+``pl.when``; a sequence with ctx_len == 0 (inactive serving slot) produces
+zeros. ``interpret=True`` runs the same kernel on CPU for tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, cap, window,
+                   block_size, num_kv_heads):
+    bk = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+    b = bk // num_kv_heads
+    ctx = ctx_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    first_k = j * block_size
+    live = first_k < ctx
+    if window is not None:
+        live &= first_k + block_size - 1 > ctx - 1 - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)              # (G, hd)
+        k = k_ref[...].astype(jnp.float32)              # (block_size, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, block_size)
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        k_pos = first_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = k_pos < ctx
+        if window is not None:
+            mask &= k_pos > ctx - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_ref[...].astype(jnp.float32)              # (block_size, hd)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    window=None, cap=None, scale=None, interpret=False):
+    """q: (B, H, hd) one decode token per sequence.
+    k_pages/v_pages: (num_blocks, block_size, K, hd).
+    block_tables: (B, max_blocks_per_seq) int32 pool-row ids (padding rows
+    are ignored past ctx). ctx_lens: (B,) int32 — tokens visible per
+    sequence, 0 for an inactive slot (output row is zeros).
+    Returns (B, H, hd) in q.dtype.
+    """
+    B, H, hd = q.shape
+    _, block_size, K, _ = k_pages.shape
+    G = H // K
+    nb = block_tables.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+
+    # g-major regroup: (B, H, hd) -> (B, G, K, hd) -> (B*K, G, hd)
+    qg = q.reshape(B, G, K, hd).transpose(0, 2, 1, 3).reshape(B * K, G, hd)
+
+    def page_index(bk, j, bt_ref, ctx_ref):
+        return (bt_ref[bk // K, j], 0, bk % K, 0)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, cap=cap, window=window,
+        block_size=block_size, num_kv_heads=K)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * K, nb),
+        in_specs=[
+            pl.BlockSpec((None, G, hd),
+                         lambda bk, j, bt_ref, ctx_ref: (bk, 0, 0)),
+            pl.BlockSpec((None, block_size, None, hd), page_index),
+            pl.BlockSpec((None, block_size, None, hd), page_index),
+        ],
+        out_specs=pl.BlockSpec((None, G, hd),
+                               lambda bk, j, bt_ref, ctx_ref: (bk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
+      qg, k_pages, v_pages)
+
+    # (B*K, G, hd) -> (B, K, G, hd) -> g-major (B, G, K, hd) -> (B, H, hd)
+    return o.reshape(B, K, G, hd).transpose(0, 2, 1, 3).reshape(B, H, hd)

@@ -34,6 +34,42 @@ def attention_ref(q, k, v, *, causal=True, window=None, cap=None, scale=None,
     return o.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                        window=None, cap=None, scale=None):
+    """Paged decode attention oracle: densify the block-table gather, then
+    the exact masked-softmax math of ``models.attention._decode_attn_local``.
+
+    q: (B, H, hd); pages: (num_blocks, block_size, K, hd);
+    block_tables: (B, nb) int32; ctx_lens: (B,) int32 (0 => zero output).
+    """
+    B, H, hd = q.shape
+    _, bs, K, _ = k_pages.shape
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    # densify: (B, nb, bs, K, hd) -> (B, S, K, hd), S = nb * bs
+    k = k_pages[block_tables].reshape(B, -1, K, hd)
+    v = v_pages[block_tables].reshape(B, -1, K, hd)
+    S = k.shape[1]
+    qg = q.reshape(B, G, K, hd)
+    logits = jnp.einsum("bgkh,bskh->bgks", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    k_pos = jnp.arange(S)
+    ok = k_pos[None, :] < ctx_lens[:, None]                   # (B, S)
+    if window is not None:
+        ok &= k_pos[None, :] > ctx_lens[:, None] - 1 - window
+    logits = jnp.where(ok[:, None, None, :], logits, -1e30)
+    mx = logits.max(axis=-1)
+    p = jnp.exp(logits - mx[..., None])
+    p = jnp.where(ok[:, None, None, :], p, 0.0)   # ctx=0 rows -> all zero
+    sm = jnp.maximum(p.sum(axis=-1), 1e-37)
+    o = jnp.einsum("bgks,bskh->bgkh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o / sm[..., None]
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, B, C, h0=None):
     """Exact SSD recurrence, step by step (lax.scan over time).
 

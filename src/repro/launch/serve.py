@@ -1,9 +1,13 @@
-"""Batched serving driver: continuous decode over a request queue.
+"""Serving driver: continuous batching over a paged KV cache (default) or
+the legacy static-batch path.
 
 Mirrors the paper's training/inference duality (§2.1: same model code for
-both). Requests carry a prompt; the server batches them, runs one prefill,
-then decodes greedily with the KV cache until max_new or EOS. The decode
-step is the same jitted function the dry-run lowers at decode_32k.
+both). The engine path (``repro.serving``) admits requests from a queue as
+slots and cache blocks free up, retires each on its own EOS/max_new, and
+decodes every running request in one jitted step through per-request block
+tables — no padding to max_len, no decoding to the slowest request's
+horizon. The static ``Server`` is kept for SSM/enc-dec models the paged
+cache doesn't cover yet, and as the equivalence oracle in tests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke
 """
@@ -18,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat as _compat  # noqa: F401  (jax API shims)
 from repro.config import ParallelConfig, get_config
 from repro.models import api
 from repro.spmd import steps as steps_mod
@@ -30,6 +35,9 @@ class Request:
 
 
 class Server:
+    """Legacy static-batch server: pads every request to a common prompt
+    length, decodes max(max_new) steps for the whole batch."""
+
     def __init__(self, cfg, mesh, pcfg=None, max_batch: int = 8,
                  prompt_len: int = 32, max_len: int = 128, seed: int = 0):
         self.cfg, self.mesh = cfg, mesh
@@ -62,8 +70,8 @@ class Server:
                     (B, self.cfg.encoder_seq_len, self.cfg.d_model),
                     jnp.bfloat16)
             cache, tok = self._prefill(self.params, batch)
-            # grow cache to max_len capacity
-            cache = jax.tree.map(self._grow, cache)
+            # grow attention caches to max_len capacity
+            cache = jax.tree_util.tree_map_with_path(self._grow, cache)
             outs = [tok]
             max_new = max(r.max_new for r in requests)
             pos = jnp.full((B,), self.prompt_len, jnp.int32)
@@ -76,36 +84,107 @@ class Server:
         gen = np.stack([np.asarray(t) for t in outs], axis=1)
         return [gen[i, :requests[i].max_new] for i in range(B)]
 
-    def _grow(self, x):
-        # pad attention caches (L, B, S, K, hd) from prompt_len to max_len
-        if x.ndim == 5 and x.shape[2] == self.prompt_len and \
-                self.cfg.num_kv_heads and x.shape[-1] == self.cfg.head_dim:
-            pad = self.max_len - self.prompt_len
-            return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-        return x
+    def _grow(self, path, x):
+        """Pad self-attention K/V caches (L, B, S, K, hd) from prompt_len
+        to max_len. Keyed on the cache pytree *path* (leaves named "k"/"v"),
+        not shape sniffing: SSM conv/state leaves and enc-dec cross caches
+        ("xk"/"xv") whose shapes happen to collide are left alone."""
+        keys = [p.key for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        if not (keys and keys[-1] in ("k", "v")):
+            return x
+        if not (x.ndim == 5 and x.shape[2] == self.prompt_len
+                and x.shape[3] == self.cfg.num_kv_heads
+                and x.shape[-1] == self.cfg.head_dim):
+            return x
+        pad = self.max_len - self.prompt_len
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def poisson_arrival_steps(n: int, rate: float, rng) -> list[int]:
+    """Arrival step indices for a Poisson process with ``rate`` requests
+    per decode step (the engine's virtual clock)."""
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        out.append(int(t))
+    return out
+
+
+def run_engine(cfg, mesh, args):
+    from repro.serving import InferenceEngine, Request as EngRequest
+    from repro.serving.scheduler import SamplingParams
+    eng = InferenceEngine(cfg, mesh, max_batch=args.max_batch,
+                          block_size=args.block_size, max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        # staggered horizons: each request retires on its own max_new
+        max_new = max(1, args.max_new - (i % 4) * args.max_new // 4)
+        sp = SamplingParams(temperature=args.temperature,
+                            top_k=args.top_k, seed=i)
+        reqs.append(EngRequest(
+            rng.integers(0, cfg.vocab_size, args.prompt_len
+                         ).astype(np.int32),
+            max_new=max_new, sampling=sp, eos_id=args.eos_id))
+    arrivals = poisson_arrival_steps(len(reqs), args.rate, rng)
+    outs = eng.run(reqs, arrival_steps=arrivals)
+    s = eng.stats
+    print(f"[serve] engine=paged {len(reqs)} requests "
+          f"(poisson rate={args.rate}/step, arrivals={arrivals}), "
+          f"{s['tokens']} tokens in {s['wall_s']:.2f}s "
+          f"({s['tok_s']:.1f} tok/s incl. compile)")
+    print(f"[serve] decode_steps={s['decode_steps']} "
+          f"prefills={s['prefills']} preemptions={s['preemptions']} "
+          f"peak_block_util={s['peak_block_utilization']:.2f}")
+    print("[serve] sample output ids:", outs[reqs[0].rid][:8].tolist())
+    return outs
+
+
+def run_static(cfg, mesh, args):
+    server = Server(cfg, mesh, max_batch=args.max_batch,
+                    prompt_len=args.prompt_len, max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, args.prompt_len
+                                 ).astype(np.int32), max_new=args.max_new)
+            for _ in range(min(args.requests, args.max_batch))]
+    t0 = time.time()
+    outs = server.serve_batch(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(o) for o in outs)
+    print(f"[serve] engine=static {len(reqs)} requests, {n_tok} tokens "
+          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+    print("[serve] sample output ids:", outs[0][:8].tolist())
+    return outs
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4_9b")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="smoke-size config (default; --no-smoke for full)")
+    ap.add_argument("--engine", choices=("paged", "static"), default="paged")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="poisson arrivals per decode step (paged engine)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    cfg = get_config(args.arch, smoke=True)
+    cfg = get_config(args.arch, smoke=args.smoke)
     from repro.launch.mesh import make_host_mesh
     mesh = make_host_mesh(1, 1)
-    server = Server(cfg, mesh)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
-                    max_new=args.max_new)
-            for _ in range(args.requests)]
-    t0 = time.time()
-    outs = server.serve_batch(reqs)
-    dt = time.time() - t0
-    n_tok = sum(len(o) for o in outs)
-    print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s)")
-    print("[serve] sample output ids:", outs[0][:8].tolist())
+    if args.engine == "paged":
+        run_engine(cfg, mesh, args)
+    else:
+        run_static(cfg, mesh, args)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat as _compat  # noqa: F401  (jax API shims)
 from repro.config import (OptimizerConfig, ParallelConfig, ShapeConfig,
                           get_config)
 from repro.checkpoint.checkpoint import CheckpointManager

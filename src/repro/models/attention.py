@@ -293,6 +293,30 @@ def update_cache(cache, new, pos):
             cache, new, pos)
 
 
+def update_paged_cache(pages, new, block_tables, pos):
+    """Scatter one new KV row per sequence into its block-table page.
+
+    pages: (num_blocks, block_size, K, hd); new: (B, 1, K, hd); pos: (B,)
+    absolute write position. Inactive serving slots carry an all-zero table
+    row, so their writes land in the reserved trash block 0 (never allocated
+    to a request) and corrupt nothing.
+    """
+    bs = pages.shape[1]
+    block_ids = jnp.take_along_axis(
+        block_tables, (pos // bs)[:, None], axis=1)[:, 0]     # (B,)
+    return pages.at[block_ids, pos % bs].set(new[:, 0].astype(pages.dtype))
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                           window=None, cap=None, scale=None):
+    """Decode attention via block tables. q: (B,1,H,hd) -> (B,1,H,hd)."""
+    from repro.kernels import ops as kops
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    o = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                             ctx_lens, window=window, cap=cap, scale=scale)
+    return o[:, None].astype(q.dtype)
+
+
 def attention_scale(cfg: ModelConfig) -> float:
     return _attn_scale(cfg)
 

@@ -198,6 +198,31 @@ def sampled_softmax_loss(x, table, labels, sampled_ids, cfg: ModelConfig):
     )(x, table, labels, sampled_ids)
 
 
+def decode_logits(x, table, cfg: ModelConfig):
+    """Full vocab-parallel logits for sampling. x: (B, 1, d) -> (B, V_pad)
+    fp32, vocab-padding columns masked to NEG; the output stays sharded
+    over "model" on its vocab dim (the shard_map out_spec reassembles)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    B = x.shape[0]
+    dps = _dp_spec(mesh, B)
+    cap = cfg.final_logit_softcap
+
+    def body(x, table_l):
+        V_l = table_l.shape[0]
+        off = jax.lax.axis_index("model") * V_l
+        logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                            table_l.astype(jnp.float32))
+        logits = softcap(logits, cap)
+        col_ok = (off + jnp.arange(V_l)) < cfg.vocab_size
+        return jnp.where(col_ok[None, :], logits, NEG)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dps, None, None), P("model", None)),
+        out_specs=P(dps, "model"),
+    )(x, table)
+
+
 def decode_logits_argmax(x, table, cfg: ModelConfig):
     """Greedy next token from vocab-parallel logits. x: (B, 1, d) -> (B,)."""
     mesh = jax.sharding.get_abstract_mesh()

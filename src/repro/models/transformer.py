@@ -26,12 +26,13 @@ from repro.models import modules as m
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_scale, decode_attention,
-                                    init_attention, out_proj, project_kv,
+                                    init_attention, out_proj,
+                                    paged_decode_attention, project_kv,
                                     project_q, sharded_attention,
-                                    update_cache)
-from repro.models.embedding import (decode_logits_argmax, embed,
-                                    head_table, init_embedding, lm_loss,
-                                    sampled_softmax_loss)
+                                    update_cache, update_paged_cache)
+from repro.models.embedding import (decode_logits, decode_logits_argmax,
+                                    embed, head_table, init_embedding,
+                                    lm_loss, sampled_softmax_loss)
 from repro.models.layers import apply_norm, init_mlp, apply_mlp, init_norm, \
     rope_cos_sin
 
@@ -156,6 +157,25 @@ def _attn_decode(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
     return x + y, {"k": kc, "v": vc}
 
 
+def _attn_decode_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
+    """One-token attention against a block-paged KV cache (serving engine).
+    cache: {"k","v"} page pools (num_blocks, block_size, K, hd)."""
+    window = cfg.sliding_window if kind == "local" else None
+    h = apply_norm(bp["norm"], x, cfg)
+    q = project_q(bp["attn"], h, cfg, ctx["cos_sin"])
+    k, v = project_kv(bp["attn"], h, cfg, ctx["cos_sin"])
+    kc = update_paged_cache(cache["k"], k, ctx["block_tables"], ctx["pos"])
+    vc = update_paged_cache(cache["v"], v, ctx["block_tables"], ctx["pos"])
+    y = paged_decode_attention(q, kc, vc, ctx["block_tables"],
+                               ctx["ctx_lens"], window=window,
+                               cap=cfg.attn_logit_softcap,
+                               scale=attention_scale(cfg))
+    y = out_proj(bp["attn"], y, x.dtype)
+    if cfg.post_block_norm:
+        y = apply_norm(bp["post_norm"], y, cfg)
+    return x + y, {"k": kc, "v": vc}
+
+
 def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):
     """Returns (x, new_cache, aux)."""
     zero = jnp.zeros((), jnp.float32)
@@ -164,8 +184,13 @@ def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):
         if mode == "decode":
             y, st = ssm_mod.mamba_decode(bp["mamba"], h, cfg, cache)
             return x + y, st, zero
+        assert mode != "decode_paged", "paged decode: attention blocks only"
         y, st = ssm_mod.mamba_block(bp["mamba"], h, cfg)
         return x + y, (st if mode == "prefill" else None), zero
+    if mode == "decode_paged":
+        x, c = _attn_decode_paged(bp, x, cfg, ctx, cache, kind)
+        x, aux = _mlp_part(bp, x, cfg, ctx)
+        return x, c, aux
     if mode == "decode":
         x, c = _attn_decode(bp, x, cfg, ctx, cache, kind)
         x, aux = _mlp_part(bp, x, cfg, ctx)
@@ -229,7 +254,7 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
 
     def body(carry, xs):
         x, aux = carry
-        if mode == "decode":
+        if mode in ("decode", "decode_paged"):
             bslices, cslices = xs
         else:
             bslices, cslices = xs, None
@@ -244,7 +269,9 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
         if cfg.shared_attn_period:
             sp = params["shared"]
             cc = None if cslices is None else cslices.get("shared")
-            if mode == "decode":
+            if mode == "decode_paged":
+                x, c = _attn_decode_paged(sp, x, cfg, ctx, cc, "attn")
+            elif mode == "decode":
                 x, c = _attn_decode(sp, x, cfg, ctx, cc, "attn")
             else:
                 x, c = _attn_full(sp, x, cfg, ctx, "attn")
@@ -261,7 +288,8 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
                   if pcfg.remat == "dots" else None)
         body = jax.checkpoint(body, policy=policy, prevent_cse=False)
 
-    xs = (params["blocks"], cache) if mode == "decode" else params["blocks"]
+    xs = ((params["blocks"], cache) if mode in ("decode", "decode_paged")
+          else params["blocks"])
     (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
     return x, aux, caches
 
@@ -326,6 +354,54 @@ def prefill(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
     nxt = decode_logits_argmax(x[:, -1:], head_table(params["embed"], cfg),
                                cfg)
     return caches, nxt
+
+
+def prefill_logits(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
+    """Prefill returning full logits (for sampling) instead of argmax.
+
+    batch: tokens (B, S) [, "last" (B,) — index of the final *real* token
+    when the prompt is right-padded to a serving bucket; defaults to S-1].
+    Returns (cache, logits (B, V_pad) fp32).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"]["table"], tokens, cfg)
+    ctx = _make_ctx(cfg, _default_positions(batch, B, S), pcfg)
+    x, _, caches = _scan_periods(params, x, cfg, ctx, "prefill", pcfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    last = batch.get("last", jnp.full((B,), S - 1, jnp.int32))
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B,1,d)
+    logits = decode_logits(x_last, head_table(params["embed"], cfg), cfg)
+    return caches, logits
+
+
+def decode_step_paged(params, cache, batch, cfg: ModelConfig,
+                      pcfg: ParallelConfig):
+    """One decode token against a block-paged KV cache (all serving slots).
+
+    batch: token (B,1), pos (B,) write position, block_tables (B, nb),
+    ctx_lens (B,) — visible tokens incl. this one; 0 masks an idle slot.
+    cache: pytree of {"k","v"} page pools with leading layer-stack dim.
+    Returns (logits (B, V_pad) fp32, new_cache).
+    """
+    token, pos = batch["token"], batch["pos"]
+    B = token.shape[0]
+    x = embed(params["embed"]["table"], token, cfg)
+    if cfg.rope_sections is not None:
+        positions = jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+    else:
+        positions = pos[:, None]
+    cos_sin = (rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta,
+                            cfg.rope_sections) if cfg.num_heads else None)
+    ctx = {"cos_sin": cos_sin, "pos": pos,
+           "block_tables": batch["block_tables"],
+           "ctx_lens": batch["ctx_lens"],
+           "moe_f2d": bool(pcfg and pcfg.expert_ff_2d)}
+    x, _, new_cache = _scan_periods(params, x, cfg, ctx, "decode_paged",
+                                    ParallelConfig(remat="none"), cache)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = decode_logits(x, head_table(params["embed"], cfg), cfg)
+    return logits, new_cache
 
 
 def decode_step(params, cache, batch, cfg: ModelConfig,

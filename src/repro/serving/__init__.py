@@ -1,0 +1,9 @@
+"""Continuous-batching serving subsystem (paged KV cache + scheduler +
+engine). See README.md in this directory for the architecture."""
+
+from repro.serving.engine import InferenceEngine
+from repro.serving.kv_cache import BlockManager, init_paged_cache
+from repro.serving.scheduler import Request, SamplingParams, Scheduler
+
+__all__ = ["InferenceEngine", "BlockManager", "init_paged_cache",
+           "Request", "SamplingParams", "Scheduler"]

@@ -1,0 +1,241 @@
+"""Continuous-batching inference engine over a block-paged KV cache.
+
+One ``InferenceEngine`` owns: model params, the paged KV pools, a
+``BlockManager`` and a ``Scheduler``. Its loop interleaves prefill for
+joining requests with single decode steps over *all* running slots:
+
+    while work:
+        admit waiting requests into free slots (FCFS, blocks permitting)
+        prefill each joiner (bucketed prompt), scatter its KV into pages,
+            sample its first token
+        ensure every running slot owns blocks for the next token
+            (preempting the newest requests when the pool runs dry)
+        one jitted decode step: mixed batch of every running slot,
+            gathering KV through block tables; per-slot sampling
+        retire slots that hit EOS or max_new (frees blocks immediately)
+
+The decode step always runs at the full ``max_batch`` width — idle slots
+are masked with ctx_len 0 and their KV writes land in the trash block — so
+there is exactly one compiled decode executable regardless of occupancy.
+Prefill compiles once per prompt-length bucket (power-of-two blocks).
+
+Time is measured in decode steps; request arrivals are given in the same
+unit so runs are deterministic and testable (launch/serve.py maps Poisson
+arrival times onto it).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.models import api
+from repro.models import transformer
+from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes,
+                                    init_paged_cache)
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import Request, SamplingParams, Scheduler
+
+__all__ = ["InferenceEngine", "Request", "SamplingParams"]
+
+
+def _engine_supported(cfg: ModelConfig) -> str | None:
+    if cfg.ssm is not None:
+        return "SSM state is not block-pageable"
+    if cfg.encoder_layers:
+        return "encoder-decoder cross caches are not paged"
+    if cfg.frontend is not None:
+        return "modality frontends need per-request position streams"
+    return None
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, mesh, pcfg: ParallelConfig = None,
+                 *, max_batch: int = 8, block_size: int = 16,
+                 max_len: int = 128, num_blocks: int | None = None,
+                 seed: int = 0, params=None):
+        why = _engine_supported(cfg)
+        if why is not None:
+            raise ValueError(
+                f"paged engine does not support {cfg.name}: {why}; "
+                "use the static launch.serve.Server path")
+        self.cfg, self.mesh = cfg, mesh
+        self.pcfg = pcfg or ParallelConfig(remat="none")
+        self.block_size = block_size
+        self.max_len = max_len
+        self.max_blocks_per_seq = -(-max_len // block_size)
+        if num_blocks is None:
+            # every slot can reach max_len; +1 for the trash block
+            num_blocks = max_batch * self.max_blocks_per_seq + 1
+        self.bm = BlockManager(num_blocks, block_size)
+        self.sched = Scheduler(self.bm, max_batch, self.max_blocks_per_seq)
+        self.max_batch = max_batch
+
+        with jax.set_mesh(mesh):
+            if params is None:
+                params_f32, _ = api.init_model(cfg, jax.random.key(seed))
+                params = jax.tree.map(
+                    lambda x: x.astype(jnp.bfloat16), params_f32)
+            self.params = params
+            self.cache = init_paged_cache(cfg, num_blocks, block_size)
+
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill_logits(p, b, cfg, self.pcfg))
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+        self._sample1 = jax.jit(sample_tokens)
+
+        self.stats = {"decode_steps": 0, "prefills": 0, "preemptions": 0,
+                      "tokens": 0, "peak_block_utilization": 0.0,
+                      "kv_cache_mib": round(
+                          num_blocks * block_bytes(cfg, block_size)
+                          / 2 ** 20, 3)}
+        self.step_count = 0           # virtual clock: one decode = one step
+
+    # -- jitted bodies -----------------------------------------------------
+
+    def _decode_fn(self, params, cache, token, pos, tables, active,
+                   temps, top_ks, seeds, counters):
+        ctx_lens = jnp.where(active, pos + 1, 0)
+        logits, cache = transformer.decode_step_paged(
+            params, cache,
+            {"token": token[:, None], "pos": pos,
+             "block_tables": tables, "ctx_lens": ctx_lens},
+            self.cfg, self.pcfg)
+        nxt = sample_tokens(logits, temps, top_ks, seeds, counters)
+        return nxt, cache
+
+    def _scatter_fn(self, cache, dense, row):
+        """Write a prefilled dense cache (leaves (NP, 1, Sp, K, hd)) into
+        the page pools at the block ids in ``row`` ((Sp/bs,) int32)."""
+        bs = self.block_size
+
+        def write(pages, d):
+            NP, _, Sp, K, hd = d.shape
+            vals = d.reshape(NP, Sp // bs, bs, K, hd).astype(pages.dtype)
+            return pages.at[:, row].set(vals)
+
+        return jax.tree.map(write, cache, dense)
+
+    # -- host-side steps ---------------------------------------------------
+
+    def _bucket_blocks(self, n_tokens: int) -> int:
+        nb = self.bm.blocks_for(n_tokens)
+        b = 1
+        while b < nb:
+            b *= 2
+        return min(b, self.max_blocks_per_seq)
+
+    def _join(self, slot: int, req: Request) -> None:
+        toks = req.prefill_tokens()
+        P = len(toks)
+        nb = self._bucket_blocks(P)
+        Sp = nb * self.block_size
+        assert P <= Sp, (P, Sp)
+        padded = np.zeros((1, Sp), np.int32)
+        padded[0, :P] = toks
+        batch = {"tokens": jnp.asarray(padded),
+                 "last": jnp.asarray([P - 1], jnp.int32)}
+        dense, logits = self._prefill(self.params, batch)
+        # scatter into the owned blocks; bucket overhang goes to trash
+        row = self.bm.table(req.rid)
+        row = (row + [TRASH_BLOCK] * nb)[:nb]
+        self.cache = self._scatter(self.cache, dense,
+                                   jnp.asarray(row, jnp.int32))
+        sp = req.sampling
+        tok = self._sample1(
+            logits, jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.seed], jnp.int32),
+            jnp.asarray([len(req.out)], jnp.int32))
+        req.out.append(int(tok[0]))
+        self.stats["prefills"] += 1
+        self.stats["tokens"] += 1
+        if req.done:
+            self.sched.retire(slot)
+
+    def _decode_all(self) -> None:
+        B, nbmax = self.max_batch, self.max_blocks_per_seq
+        token = np.zeros(B, np.int32)
+        pos = np.zeros(B, np.int32)
+        tables = np.zeros((B, nbmax), np.int32)
+        active = np.zeros(B, bool)
+        temps = np.zeros(B, np.float32)
+        top_ks = np.zeros(B, np.int32)
+        seeds = np.zeros(B, np.int32)
+        counters = np.zeros(B, np.int32)
+        for slot, req in self.sched.running.items():
+            active[slot] = True
+            token[slot] = req.out[-1]
+            pos[slot] = req.context_len - 1      # write position of out[-1]
+            row = self.bm.table(req.rid)
+            tables[slot, :len(row)] = row
+            temps[slot] = req.sampling.temperature
+            top_ks[slot] = req.sampling.top_k
+            seeds[slot] = req.sampling.seed
+            counters[slot] = len(req.out)
+        nxt, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(token), jnp.asarray(pos),
+            jnp.asarray(tables), jnp.asarray(active), jnp.asarray(temps),
+            jnp.asarray(top_ks), jnp.asarray(seeds), jnp.asarray(counters))
+        nxt = np.asarray(nxt)
+        for slot, req in list(self.sched.running.items()):
+            if not active[slot]:
+                continue
+            req.out.append(int(nxt[slot]))
+            self.stats["tokens"] += 1
+            if req.done:
+                self.sched.retire(slot)
+        self.stats["decode_steps"] += 1
+        self.step_count += 1
+
+    def step(self) -> None:
+        """One engine iteration: admit + prefill joiners, then one decode."""
+        with jax.set_mesh(self.mesh):
+            for slot, req in self.sched.admit():
+                self._join(slot, req)
+            self.sched.ensure_decode_capacity()
+            self.stats["preemptions"] = self.sched.n_preemptions
+            util = self.bm.stats().utilization
+            self.stats["peak_block_utilization"] = max(
+                self.stats["peak_block_utilization"], util)
+            if self.sched.running:
+                self._decode_all()
+
+    def run(self, requests: list[Request],
+            arrival_steps: list[int] | None = None) -> dict[int, np.ndarray]:
+        """Serve ``requests`` to completion. ``arrival_steps[i]`` is the
+        decode-step index at which request i becomes visible (default: all
+        at step 0). Returns {rid: generated token array}; wall-clock and
+        throughput land in ``self.stats``."""
+        if arrival_steps is None:
+            arrival_steps = [0] * len(requests)
+        for r in requests:
+            self.sched.validate(r)         # fail fast, not at arrival time
+        pending = deque(sorted(zip(arrival_steps, range(len(requests))),
+                               key=lambda t: t[0]))
+        t0 = time.time()
+        tok0 = self.stats["tokens"]
+        while pending or self.sched.has_work:
+            while pending and pending[0][0] <= self.step_count:
+                self.sched.add(requests[pending.popleft()[1]])
+            if not self.sched.has_work and pending:
+                self.step_count = pending[0][0]      # idle: jump the clock
+                continue
+            before = (self.stats["tokens"], self.stats["decode_steps"])
+            self.step()
+            if (self.stats["tokens"], self.stats["decode_steps"]) == before:
+                raise RuntimeError(
+                    "engine stuck: head-of-line request cannot be admitted "
+                    "with an empty machine (block pool or max_batch too "
+                    f"small?) — {self.bm.stats()}")
+        dt = time.time() - t0
+        self.stats["wall_s"] = round(dt, 3)
+        self.stats["tok_s"] = round((self.stats["tokens"] - tok0)
+                                    / max(dt, 1e-9), 1)
+        return {r.rid: np.asarray(r.out, np.int32) for r in requests}

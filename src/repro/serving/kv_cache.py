@@ -1,0 +1,149 @@
+"""Block-table KV-cache management for continuous-batching serving.
+
+The device side is a pytree of page pools, one {"k","v"} pair per scanned
+layer stack, each shaped ``(NP, num_blocks, block_size, K, hd)`` — the
+vLLM layout with this repo's layer-stacked leading dim. Every layer uses
+the *same* block ids (one table per sequence, all layers), so allocating a
+block grants one ``block_size``-token slice of KV capacity across the whole
+model at once.
+
+The host side is ``BlockManager``: a free list plus per-request block
+tables. Block 0 is reserved as the *trash block* — idle serving slots carry
+all-zero table rows, so the decode step's unconditional KV write for an
+inactive slot lands there and corrupts nothing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.transformer import period_structure
+
+TRASH_BLOCK = 0
+
+
+def attn_layer_stacks(cfg: ModelConfig) -> list[str]:
+    """Names of the scanned cache sub-stacks that hold attention KV."""
+    kinds, _ = period_structure(cfg)
+    out = [f"sub{i}" for i, k in enumerate(kinds) if k != "mamba"]
+    if cfg.shared_attn_period:
+        out.append("shared")
+    return out
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16):
+    """Zero page pools matching ``transformer.decode_step_paged``."""
+    kinds, NP = period_structure(cfg)
+    shape = (NP, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    cache = {}
+    for i, kind in enumerate(kinds):
+        if kind == "mamba":
+            raise ValueError("paged cache: attention-only models")
+        cache[f"sub{i}"] = {"k": jnp.zeros(shape, dtype),
+                            "v": jnp.zeros(shape, dtype)}
+    if cfg.shared_attn_period:
+        cache["shared"] = {"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)}
+    return cache
+
+
+def block_bytes(cfg: ModelConfig, block_size: int, dtype_bytes: int = 2):
+    """HBM bytes one block id costs across every layer's k+v pools."""
+    kinds, NP = period_structure(cfg)
+    n_stacks = len(attn_layer_stacks(cfg))
+    return (2 * NP * n_stacks * block_size * cfg.num_kv_heads
+            * cfg.head_dim * dtype_bytes)
+
+
+@dataclass
+class CacheStats:
+    num_blocks: int          # allocatable blocks (excludes the trash block)
+    blocks_in_use: int
+    num_tables: int
+
+    @property
+    def utilization(self) -> float:
+        return self.blocks_in_use / max(self.num_blocks, 1)
+
+
+class BlockManager:
+    """Free-list allocator over page-pool rows + per-request block tables.
+
+    Pure host-side bookkeeping: allocation never touches device memory
+    (pages are preallocated); it only decides which pool rows a request's
+    tokens may occupy.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 2 and block_size >= 1
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list: recently-freed (cache-warm) blocks are reused first
+        self._free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        self._tables: dict[int, list[int]] = {}
+
+    # -- queries ----------------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= self.num_free
+
+    def table(self, rid: int) -> list[int]:
+        return list(self._tables[rid])
+
+    def stats(self) -> CacheStats:
+        in_use = sum(len(t) for t in self._tables.values())
+        return CacheStats(num_blocks=self.num_blocks - 1,
+                          blocks_in_use=in_use,
+                          num_tables=len(self._tables))
+
+    # -- mutations --------------------------------------------------------
+
+    def allocate(self, rid: int, n_tokens: int) -> list[int]:
+        """Fresh table covering n_tokens. Raises KeyError on double-alloc,
+        MemoryError when the pool can't cover it (caller admits later)."""
+        if rid in self._tables:
+            raise KeyError(f"request {rid} already has a table")
+        n = self.blocks_for(n_tokens)
+        if n > self.num_free:
+            raise MemoryError(f"need {n} blocks, have {self.num_free}")
+        self._tables[rid] = [self._free.pop() for _ in range(n)]
+        return self.table(rid)
+
+    def ensure(self, rid: int, n_tokens: int) -> bool:
+        """Grow rid's table to cover n_tokens. False (no change) on OOM —
+        the caller preempts somebody and retries."""
+        t = self._tables[rid]
+        need = self.blocks_for(n_tokens) - len(t)
+        if need <= 0:
+            return True
+        if need > self.num_free:
+            return False
+        for _ in range(need):
+            t.append(self._free.pop())
+        return True
+
+    def free(self, rid: int) -> None:
+        for b in self._tables.pop(rid):
+            self._free.append(b)
+
+    def check(self) -> None:
+        """Invariants: disjoint tables, no trash block, full accounting."""
+        seen: set[int] = set()
+        for rid, t in self._tables.items():
+            for b in t:
+                assert b != TRASH_BLOCK, (rid, t)
+                assert b not in seen, f"block {b} double-owned"
+                seen.add(b)
+        assert not (seen & set(self._free)), "free list overlaps tables"
+        assert len(seen) + len(self._free) == self.num_blocks - 1

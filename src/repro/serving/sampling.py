@@ -1,0 +1,32 @@
+"""Per-request token sampling for the serving engine.
+
+Every slot samples with its own ``SamplingParams``: temperature 0 is exact
+greedy (argmax, no RNG), otherwise temperature + optional top-k truncation
+with a counter-based PRNG — key = fold_in(fold_in(PRNGKey(seed), counter))
+so a request's stream is reproducible regardless of batch composition,
+preemption, or which slot it lands in.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1.0e30
+
+
+def sample_tokens(logits, temps, top_ks, seeds, counters):
+    """logits: (B, V) fp32; temps/seeds/counters: (B,); top_ks: (B,) int32
+    (0 disables truncation). Returns (B,) int32 tokens."""
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(lg, t, k, s, c):
+        key = jax.random.fold_in(jax.random.PRNGKey(s), c)
+        lg = lg / jnp.maximum(t, 1e-6)
+        kth = jnp.sort(lg)[V - jnp.clip(k, 1, V)]        # k-th largest
+        lg = jnp.where((k > 0) & (lg < kth), NEG, lg)
+        return jax.random.categorical(key, lg).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(logits, temps, top_ks, seeds, counters)
+    return jnp.where(temps <= 0.0, greedy, sampled)

@@ -1,0 +1,169 @@
+"""Continuous-batching scheduler: FCFS admission, join-on-free-slot,
+retire-on-EOS/max-new, preempt-to-waiting when the block pool runs dry.
+
+Pure host-side and jax-free so the policy is unit-testable in isolation.
+The engine drives it:
+
+    joins = sched.admit()            # waiting -> running (slot + blocks)
+    preempted = sched.ensure_decode_capacity()
+    ... run prefills / one decode step ...
+    sched.retire(slot)               # EOS or max_new reached
+
+Preemption follows vLLM's recompute strategy: the victim (most recently
+joined — oldest requests are closest to done) releases its blocks and
+returns to the *front* of the waiting queue carrying the tokens generated
+so far; on re-admission it prefills prompt+generated and continues, so
+greedy outputs are preemption-invariant.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.kv_cache import BlockManager
+
+_RID = itertools.count()
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0       # 0 => greedy
+    top_k: int = 0                 # 0 => no truncation
+    seed: int = 0
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                      # (prompt_len,) int32
+    max_new: int = 16
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    eos_id: int | None = None
+    rid: int = field(default_factory=lambda: next(_RID))
+    out: list[int] = field(default_factory=list)
+    n_preempted: int = 0
+
+    @property
+    def done(self) -> bool:
+        if len(self.out) >= self.max_new:
+            return True
+        return bool(self.out) and self.eos_id is not None \
+            and self.out[-1] == self.eos_id
+
+    def prefill_tokens(self) -> np.ndarray:
+        """Prompt plus already-generated tokens (recompute after preempt)."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out, np.int32)])
+
+    @property
+    def context_len(self) -> int:
+        return len(self.prompt) + len(self.out)
+
+
+class Scheduler:
+    def __init__(self, bm: BlockManager, max_batch: int,
+                 max_blocks_per_seq: int):
+        self.bm = bm
+        self.max_batch = max_batch
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}      # slot -> request
+        self._join_order: list[int] = []           # slots, oldest first
+        self.n_preemptions = 0
+
+    # -- queries ----------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.max_batch) if s not in self.running]
+
+    # -- transitions ------------------------------------------------------
+
+    def validate(self, req: Request) -> None:
+        # The decode loop conservatively holds blocks for context+1, so a
+        # request's full horizon must fit its block-table row — reject at
+        # submission instead of crashing mid-run when the table overflows.
+        horizon = len(req.prompt) + req.max_new
+        capacity = self.max_blocks_per_seq * self.bm.block_size
+        if horizon > capacity:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {horizon} tokens "
+                f"exceeds max_len capacity {capacity}")
+
+    def add(self, req: Request) -> None:
+        self.validate(req)
+        self.waiting.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """FCFS: admit waiting requests while a slot and blocks exist.
+        Blocks are allocated for the prefill context plus one decode token
+        so a join can never be preempted before its first step."""
+        joins = []
+        free = self.free_slots()
+        while self.waiting and free:
+            req = self.waiting[0]
+            need = req.context_len + 1
+            if self.bm.blocks_for(need) > self.max_blocks_per_seq:
+                raise ValueError(
+                    f"request {req.rid}: {need} tokens exceeds "
+                    f"max_blocks_per_seq={self.max_blocks_per_seq}")
+            if not self.bm.can_allocate(need):
+                break
+            self.waiting.popleft()
+            slot = free.pop(0)
+            self.bm.allocate(req.rid, need)
+            self.running[slot] = req
+            self._join_order.append(slot)
+            joins.append((slot, req))
+        return joins
+
+    def ensure_decode_capacity(self) -> list[Request]:
+        """Before a decode step every running request must own blocks for
+        context_len + 1 (the token about to be written). Preempts newest
+        requests until the survivors fit. Returns the preempted requests."""
+        preempted: list[Request] = []
+        for slot in list(self._join_order):             # oldest first
+            req = self.running.get(slot)
+            if req is None:                             # already preempted
+                continue
+            while not self.bm.ensure(req.rid, req.context_len + 1):
+                victim_slot = self._pick_victim()       # newest running
+                if victim_slot is None or (victim_slot == slot
+                                           and not self.bm.num_free
+                                           and len(self.running) == 1):
+                    raise MemoryError(
+                        f"block pool too small for request {req.rid} "
+                        f"at {req.context_len + 1} tokens")
+                preempted.append(self._preempt(victim_slot))
+                if victim_slot == slot:
+                    break        # self-preempted: back to waiting, move on
+        return preempted
+
+    def _pick_victim(self) -> int | None:
+        for slot in reversed(self._join_order):         # newest first
+            if slot in self.running:
+                return slot
+        return None
+
+    def _preempt(self, slot: int) -> Request:
+        req = self.running.pop(slot)
+        self._join_order.remove(slot)
+        self.bm.free(req.rid)
+        req.n_preempted += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(req)
+        return req
+
+    def retire(self, slot: int) -> Request:
+        req = self.running.pop(slot)
+        self._join_order.remove(slot)
+        self.bm.free(req.rid)
+        return req
