@@ -67,6 +67,28 @@ def bench_table1_step_time(rows):
 # ---------------------------------------------------------------------------
 
 
+def _latency_percentiles(eng, reqs):
+    """p50/p95 TTFT and end-to-end latency, in engine steps and wall
+    seconds, from the engine's per-request latency records."""
+    recs = [eng.stats["latency"][r.rid] for r in reqs]
+    ttft_steps = [r["first_token_step"] - r["arrival_step"] for r in recs]
+    ttft_wall = [r["first_token_wall"] - r["arrival_wall"] for r in recs]
+    e2e_steps = [r["done_step"] - r["arrival_step"] for r in recs]
+    e2e_wall = [r["done_wall"] - r["arrival_wall"] for r in recs]
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q))
+
+    return (f"ttft_p50={pct(ttft_steps, 50):.0f}steps/"
+            f"{pct(ttft_wall, 50) * 1e3:.0f}ms "
+            f"ttft_p95={pct(ttft_steps, 95):.0f}steps/"
+            f"{pct(ttft_wall, 95) * 1e3:.0f}ms "
+            f"e2e_p50={pct(e2e_steps, 50):.0f}steps/"
+            f"{pct(e2e_wall, 50) * 1e3:.0f}ms "
+            f"e2e_p95={pct(e2e_steps, 95):.0f}steps/"
+            f"{pct(e2e_wall, 95) * 1e3:.0f}ms")
+
+
 def bench_serving_throughput(rows):
     from repro.config import get_config
     from repro.launch.mesh import make_host_mesh
@@ -82,20 +104,40 @@ def bench_serving_throughput(rows):
     # ragged horizons: static batching decodes max() steps for everyone
     max_news = [4 + 4 * (i % 4) for i in range(n_req)]
 
+    # prefix caching OFF for the headline row: the warmup run (for jit
+    # compile) uses the same prompts, and cache hits would let the timed
+    # run skip nearly all prefill — not a fair comparison against the
+    # static server's full prefills
     eng = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,
-                          max_len=128)
+                          max_len=128, enable_prefix_caching=False)
     reqs = [Request(p, max_new=mn) for p, mn in zip(prompts, max_news)]
     eng.run(reqs)                               # includes compile
-    steps0 = eng.stats["decode_steps"]
+    steps0 = eng.stats["steps"]
     t0 = time.perf_counter()
     eng2_reqs = [Request(p, max_new=mn) for p, mn in zip(prompts, max_news)]
     eng.run(eng2_reqs)
     dt_eng = time.perf_counter() - t0
     n_tok = sum(mn for mn in max_news)
-    eng_steps = eng.stats["decode_steps"] - steps0
+    eng_steps = eng.stats["steps"] - steps0
     rows.append(_csv("serving/paged_engine", dt_eng / n_tok * 1e6,
                      f"tok_s={n_tok/dt_eng:.1f} "
-                     f"slot_steps={eng_steps * max_batch}"))
+                     f"slot_steps={eng_steps * max_batch} "
+                     + _latency_percentiles(eng, eng2_reqs)))
+
+    # the prefix-cache benefit, measured explicitly: same prompts through
+    # a caching engine whose cache the warmup run populated
+    engc = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,
+                           max_len=128, params=eng.params)
+    engc.run([Request(p, max_new=mn) for p, mn in zip(prompts, max_news)])
+    t0 = time.perf_counter()
+    engc_reqs = [Request(p, max_new=mn) for p, mn in zip(prompts, max_news)]
+    engc.run(engc_reqs)
+    dt_c = time.perf_counter() - t0
+    rows.append(_csv("serving/paged_engine_prefix_cached",
+                     dt_c / n_tok * 1e6,
+                     f"tok_s={n_tok/dt_c:.1f} "
+                     f"cache_hit_tokens={engc.stats['cache_hit_tokens']} "
+                     + _latency_percentiles(engc, engc_reqs)))
 
     server = Server(cfg, mesh, max_batch=max_batch, prompt_len=prompt_len,
                     max_len=128)

@@ -32,8 +32,9 @@ def main():
         print(f"[serve_lm] req {i} ({kind}, max_new={r.max_new}): "
               f"{outs[r.rid][:6].tolist()}")
     s = eng.stats
-    print(f"[serve_lm] {s['tokens']} tokens, {s['decode_steps']} decode "
-          f"steps, {s['prefills']} prefills, "
+    print(f"[serve_lm] {s['tokens']} tokens, {s['steps']} steps, "
+          f"{s['prefill_chunks']} prefill chunks, "
+          f"{s['cache_hit_tokens']} cache-hit tokens, "
           f"peak_block_util={s['peak_block_utilization']:.2f}, "
           f"{s['tok_s']:.1f} tok/s incl. compile")
 

@@ -73,6 +73,26 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                                window=window, cap=cap, scale=scale)
 
 
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                            q_lens, *, window=None, cap=None, scale=None):
+    """Chunked-prefill attention through a block table: C queries per
+    sequence, causally masked against the paged context. See
+    kernels/paged_attention.py; the XLA path densifies the gather and
+    mirrors ``dense_attention``'s rounding so chunked and monolithic
+    prefill stay greedy-equivalent on CPU."""
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import paged_attention as pa
+        return pa.paged_prefill_attention(
+            q, k_pages, v_pages, block_tables, ctx_lens, q_lens,
+            window=window, cap=cap, scale=scale,
+            interpret=(mode == "interpret"))
+    from repro.models.attention import paged_chunk_attention_xla
+    return paged_chunk_attention_xla(
+        q, k_pages, v_pages, block_tables, ctx_lens, q_lens,
+        window=window, cap=cap, scale=scale)
+
+
 def ssd(x, dt, A, B, C, *, chunk, h0=None):
     mode = _use_pallas()
     if mode is not None:

@@ -18,6 +18,12 @@ so q is regrouped to (B*K, G, hd) and each program computes all G query
 heads of its kv head. Blocks wholly past the context length are skipped via
 ``pl.when``; a sequence with ctx_len == 0 (inactive serving slot) produces
 zeros. ``interpret=True`` runs the same kernel on CPU for tests.
+
+``paged_prefill_attention`` is the multi-query sibling for chunked prefill:
+C chunk queries per sequence, each causally masked at its absolute position
+against the same paged context (C == 1 reproduces the decode kernel
+exactly). The serving engine uses it to stream long prompts in while other
+sequences keep decoding.
 """
 
 from __future__ import annotations
@@ -137,3 +143,133 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
 
     # (B*K, G, hd) -> (B, K, G, hd) -> g-major (B, G, K, hd) -> (B, H, hd)
     return o.reshape(B, K, G, hd).transpose(0, 2, 1, 3).reshape(B, H, hd)
+
+
+def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, cap, window,
+                  block_size, num_kv_heads, num_groups):
+    """Multi-query sibling of ``_decode_kernel`` for chunked prefill.
+
+    One program owns all C chunk queries of one (sequence, kv-head) pair;
+    queries are causally masked per absolute position against the paged
+    context, so C == 1 reduces exactly to the decode kernel. Rows past
+    ``q_len`` are padding: every key masked, and the masked-row guard in
+    the streaming softmax (p zeroed where masked, not exp(0)) keeps their
+    (l, acc) at zero so they finalize to zeros.
+    """
+    bk = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+    b = bk // num_kv_heads
+    ctx = ctx_ref[b]                 # visible tokens incl. the whole chunk
+    qlen = qlen_ref[b]
+    qstart = ctx - qlen              # absolute position of chunk row 0
+    G = num_groups
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    first_k = j * block_size
+    live = first_k < ctx
+    if window is not None:
+        # earliest in-window key over the chunk: qstart - window + 1
+        live &= first_k + block_size - 1 > qstart - window
+
+    @pl.when(live)
+    def _compute():
+        C = q_ref.shape[0]
+        q = q_ref[...].astype(jnp.float32).reshape(C * G, -1)  # (C*G, hd)
+        k = k_ref[...].astype(jnp.float32)              # (block_size, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (C*G, block_size)
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        k_pos = first_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        q_pos = qstart + row
+        mask = (k_pos <= q_pos) & (row < qlen)
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        # masked-row guard: exp(NEG_INF - NEG_INF) would be 1, poisoning
+        # fully-masked (padding) rows — zero those probabilities instead
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_ref[...].astype(jnp.float32)              # (block_size, hd)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        C = o_ref.shape[0]
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype).reshape(
+            C, G, -1)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                            q_lens, *, window=None, cap=None, scale=None,
+                            interpret=False):
+    """Chunked-prefill attention against a paged KV cache.
+
+    q: (B, C, H, hd) — C chunk queries per sequence; row i sits at absolute
+    position ``ctx_lens[b] - q_lens[b] + i`` and attends causally to the
+    paged context (the chunk's own KV must already be scattered into the
+    pages). q_lens: (B,) valid rows; padding rows produce zeros, as does a
+    wholly inactive sequence (q_len == 0). Returns (B, C, H, hd) in q.dtype.
+    """
+    B, C, H, hd = q.shape
+    _, block_size, K, _ = k_pages.shape
+    G = H // K
+    nb = block_tables.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+
+    # g-major regroup: (B,C,H,hd) -> (B,C,G,K,hd) -> (B*K, C, G, hd)
+    qg = q.reshape(B, C, G, K, hd).transpose(0, 3, 1, 2, 4) \
+        .reshape(B * K, C, G, hd)
+
+    def page_index(bk, j, bt_ref, ctx_ref, qlen_ref):
+        return (bt_ref[bk // K, j], 0, bk % K, 0)
+
+    kernel = functools.partial(
+        _chunk_kernel, scale=scale, cap=cap, window=window,
+        block_size=block_size, num_kv_heads=K, num_groups=G)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B * K, nb),
+        in_specs=[
+            pl.BlockSpec((None, C, G, hd),
+                         lambda bk, j, *_: (bk, 0, 0, 0)),
+            pl.BlockSpec((None, block_size, None, hd), page_index),
+            pl.BlockSpec((None, block_size, None, hd), page_index),
+        ],
+        out_specs=pl.BlockSpec((None, C, G, hd),
+                               lambda bk, j, *_: (bk, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * G, 1), jnp.float32),
+            pltpu.VMEM((C * G, 1), jnp.float32),
+            pltpu.VMEM((C * G, hd), jnp.float32),
+        ],
+    )
+
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, C, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
+      q_lens.astype(jnp.int32), qg, k_pages, v_pages)
+
+    # (B*K, C, G, hd) -> (B, K, C, G, hd) -> (B, C, G, K, hd) -> (B, C, H, hd)
+    return o.reshape(B, K, C, G, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B, C, H, hd)

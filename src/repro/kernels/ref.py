@@ -64,10 +64,54 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
     p = jnp.exp(logits - mx[..., None])
     p = jnp.where(ok[:, None, None, :], p, 0.0)   # ctx=0 rows -> all zero
     sm = jnp.maximum(p.sum(axis=-1), 1e-37)
-    o = jnp.einsum("bgks,bskh->bgkh", p.astype(v.dtype), v,
+    # repo-wide rounding convention (matches dense_attention): normalize in
+    # fp32, cast, then multiply — so decode-written KV is bit-identical to
+    # the same position recomputed by prefill/chunked-prefill.
+    p = (p / sm[..., None]).astype(v.dtype)
+    o = jnp.einsum("bgks,bskh->bgkh", p, v,
                    preferred_element_type=jnp.float32)
-    o = o / sm[..., None]
     return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                                q_lens, *, window=None, cap=None, scale=None):
+    """Multi-query (chunked-prefill) paged attention oracle.
+
+    q: (B, C, H, hd) — row i of sequence b is the query at absolute
+    position ``ctx_lens[b] - q_lens[b] + i`` and attends causally to keys
+    ``[0, position]`` gathered through the block table (the chunk's own KV
+    is assumed already scattered into the pages). Rows at i >= q_lens[b]
+    are padding and produce zeros. q_lens == 1 reduces to the decode
+    oracle above.
+    """
+    B, C, H, hd = q.shape
+    _, bs, K, _ = k_pages.shape
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, -1, K, hd)
+    v = v_pages[block_tables].reshape(B, -1, K, hd)
+    S = k.shape[1]
+    qg = q.reshape(B, C, G, K, hd)
+    logits = jnp.einsum("bcgkh,bskh->bcgks", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    q_pos = (ctx_lens - q_lens)[:, None] + jnp.arange(C)[None]      # (B, C)
+    k_pos = jnp.arange(S)
+    ok = k_pos[None, None] <= q_pos[..., None]                      # causal
+    if window is not None:
+        ok &= k_pos[None, None] > q_pos[..., None] - window
+    ok &= (jnp.arange(C)[None] < q_lens[:, None])[..., None]        # padding
+    ok = ok[:, :, None, None, :]                                    # g,k dims
+    logits = jnp.where(ok, logits, -1e30)
+    mx = logits.max(axis=-1)
+    p = jnp.exp(logits - mx[..., None])
+    p = jnp.where(ok, p, 0.0)             # fully-masked rows -> all zero
+    sm = jnp.maximum(p.sum(axis=-1), 1e-37)
+    p = (p / sm[..., None]).astype(v.dtype)   # normalize-then-cast; see
+    o = jnp.einsum("bcgks,bskh->bcgkh", p, v,  # paged_attention_ref
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, C, H, hd).astype(q.dtype)
 
 
 def ssd_ref(x, dt, A, B, C, h0=None):

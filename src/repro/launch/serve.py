@@ -115,7 +115,9 @@ def run_engine(cfg, mesh, args):
     from repro.serving import InferenceEngine, Request as EngRequest
     from repro.serving.scheduler import SamplingParams
     eng = InferenceEngine(cfg, mesh, max_batch=args.max_batch,
-                          block_size=args.block_size, max_len=args.max_len)
+                          block_size=args.block_size, max_len=args.max_len,
+                          max_num_batched_tokens=args.max_batched_tokens,
+                          enable_prefix_caching=not args.no_prefix_caching)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -134,8 +136,11 @@ def run_engine(cfg, mesh, args):
           f"(poisson rate={args.rate}/step, arrivals={arrivals}), "
           f"{s['tokens']} tokens in {s['wall_s']:.2f}s "
           f"({s['tok_s']:.1f} tok/s incl. compile)")
-    print(f"[serve] decode_steps={s['decode_steps']} "
-          f"prefills={s['prefills']} preemptions={s['preemptions']} "
+    print(f"[serve] steps={s['steps']} "
+          f"prefill_chunks={s['prefill_chunks']} "
+          f"preemptions={s['preemptions']} "
+          f"cache_hit_tokens={s['cache_hit_tokens']} "
+          f"cow_copies={s['cow_copies']} "
           f"peak_block_util={s['peak_block_utilization']:.2f}")
     print("[serve] sample output ids:", outs[reqs[0].rid][:8].tolist())
     return outs
@@ -171,6 +176,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-batched-tokens", type=int, default=None,
+                    help="per-step token budget across decodes + one "
+                    "prefill chunk (default: max_batch + 2*block_size)")
+    ap.add_argument("--no-prefix-caching", action="store_true",
+                    help="disable cross-request KV block sharing")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="poisson arrivals per decode step (paged engine)")
     ap.add_argument("--temperature", type=float, default=0.0)

@@ -219,9 +219,12 @@ def _decode_attn_local(q, k, v, pos, seq_offset, *, window, cap, scale):
     mx = logits.max(axis=-1)
     p = jnp.exp(logits - mx[..., None])
     sm = jnp.maximum(p.sum(axis=-1), 1e-37)
-    o = jnp.einsum("bgks,bskh->bgkh", p.astype(v.dtype), v,
-                   preferred_element_type=jnp.float32)
-    o = o / sm[..., None]
+    # normalize in fp32 then cast, like dense_attention — keeps the static
+    # Server's decode bit-identical to the paged engine's (which matters
+    # for the serving equivalence tests, where one path recomputes tokens
+    # the other produced incrementally)
+    o = jnp.einsum("bgks,bskh->bgkh", (p / sm[..., None]).astype(v.dtype),
+                   v, preferred_element_type=jnp.float32)
     lse = mx + jnp.log(sm)
     return o, lse
 
@@ -307,6 +310,26 @@ def update_paged_cache(pages, new, block_tables, pos):
     return pages.at[block_ids, pos % bs].set(new[:, 0].astype(pages.dtype))
 
 
+def update_paged_cache_chunk(pages, new, block_tables, q_start, q_lens):
+    """Scatter a chunk of new KV rows per sequence into its pages.
+
+    pages: (num_blocks, block_size, K, hd); new: (B, C, K, hd); q_start:
+    (B,) absolute position of chunk row 0; q_lens: (B,) valid rows. Rows
+    past q_lens are routed to the reserved trash block 0 (never allocated
+    to a request), like an idle decode slot's write.
+    """
+    bs = pages.shape[1]
+    B, C = new.shape[:2]
+    nb = block_tables.shape[1]
+    pos = q_start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]   # (B, C)
+    idx = jnp.clip(pos // bs, 0, nb - 1)
+    blk = jnp.take_along_axis(block_tables, idx, axis=1)            # (B, C)
+    valid = jnp.arange(C)[None] < q_lens[:, None]
+    blk = jnp.where(valid, blk, 0)                  # trash the padding rows
+    return pages.at[blk.reshape(-1), (pos % bs).reshape(-1)].set(
+        new.reshape(B * C, *new.shape[2:]).astype(pages.dtype))
+
+
 def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                            window=None, cap=None, scale=None):
     """Decode attention via block tables. q: (B,1,H,hd) -> (B,1,H,hd)."""
@@ -315,6 +338,55 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     o = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
                              ctx_lens, window=window, cap=cap, scale=scale)
     return o[:, None].astype(q.dtype)
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                          q_lens, *, window=None, cap=None, scale=None):
+    """Chunked-prefill attention via block tables: the C queries of one
+    prompt chunk attend causally to the paged context (prior chunks' KV
+    read through the table; this chunk's KV already scattered in).
+    q: (B,C,H,hd) -> (B,C,H,hd)."""
+    from repro.kernels import ops as kops
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    o = kops.paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                     ctx_lens, q_lens, window=window,
+                                     cap=cap, scale=scale)
+    return o.astype(q.dtype)
+
+
+def paged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
+                              q_lens, *, window=None, cap=None, scale=None):
+    """Pure-XLA chunked-prefill path: densify the block-table gather, then
+    ``dense_attention``'s exact op sequence (fp32 logits, *normalized*
+    softmax cast to bf16, then p @ v) with per-sequence query offsets.
+
+    Mirroring ``dense_attention`` bit-for-bit matters: the engine promises
+    greedy outputs identical to a monolithic prefill, and the masked-out
+    padded keys contribute exact fp32 zeros, so only the probability
+    rounding order could diverge — this keeps it the same. Padding rows
+    (i >= q_lens) emit garbage; their KV went to the trash block and the
+    engine discards their logits.
+    """
+    B, C, H, hd = q.shape
+    _, bs, K, _ = k_pages.shape
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, -1, K, hd)
+    v = v_pages[block_tables].reshape(B, -1, K, hd)
+    S = k.shape[1]
+    qg = q.reshape(B, C, G, K, hd)
+    logits = jnp.einsum("bqgkh,bskh->bgkqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    q_pos = (ctx_lens - q_lens)[:, None] + jnp.arange(C)[None]      # (B, C)
+    d = q_pos[..., None] - jnp.arange(S)[None, None]                # (B,C,S)
+    ok = d >= 0
+    if window is not None:
+        ok &= d < window
+    logits = jnp.where(ok[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bgkqs,bskh->bqgkh", p, v)
+    return o.reshape(B, C, H, hd).astype(q.dtype)
 
 
 def attention_scale(cfg: ModelConfig) -> float:

@@ -9,8 +9,10 @@ one tile of ``block_pattern``, or ``shared_attn_period`` mamba blocks + one
 application of the shared attention block for zamba2). Scanning keeps the
 HLO small at 64 layers and is what the dry-run compiles.
 
-Three entry points per model: ``loss_fn`` (train), ``prefill`` (build cache,
-emit first token), ``decode_step`` (one token against the cache).
+Entry points per model: ``loss_fn`` (train), ``prefill`` (build cache, emit
+first token), ``decode_step`` (one token against the cache), and the paged
+serving pair ``prefill_chunk_paged`` / ``decode_step_paged`` (prompt chunks
+and single tokens against block-paged page pools).
 """
 
 from __future__ import annotations
@@ -27,9 +29,11 @@ from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_scale, decode_attention,
                                     init_attention, out_proj,
+                                    paged_chunk_attention,
                                     paged_decode_attention, project_kv,
                                     project_q, sharded_attention,
-                                    update_cache, update_paged_cache)
+                                    update_cache, update_paged_cache,
+                                    update_paged_cache_chunk)
 from repro.models.embedding import (decode_logits, decode_logits_argmax,
                                     embed, head_table, init_embedding,
                                     lm_loss, sampled_softmax_loss)
@@ -176,6 +180,29 @@ def _attn_decode_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
     return x + y, {"k": kc, "v": vc}
 
 
+def _attn_chunk_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
+    """Chunked-prefill attention against a block-paged KV cache: scatter
+    this chunk's KV into the pages, then attend the chunk's queries
+    causally over the whole paged context (prior chunks included).
+    cache: {"k","v"} page pools (num_blocks, block_size, K, hd)."""
+    window = cfg.sliding_window if kind == "local" else None
+    h = apply_norm(bp["norm"], x, cfg)
+    q = project_q(bp["attn"], h, cfg, ctx["cos_sin"])
+    k, v = project_kv(bp["attn"], h, cfg, ctx["cos_sin"])
+    kc = update_paged_cache_chunk(cache["k"], k, ctx["block_tables"],
+                                  ctx["q_start"], ctx["q_lens"])
+    vc = update_paged_cache_chunk(cache["v"], v, ctx["block_tables"],
+                                  ctx["q_start"], ctx["q_lens"])
+    y = paged_chunk_attention(q, kc, vc, ctx["block_tables"],
+                              ctx["ctx_lens"], ctx["q_lens"], window=window,
+                              cap=cfg.attn_logit_softcap,
+                              scale=attention_scale(cfg))
+    y = out_proj(bp["attn"], y, x.dtype)
+    if cfg.post_block_norm:
+        y = apply_norm(bp["post_norm"], y, cfg)
+    return x + y, {"k": kc, "v": vc}
+
+
 def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):
     """Returns (x, new_cache, aux)."""
     zero = jnp.zeros((), jnp.float32)
@@ -184,9 +211,14 @@ def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):
         if mode == "decode":
             y, st = ssm_mod.mamba_decode(bp["mamba"], h, cfg, cache)
             return x + y, st, zero
-        assert mode != "decode_paged", "paged decode: attention blocks only"
+        assert mode not in ("decode_paged", "chunk_paged"), \
+            "paged serving: attention blocks only"
         y, st = ssm_mod.mamba_block(bp["mamba"], h, cfg)
         return x + y, (st if mode == "prefill" else None), zero
+    if mode == "chunk_paged":
+        x, c = _attn_chunk_paged(bp, x, cfg, ctx, cache, kind)
+        x, aux = _mlp_part(bp, x, cfg, ctx)
+        return x, c, aux
     if mode == "decode_paged":
         x, c = _attn_decode_paged(bp, x, cfg, ctx, cache, kind)
         x, aux = _mlp_part(bp, x, cfg, ctx)
@@ -254,7 +286,7 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
 
     def body(carry, xs):
         x, aux = carry
-        if mode in ("decode", "decode_paged"):
+        if mode in ("decode", "decode_paged", "chunk_paged"):
             bslices, cslices = xs
         else:
             bslices, cslices = xs, None
@@ -269,7 +301,9 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
         if cfg.shared_attn_period:
             sp = params["shared"]
             cc = None if cslices is None else cslices.get("shared")
-            if mode == "decode_paged":
+            if mode == "chunk_paged":
+                x, c = _attn_chunk_paged(sp, x, cfg, ctx, cc, "attn")
+            elif mode == "decode_paged":
                 x, c = _attn_decode_paged(sp, x, cfg, ctx, cc, "attn")
             elif mode == "decode":
                 x, c = _attn_decode(sp, x, cfg, ctx, cc, "attn")
@@ -288,7 +322,8 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
                   if pcfg.remat == "dots" else None)
         body = jax.checkpoint(body, policy=policy, prevent_cse=False)
 
-    xs = ((params["blocks"], cache) if mode in ("decode", "decode_paged")
+    xs = ((params["blocks"], cache)
+          if mode in ("decode", "decode_paged", "chunk_paged")
           else params["blocks"])
     (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
     return x, aux, caches
@@ -356,23 +391,37 @@ def prefill(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
     return caches, nxt
 
 
-def prefill_logits(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
-    """Prefill returning full logits (for sampling) instead of argmax.
+def prefill_chunk_paged(params, cache, batch, cfg: ModelConfig,
+                        pcfg: ParallelConfig):
+    """One chunk of prompt prefill against a block-paged KV cache.
 
-    batch: tokens (B, S) [, "last" (B,) — index of the final *real* token
-    when the prompt is right-padded to a serving bucket; defaults to S-1].
-    Returns (cache, logits (B, V_pad) fp32).
+    batch: tokens (B, C) the chunk's token slice (right-padded), q_start
+    (B,) absolute position of column 0 (= tokens already computed), q_lens
+    (B,) valid columns, block_tables (B, nb), ctx_lens (B,) visible tokens
+    including this chunk (= q_start + q_lens).
+    Returns (logits (B, V_pad) fp32 at each row's last valid token,
+    new_cache). The engine samples from the logits only when the chunk
+    completes its prompt.
     """
     tokens = batch["tokens"]
-    B, S = tokens.shape
+    B, C = tokens.shape
+    assert cfg.rope_sections is None, "chunked prefill: no M-RoPE frontends"
     x = embed(params["embed"]["table"], tokens, cfg)
-    ctx = _make_ctx(cfg, _default_positions(batch, B, S), pcfg)
-    x, _, caches = _scan_periods(params, x, cfg, ctx, "prefill", pcfg)
+    positions = batch["q_start"][:, None] + jnp.arange(C, dtype=jnp.int32)
+    cos_sin = (rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta,
+                            cfg.rope_sections) if cfg.num_heads else None)
+    ctx = {"cos_sin": cos_sin, "pos": None,
+           "q_start": batch["q_start"], "q_lens": batch["q_lens"],
+           "block_tables": batch["block_tables"],
+           "ctx_lens": batch["ctx_lens"],
+           "moe_f2d": bool(pcfg and pcfg.expert_ff_2d)}
+    x, _, new_cache = _scan_periods(params, x, cfg, ctx, "chunk_paged",
+                                    ParallelConfig(remat="none"), cache)
     x = apply_norm(params["final_norm"], x, cfg)
-    last = batch.get("last", jnp.full((B,), S - 1, jnp.int32))
+    last = jnp.clip(batch["q_lens"] - 1, 0, C - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B,1,d)
     logits = decode_logits(x_last, head_table(params["embed"], cfg), cfg)
-    return caches, logits
+    return logits, new_cache
 
 
 def decode_step_paged(params, cache, batch, cfg: ModelConfig,

@@ -1,31 +1,38 @@
 """Continuous-batching inference engine over a block-paged KV cache.
 
 One ``InferenceEngine`` owns: model params, the paged KV pools, a
-``BlockManager`` and a ``Scheduler``. Its loop interleaves prefill for
-joining requests with single decode steps over *all* running slots:
+``BlockManager`` and a ``Scheduler``. Every iteration is **one jitted
+step** spending a token budget (``max_num_batched_tokens``):
 
     while work:
-        admit waiting requests into free slots (FCFS, blocks permitting)
-        prefill each joiner (bucketed prompt), scatter its KV into pages,
-            sample its first token
-        ensure every running slot owns blocks for the next token
-            (preempting the newest requests when the pool runs dry)
-        one jitted decode step: mixed batch of every running slot,
-            gathering KV through block tables; per-slot sampling
-        retire slots that hit EOS or max_new (frees blocks immediately)
+        plan = scheduler.schedule()       # decodes (1 tok each) + one
+                                          # prefill chunk, within budget
+        apply the plan's COW page copies
+        one jitted step:
+            chunk: C-token slice of one prompt, attention against the
+                paged cache (prior chunks read through the block table,
+                this chunk's KV scattered in), logits at its last token
+            decode: full max_batch-wide batch, one token per running slot
+            per-slot sampling over decode logits + the chunk's logits
+        append sampled tokens; retire on EOS/max_new; publish content
+            hashes of newly-full blocks (prefix cache)
 
-The decode step always runs at the full ``max_batch`` width — idle slots
-are masked with ctx_len 0 and their KV writes land in the trash block — so
-there is exactly one compiled decode executable regardless of occupancy.
-Prefill compiles once per prompt-length bucket (power-of-two blocks).
+The decode half always runs at the full ``max_batch`` width — idle slots
+are masked with ctx_len 0 and their KV writes land in the trash block.
+The chunk half always runs at the fixed ``chunk_width``. So there are
+exactly **two** compiled executables (step with / without a chunk)
+regardless of occupancy or prompt length — the per-prompt-length bucket
+compilation family is gone, and a long prompt streams in chunk by chunk
+while running decodes keep making progress every step.
 
-Time is measured in decode steps; request arrivals are given in the same
+Time is measured in engine steps; request arrivals are given in the same
 unit so runs are deterministic and testable (launch/serve.py maps Poisson
 arrival times onto it).
 """
 
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
 
@@ -39,9 +46,14 @@ from repro.models import transformer
 from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes,
                                     init_paged_cache)
 from repro.serving.sampling import sample_tokens
-from repro.serving.scheduler import Request, SamplingParams, Scheduler
+from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
+                                     StepPlan)
 
 __all__ = ["InferenceEngine", "Request", "SamplingParams"]
+
+# oldest per-request latency records are dropped past this, so a
+# long-running serve loop doesn't grow stats["latency"] without bound
+LATENCY_RECORD_CAP = 4096
 
 
 def _engine_supported(cfg: ModelConfig) -> str | None:
@@ -58,6 +70,9 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, mesh, pcfg: ParallelConfig = None,
                  *, max_batch: int = 8, block_size: int = 16,
                  max_len: int = 128, num_blocks: int | None = None,
+                 max_num_batched_tokens: int | None = None,
+                 enable_prefix_caching: bool = True,
+                 debug_invariants: bool = False,
                  seed: int = 0, params=None):
         why = _engine_supported(cfg)
         if why is not None:
@@ -72,9 +87,19 @@ class InferenceEngine:
         if num_blocks is None:
             # every slot can reach max_len; +1 for the trash block
             num_blocks = max_batch * self.max_blocks_per_seq + 1
+        if max_num_batched_tokens is None:
+            max_num_batched_tokens = max_batch + 2 * block_size
+        self.max_num_batched_tokens = max_num_batched_tokens
+        # static chunk-buffer width: a full decode batch plus a full chunk
+        # together stay within the budget; no chunk can exceed max_len, so
+        # a huge budget must not widen the compiled buffer past it
+        self.chunk_width = min(max_num_batched_tokens - max_batch, max_len)
         self.bm = BlockManager(num_blocks, block_size)
-        self.sched = Scheduler(self.bm, max_batch, self.max_blocks_per_seq)
+        self.sched = Scheduler(self.bm, max_batch, self.max_blocks_per_seq,
+                               max_num_batched_tokens, self.chunk_width,
+                               enable_prefix_caching=enable_prefix_caching)
         self.max_batch = max_batch
+        self.debug_invariants = debug_invariants
 
         with jax.set_mesh(mesh):
             if params is None:
@@ -84,135 +109,214 @@ class InferenceEngine:
             self.params = params
             self.cache = init_paged_cache(cfg, num_blocks, block_size)
 
-        self._prefill = jax.jit(
-            lambda p, b: transformer.prefill_logits(p, b, cfg, self.pcfg))
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
-        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
-        self._sample1 = jax.jit(sample_tokens)
+        self._step_chunk = jax.jit(
+            functools.partial(self._step_fn, has_chunk=True),
+            donate_argnums=(1,))
+        self._step_plain = jax.jit(
+            functools.partial(self._step_fn, has_chunk=False),
+            donate_argnums=(1,))
+        self._copy_block = jax.jit(self._copy_block_fn, donate_argnums=(0,))
 
-        self.stats = {"decode_steps": 0, "prefills": 0, "preemptions": 0,
-                      "tokens": 0, "peak_block_utilization": 0.0,
+        self.stats = {"steps": 0, "prefill_chunks": 0, "preemptions": 0,
+                      "tokens": 0, "cache_hit_tokens": 0, "cow_copies": 0,
+                      "peak_block_utilization": 0.0, "peak_blocks_in_use": 0,
+                      "latency": {},
                       "kv_cache_mib": round(
                           num_blocks * block_bytes(cfg, block_size)
                           / 2 ** 20, 3)}
-        self.step_count = 0           # virtual clock: one decode = one step
+        self.step_count = 0           # virtual clock: one step() = one tick
 
     # -- jitted bodies -----------------------------------------------------
 
-    def _decode_fn(self, params, cache, token, pos, tables, active,
-                   temps, top_ks, seeds, counters):
-        ctx_lens = jnp.where(active, pos + 1, 0)
-        logits, cache = transformer.decode_step_paged(
+    def _step_fn(self, params, cache, c_tok, c_start, c_len, c_table,
+                 d_tok, d_pos, d_tables, d_active,
+                 temps, top_ks, seeds, counters, *, has_chunk):
+        """One budgeted step: optional prefill chunk, then the wide decode.
+
+        The two halves touch disjoint pages — a request is either in the
+        chunk or the decode batch, shared prefix blocks are read-only to
+        both (COW guarantees no write lands in a shared block) — so their
+        in-step order is irrelevant.
+
+        Sampling rows: 0..B-1 are the decode slots, row B is the chunk's
+        last valid token (consumed only when the chunk finishes a prompt).
+        """
+        if has_chunk:
+            logits_c, cache = transformer.prefill_chunk_paged(
+                params, cache,
+                {"tokens": c_tok, "q_start": c_start, "q_lens": c_len,
+                 "block_tables": c_table, "ctx_lens": c_start + c_len},
+                self.cfg, self.pcfg)
+        ctx_lens = jnp.where(d_active, d_pos + 1, 0)
+        logits_d, cache = transformer.decode_step_paged(
             params, cache,
-            {"token": token[:, None], "pos": pos,
-             "block_tables": tables, "ctx_lens": ctx_lens},
+            {"token": d_tok[:, None], "pos": d_pos,
+             "block_tables": d_tables, "ctx_lens": ctx_lens},
             self.cfg, self.pcfg)
+        if not has_chunk:
+            logits_c = jnp.zeros_like(logits_d[:1])
+        logits = jnp.concatenate([logits_d, logits_c], axis=0)
         nxt = sample_tokens(logits, temps, top_ks, seeds, counters)
         return nxt, cache
 
-    def _scatter_fn(self, cache, dense, row):
-        """Write a prefilled dense cache (leaves (NP, 1, Sp, K, hd)) into
-        the page pools at the block ids in ``row`` ((Sp/bs,) int32)."""
-        bs = self.block_size
+    def _copy_block_fn(self, cache, src, dst):
+        """Copy one pool row (every layer stack, k and v) — the device half
+        of a copy-on-write."""
+        return jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]), cache)
 
-        def write(pages, d):
-            NP, _, Sp, K, hd = d.shape
-            vals = d.reshape(NP, Sp // bs, bs, K, hd).astype(pages.dtype)
-            return pages.at[:, row].set(vals)
+    # -- host-side step ----------------------------------------------------
 
-        return jax.tree.map(write, cache, dense)
+    def _build_arrays(self, plan: StepPlan):
+        B, C, nbmax = self.max_batch, self.chunk_width, self.max_blocks_per_seq
+        d_tok = np.zeros(B, np.int32)
+        d_pos = np.zeros(B, np.int32)
+        d_tables = np.zeros((B, nbmax), np.int32)
+        d_active = np.zeros(B, bool)
+        temps = np.zeros(B + 1, np.float32)
+        top_ks = np.zeros(B + 1, np.int32)
+        seeds = np.zeros(B + 1, np.int32)
+        counters = np.zeros(B + 1, np.int32)
 
-    # -- host-side steps ---------------------------------------------------
+        def samp(i, req):
+            temps[i] = req.sampling.temperature
+            top_ks[i] = req.sampling.top_k
+            seeds[i] = req.sampling.seed
+            counters[i] = len(req.out)
 
-    def _bucket_blocks(self, n_tokens: int) -> int:
-        nb = self.bm.blocks_for(n_tokens)
-        b = 1
-        while b < nb:
-            b *= 2
-        return min(b, self.max_blocks_per_seq)
+        for slot, req in plan.decodes:
+            d_active[slot] = True
+            d_tok[slot] = req.out[-1]
+            d_pos[slot] = req.context_len - 1    # write position of out[-1]
+            row = self.bm.table(req.rid)
+            d_tables[slot, :len(row)] = row
+            samp(slot, req)
 
-    def _join(self, slot: int, req: Request) -> None:
-        toks = req.prefill_tokens()
-        P = len(toks)
-        nb = self._bucket_blocks(P)
-        Sp = nb * self.block_size
-        assert P <= Sp, (P, Sp)
-        padded = np.zeros((1, Sp), np.int32)
-        padded[0, :P] = toks
-        batch = {"tokens": jnp.asarray(padded),
-                 "last": jnp.asarray([P - 1], jnp.int32)}
-        dense, logits = self._prefill(self.params, batch)
-        # scatter into the owned blocks; bucket overhang goes to trash
-        row = self.bm.table(req.rid)
-        row = (row + [TRASH_BLOCK] * nb)[:nb]
-        self.cache = self._scatter(self.cache, dense,
-                                   jnp.asarray(row, jnp.int32))
-        sp = req.sampling
-        tok = self._sample1(
-            logits, jnp.asarray([sp.temperature], jnp.float32),
-            jnp.asarray([sp.top_k], jnp.int32),
-            jnp.asarray([sp.seed], jnp.int32),
-            jnp.asarray([len(req.out)], jnp.int32))
-        req.out.append(int(tok[0]))
-        self.stats["prefills"] += 1
+        c_tok = np.zeros((1, C), np.int32)
+        c_start = np.zeros(1, np.int32)
+        c_len = np.zeros(1, np.int32)
+        c_table = np.full((1, nbmax), TRASH_BLOCK, np.int32)
+        if plan.chunk is not None:
+            _, req, n = plan.chunk
+            toks = req.prefill_tokens()
+            c_tok[0, :n] = toks[req.num_computed:req.num_computed + n]
+            c_start[0] = req.num_computed
+            c_len[0] = n
+            row = self.bm.table(req.rid)
+            c_table[0, :len(row)] = row
+            samp(B, req)
+        return (jnp.asarray(c_tok), jnp.asarray(c_start),
+                jnp.asarray(c_len), jnp.asarray(c_table),
+                jnp.asarray(d_tok), jnp.asarray(d_pos),
+                jnp.asarray(d_tables), jnp.asarray(d_active),
+                jnp.asarray(temps), jnp.asarray(top_ks),
+                jnp.asarray(seeds), jnp.asarray(counters))
+
+    def _lat(self, rid: int) -> dict:
+        return self.stats["latency"].setdefault(rid, {})
+
+    def _note_arrival(self, req: Request) -> None:
+        # monotonic: the *_wall fields are only ever differenced, and an
+        # NTP step must not produce negative latencies
+        self._lat(req.rid).update(arrival_step=self.step_count,
+                                  arrival_wall=time.monotonic())
+
+    def _append_token(self, slot: int, req: Request, tok: int) -> None:
+        req.out.append(tok)
         self.stats["tokens"] += 1
+        if len(req.out) == 1:
+            self._lat(req.rid).update(first_token_step=self.step_count,
+                                      first_token_wall=time.monotonic())
+        self.sched.note_progress(req)
         if req.done:
+            self._lat(req.rid).update(done_step=self.step_count,
+                                      done_wall=time.monotonic())
+            lat = self.stats["latency"]
+            if len(lat) > LATENCY_RECORD_CAP:
+                # evict oldest *completed* records only — an in-flight
+                # request must keep its arrival marks for TTFT reporting
+                for rid in list(lat):
+                    if "done_step" in lat[rid]:
+                        del lat[rid]
+                        if len(lat) <= LATENCY_RECORD_CAP:
+                            break
             self.sched.retire(slot)
 
-    def _decode_all(self) -> None:
-        B, nbmax = self.max_batch, self.max_blocks_per_seq
-        token = np.zeros(B, np.int32)
-        pos = np.zeros(B, np.int32)
-        tables = np.zeros((B, nbmax), np.int32)
-        active = np.zeros(B, bool)
-        temps = np.zeros(B, np.float32)
-        top_ks = np.zeros(B, np.int32)
-        seeds = np.zeros(B, np.int32)
-        counters = np.zeros(B, np.int32)
-        for slot, req in self.sched.running.items():
-            active[slot] = True
-            token[slot] = req.out[-1]
-            pos[slot] = req.context_len - 1      # write position of out[-1]
-            row = self.bm.table(req.rid)
-            tables[slot, :len(row)] = row
-            temps[slot] = req.sampling.temperature
-            top_ks[slot] = req.sampling.top_k
-            seeds[slot] = req.sampling.seed
-            counters[slot] = len(req.out)
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(token), jnp.asarray(pos),
-            jnp.asarray(tables), jnp.asarray(active), jnp.asarray(temps),
-            jnp.asarray(top_ks), jnp.asarray(seeds), jnp.asarray(counters))
-        nxt = np.asarray(nxt)
-        for slot, req in list(self.sched.running.items()):
-            if not active[slot]:
-                continue
-            req.out.append(int(nxt[slot]))
-            self.stats["tokens"] += 1
-            if req.done:
-                self.sched.retire(slot)
-        self.stats["decode_steps"] += 1
-        self.step_count += 1
-
-    def step(self) -> None:
-        """One engine iteration: admit + prefill joiners, then one decode."""
+    def step(self) -> bool:
+        """One engine iteration. Returns True when any work ran."""
         with jax.set_mesh(self.mesh):
-            for slot, req in self.sched.admit():
-                self._join(slot, req)
-            self.sched.ensure_decode_capacity()
+            plan = self.sched.schedule()
             self.stats["preemptions"] = self.sched.n_preemptions
-            util = self.bm.stats().utilization
+            self.stats["cache_hit_tokens"] = self.sched.cache_hit_tokens
+            st = self.bm.stats()
             self.stats["peak_block_utilization"] = max(
-                self.stats["peak_block_utilization"], util)
-            if self.sched.running:
-                self._decode_all()
+                self.stats["peak_block_utilization"], st.utilization)
+            self.stats["peak_blocks_in_use"] = max(
+                self.stats["peak_blocks_in_use"], st.blocks_in_use)
+            if self.debug_invariants:
+                self._check_invariants(plan)
+            for src, dst in plan.copies:
+                self.stats["cow_copies"] += 1
+                self.cache = self._copy_block(
+                    self.cache, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
+            if plan.scheduled_tokens == 0:
+                # no compute, but an admission (e.g. a full prefix-cache
+                # hit that is immediately decode-ready) is still progress
+                if plan.admitted:
+                    self.step_count += 1
+                return plan.admitted > 0
+            arrays = self._build_arrays(plan)
+            step_exec = (self._step_chunk if plan.chunk is not None
+                         else self._step_plain)
+            nxt, self.cache = step_exec(self.params, self.cache, *arrays)
+            nxt = np.asarray(nxt)
+            for slot, req in plan.decodes:
+                req.num_computed += 1
+                self._append_token(slot, req, int(nxt[slot]))
+            if plan.chunk is not None:
+                slot, req, n = plan.chunk
+                req.num_computed += n
+                self.stats["prefill_chunks"] += 1
+                if req.num_computed == req.context_len:
+                    self._append_token(slot, req, int(nxt[self.max_batch]))
+                else:
+                    self.sched.note_progress(req)
+            self.stats["steps"] += 1
+            self.step_count += 1
+            if self.debug_invariants:
+                self.bm.check()
+            return True
+
+    def _check_invariants(self, plan: StepPlan) -> None:
+        self.bm.check()
+        bs = self.block_size
+        for slot, req in self.sched.running.items():
+            t = self.bm.table(req.rid)
+            assert len(t) <= self.max_blocks_per_seq, (req.rid, len(t))
+            assert len(t) * bs >= req.num_computed, \
+                f"request {req.rid}: table does not cover computed KV"
+        if plan.chunk is not None:
+            _, req, n = plan.chunk
+            t = self.bm.table(req.rid)
+            assert len(t) * bs >= req.num_computed + n
+            # COW guarantee: the chunk writes only exclusively-owned blocks
+            lo, hi = req.num_computed // bs, (req.num_computed + n - 1) // bs
+            for j in range(lo, hi + 1):
+                assert self.bm.refcount(t[j]) == 1, \
+                    f"chunk would write shared block {t[j]}"
+        for slot, req in plan.decodes:
+            t = self.bm.table(req.rid)
+            j = (req.context_len - 1) // bs
+            assert self.bm.refcount(t[j]) == 1, \
+                f"decode would write shared block {t[j]}"
+        assert plan.scheduled_tokens <= self.max_num_batched_tokens
 
     def run(self, requests: list[Request],
             arrival_steps: list[int] | None = None) -> dict[int, np.ndarray]:
         """Serve ``requests`` to completion. ``arrival_steps[i]`` is the
-        decode-step index at which request i becomes visible (default: all
-        at step 0). Returns {rid: generated token array}; wall-clock and
-        throughput land in ``self.stats``."""
+        engine-step index at which request i becomes visible (default: all
+        at step 0). Returns {rid: generated token array}; wall-clock,
+        throughput and per-request latency land in ``self.stats``."""
         if arrival_steps is None:
             arrival_steps = [0] * len(requests)
         for r in requests:
@@ -223,17 +327,19 @@ class InferenceEngine:
         tok0 = self.stats["tokens"]
         while pending or self.sched.has_work:
             while pending and pending[0][0] <= self.step_count:
-                self.sched.add(requests[pending.popleft()[1]])
+                req = requests[pending.popleft()[1]]
+                self.sched.add(req)
+                self._note_arrival(req)
             if not self.sched.has_work and pending:
                 self.step_count = pending[0][0]      # idle: jump the clock
                 continue
-            before = (self.stats["tokens"], self.stats["decode_steps"])
-            self.step()
-            if (self.stats["tokens"], self.stats["decode_steps"]) == before:
+            if not self.step():
+                # defensive: the scheduler admits whenever a slot is free
+                # and raises MemoryError itself when the pool can't ever
+                # fit, so reaching this means a scheduling-policy bug
                 raise RuntimeError(
-                    "engine stuck: head-of-line request cannot be admitted "
-                    "with an empty machine (block pool or max_batch too "
-                    f"small?) — {self.bm.stats()}")
+                    "engine stuck: scheduler made no progress with work "
+                    f"pending — {self.bm.stats()}")
         dt = time.time() - t0
         self.stats["wall_s"] = round(dt, 3)
         self.stats["tok_s"] = round((self.stats["tokens"] - tok0)

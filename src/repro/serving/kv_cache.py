@@ -7,22 +7,70 @@ the *same* block ids (one table per sequence, all layers), so allocating a
 block grants one ``block_size``-token slice of KV capacity across the whole
 model at once.
 
-The host side is ``BlockManager``: a free list plus per-request block
-tables. Block 0 is reserved as the *trash block* — idle serving slots carry
+The host side is ``BlockManager``: a refcounted allocator with per-request
+block tables plus a content-hash index for prefix caching:
+
+* **Refcounts** — a block may appear in several tables at once (shared
+  prefix, fork). It returns to the free list only when its last reference
+  drops.
+* **Content hashes** — a *full* block's identity is the chained hash of
+  every token from position 0 through its end, so equal hashes imply equal
+  KV content (positions are absolute). ``register`` publishes a full
+  block; ``match`` resolves the longest cached prefix of a token stream.
+  Freed blocks keep their hash (their pages are never written while free),
+  so a later request can *revive* them from the free list — prefix hits
+  survive retirement and preemption.
+* **Copy-on-write** — a request must never write into a block another
+  table can read. ``cow`` swaps a shared table entry for a fresh block and
+  tells the caller which device page to copy.
+
+Block 0 is reserved as the *trash block* — idle serving slots carry
 all-zero table rows, so the decode step's unconditional KV write for an
 inactive slot lands there and corrupts nothing.
 """
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.transformer import period_structure
 
 TRASH_BLOCK = 0
+
+_HASH_SEED = b"repro-paged-kv-v1"
+
+
+def extend_chain_hashes(chain: list[bytes], tokens,
+                        block_size: int) -> list[bytes]:
+    """Extend ``chain`` in place with hashes for every *full* block of
+    ``tokens`` not yet covered — the chain only ever grows (a request's
+    token stream is append-only), so callers cache it and each new block
+    costs one sha256 instead of re-hashing from position 0."""
+    h = chain[-1] if chain else hashlib.sha256(_HASH_SEED).digest()
+    for i in range(len(chain), len(tokens) // block_size):
+        blk = np.asarray(tokens[i * block_size:(i + 1) * block_size],
+                         np.int32).tobytes()
+        h = hashlib.sha256(h + blk).digest()
+        chain.append(h)
+    return chain
+
+
+def chain_block_hashes(tokens, block_size: int) -> list[bytes]:
+    """Chained content hashes for every *full* block of ``tokens``.
+
+    ``h_i`` covers tokens ``[0, (i+1) * block_size)`` — a match on ``h_i``
+    implies the whole prefix matches, so a single dict lookup per block
+    resolves prefix sharing. sha256 over the token bytes (not Python
+    ``hash``): adopting a colliding block would silently splice another
+    request's KV into a new table, so collisions must be cryptographically
+    improbable.
+    """
+    return extend_chain_hashes([], tokens, block_size)
 
 
 def attn_layer_stacks(cfg: ModelConfig) -> list[str]:
@@ -62,8 +110,10 @@ def block_bytes(cfg: ModelConfig, block_size: int, dtype_bytes: int = 2):
 @dataclass
 class CacheStats:
     num_blocks: int          # allocatable blocks (excludes the trash block)
-    blocks_in_use: int
+    blocks_in_use: int       # distinct blocks with refcount > 0
     num_tables: int
+    shared_blocks: int = 0   # blocks with refcount >= 2
+    cached_free: int = 0     # free blocks still holding a registered hash
 
     @property
     def utilization(self) -> float:
@@ -71,11 +121,12 @@ class CacheStats:
 
 
 class BlockManager:
-    """Free-list allocator over page-pool rows + per-request block tables.
+    """Refcounted free-list allocator over page-pool rows + block tables.
 
     Pure host-side bookkeeping: allocation never touches device memory
     (pages are preallocated); it only decides which pool rows a request's
-    tokens may occupy.
+    tokens may occupy. The one device-side consequence is ``cow``, which
+    returns the page copy the *caller* must perform.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -85,6 +136,9 @@ class BlockManager:
         # LIFO free list: recently-freed (cache-warm) blocks are reused first
         self._free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
         self._tables: dict[int, list[int]] = {}
+        self._ref: dict[int, int] = {}        # block -> refcount (> 0 only)
+        self._hash_of: dict[int, bytes] = {}  # block -> content hash
+        self._block_of: dict[bytes, int] = {}  # content hash -> block
 
     # -- queries ----------------------------------------------------------
 
@@ -101,11 +155,64 @@ class BlockManager:
     def table(self, rid: int) -> list[int]:
         return list(self._tables[rid])
 
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
     def stats(self) -> CacheStats:
-        in_use = sum(len(t) for t in self._tables.values())
-        return CacheStats(num_blocks=self.num_blocks - 1,
-                          blocks_in_use=in_use,
-                          num_tables=len(self._tables))
+        return CacheStats(
+            num_blocks=self.num_blocks - 1,
+            blocks_in_use=len(self._ref),
+            num_tables=len(self._tables),
+            shared_blocks=sum(1 for r in self._ref.values() if r >= 2),
+            cached_free=sum(1 for b in self._free if b in self._hash_of))
+
+    # -- prefix-cache index -----------------------------------------------
+
+    def register(self, block: int, h: bytes) -> None:
+        """Publish a *full* block's content hash so later requests can share
+        it. First writer wins; re-registration is a no-op."""
+        assert block != TRASH_BLOCK
+        if h in self._block_of or block in self._hash_of:
+            return
+        self._hash_of[block] = h
+        self._block_of[h] = block
+
+    def match(self, hashes: list[bytes]) -> list[int]:
+        """Longest prefix of ``hashes`` resolving to cached blocks."""
+        out = []
+        for h in hashes:
+            b = self._block_of.get(h)
+            if b is None:
+                break
+            out.append(b)
+        return out
+
+    def deregister(self, block: int) -> None:
+        """Withdraw a block from the prefix cache before (re)writing it in
+        place — e.g. the final block of a full-prompt hit adopted with
+        refcount 1, whose last position is about to be recomputed. Leaving
+        it registered would let a concurrent admission adopt a block that
+        still has a pending write."""
+        self._deregister(block)
+
+    def _deregister(self, block: int) -> None:
+        h = self._hash_of.pop(block, None)
+        if h is not None:
+            del self._block_of[h]
+
+    def _pop_free(self) -> int:
+        """Take a free block for new content. Prefer blocks with no cached
+        hash (LIFO — recently freed, cache-warm on device) so prefix-cache
+        entries survive as long as possible; when only cached blocks
+        remain, evict the *least recently freed* (front of the list) so
+        the warmest entries — e.g. a preemption victim's just-freed
+        blocks, which its recompute is about to re-adopt — go last."""
+        for i in range(len(self._free) - 1, -1, -1):
+            if self._free[i] not in self._hash_of:
+                return self._free.pop(i)
+        b = self._free.pop(0)
+        self._deregister(b)          # its content is about to be rewritten
+        return b
 
     # -- mutations --------------------------------------------------------
 
@@ -117,8 +224,38 @@ class BlockManager:
         n = self.blocks_for(n_tokens)
         if n > self.num_free:
             raise MemoryError(f"need {n} blocks, have {self.num_free}")
-        self._tables[rid] = [self._free.pop() for _ in range(n)]
+        self._tables[rid] = t = []
+        for _ in range(n):
+            b = self._pop_free()
+            self._ref[b] = 1
+            t.append(b)
         return self.table(rid)
+
+    def adopt(self, rid: int, blocks: list[int]) -> list[int]:
+        """Start rid's table from already-populated (cached/shared) blocks:
+        refcount each, reviving any that sit in the free list."""
+        if rid in self._tables:
+            raise KeyError(f"request {rid} already has a table")
+        t = []
+        for b in blocks:
+            assert b != TRASH_BLOCK
+            if self._ref.get(b, 0) == 0:
+                self._free.remove(b)          # revive a cached free block
+            self._ref[b] = self._ref.get(b, 0) + 1
+            t.append(b)
+        self._tables[rid] = t
+        return self.table(rid)
+
+    def fork(self, src_rid: int, dst_rid: int) -> list[int]:
+        """dst shares every block of src (refcount++). Writers must go
+        through ``cow`` before touching a shared block."""
+        if dst_rid in self._tables:
+            raise KeyError(f"request {dst_rid} already has a table")
+        t = list(self._tables[src_rid])
+        for b in t:
+            self._ref[b] += 1
+        self._tables[dst_rid] = t
+        return self.table(dst_rid)
 
     def ensure(self, rid: int, n_tokens: int) -> bool:
         """Grow rid's table to cover n_tokens. False (no change) on OOM —
@@ -130,20 +267,54 @@ class BlockManager:
         if need > self.num_free:
             return False
         for _ in range(need):
-            t.append(self._free.pop())
+            b = self._pop_free()
+            self._ref[b] = 1
+            t.append(b)
         return True
 
+    def cow(self, rid: int, idx: int) -> int | None:
+        """Make table slot ``idx`` exclusively owned before a write.
+
+        Shared (refcount >= 2) -> swap in a fresh block and return its id;
+        the caller must copy the old block's pages into it. Exclusive ->
+        None (write in place). Raises MemoryError when no block is free."""
+        t = self._tables[rid]
+        old = t[idx]
+        if self._ref[old] <= 1:
+            return None
+        if not self._free:
+            raise MemoryError("copy-on-write needs a free block")
+        new = self._pop_free()
+        self._ref[old] -= 1
+        self._ref[new] = 1
+        t[idx] = new
+        return new
+
     def free(self, rid: int) -> None:
+        """Drop rid's references. Blocks keep their content hash while on
+        the free list (pages aren't written while free), so they stay
+        matchable until ``_pop_free`` hands them out for new content."""
         for b in self._tables.pop(rid):
-            self._free.append(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
 
     def check(self) -> None:
-        """Invariants: disjoint tables, no trash block, full accounting."""
-        seen: set[int] = set()
+        """Invariants: refcounts == table references, free list exact,
+        hash index consistent, no trash block anywhere."""
+        counts: dict[int, int] = {}
         for rid, t in self._tables.items():
+            assert len(set(t)) == len(t), f"table {rid} repeats a block"
             for b in t:
                 assert b != TRASH_BLOCK, (rid, t)
-                assert b not in seen, f"block {b} double-owned"
-                seen.add(b)
-        assert not (seen & set(self._free)), "free list overlaps tables"
-        assert len(seen) + len(self._free) == self.num_blocks - 1
+                counts[b] = counts.get(b, 0) + 1
+        assert counts == self._ref, "refcounts drifted from table refs"
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "free list duplicates"
+        assert not (free_set & set(self._ref)), "free list overlaps tables"
+        assert len(self._ref) + len(self._free) == self.num_blocks - 1
+        for b, h in self._hash_of.items():
+            assert b != TRASH_BLOCK
+            assert self._block_of.get(h) == b, "hash maps disagree"
+        assert len(self._block_of) == len(self._hash_of)

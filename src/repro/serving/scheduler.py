@@ -1,19 +1,35 @@
-"""Continuous-batching scheduler: FCFS admission, join-on-free-slot,
-retire-on-EOS/max-new, preempt-to-waiting when the block pool runs dry.
+"""Token-budget continuous-batching scheduler.
 
-Pure host-side and jax-free so the policy is unit-testable in isolation.
-The engine drives it:
+Every engine step the scheduler hands out up to ``max_num_batched_tokens``
+of model work in one :class:`StepPlan`:
 
-    joins = sched.admit()            # waiting -> running (slot + blocks)
-    preempted = sched.ensure_decode_capacity()
-    ... run prefills / one decode step ...
-    sched.retire(slot)               # EOS or max_new reached
+* every decode-ready running request gets **1 token** (the wide decode
+  batch — running decodes are never starved), and
+* the remaining budget funds **one prefill chunk**: the next slice of the
+  request currently streaming its prompt in, or a freshly admitted one.
+
+Requests track ``num_computed`` — how many of their ``prefill_tokens()``
+already have KV in the paged cache. A request whose prompt (or
+post-preemption recompute) is longer than the leftover budget streams in
+over several steps while everyone else keeps decoding: no full-batch
+prefill stall, no prompt-length bucketing.
+
+Admission consults the :class:`~repro.serving.kv_cache.BlockManager`
+prefix cache: full blocks whose chained token hash is already resident are
+shared (refcount++) instead of recomputed, and ``num_computed`` starts
+past them. When the whole prompt is cached the last token is recomputed
+for its logits; since its write position lands inside a shared block, the
+scheduler emits a copy-on-write (the plan's ``copies`` are device page
+copies the engine must perform before the step).
 
 Preemption follows vLLM's recompute strategy: the victim (most recently
 joined — oldest requests are closest to done) releases its blocks and
 returns to the *front* of the waiting queue carrying the tokens generated
-so far; on re-admission it prefills prompt+generated and continues, so
-greedy outputs are preemption-invariant.
+so far; on re-admission it recomputes prompt+generated (prefix-cache hits
+on its own just-freed blocks usually make this cheap), so greedy outputs
+are preemption-invariant.
+
+Pure host-side and jax-free so the policy is unit-testable in isolation.
 """
 
 from __future__ import annotations
@@ -24,7 +40,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.serving.kv_cache import BlockManager
+from repro.serving.kv_cache import BlockManager, extend_chain_hashes
 
 _RID = itertools.count()
 
@@ -44,7 +60,12 @@ class Request:
     eos_id: int | None = None
     rid: int = field(default_factory=lambda: next(_RID))
     out: list[int] = field(default_factory=list)
+    num_computed: int = 0                   # prefill_tokens() with KV cached
+    n_published: int = 0                    # full blocks hash-registered
     n_preempted: int = 0
+    # cached chain of full-block content hashes over prefill_tokens();
+    # append-only (tokens only grow), survives preemption
+    hash_chain: list = field(default_factory=list, repr=False)
 
     @property
     def done(self) -> bool:
@@ -64,17 +85,47 @@ class Request:
     def context_len(self) -> int:
         return len(self.prompt) + len(self.out)
 
+    @property
+    def decode_ready(self) -> bool:
+        """Exactly one token left to compute and a sampled token to feed:
+        the request rides the wide decode batch. (The final 1-token slice
+        of a recompute is a decode too — same operation.)"""
+        return bool(self.out) and self.num_computed == self.context_len - 1
+
+
+@dataclass
+class StepPlan:
+    """One step's worth of work, within the token budget."""
+    decodes: list[tuple[int, Request]]            # slot -> 1 token each
+    chunk: tuple[int, Request, int] | None        # (slot, req, n_tokens)
+    copies: list[tuple[int, int]]                 # device page copies (COW)
+    admitted: int = 0                             # waiting -> running joins
+
+    @property
+    def scheduled_tokens(self) -> int:
+        return len(self.decodes) + (self.chunk[2] if self.chunk else 0)
+
 
 class Scheduler:
     def __init__(self, bm: BlockManager, max_batch: int,
-                 max_blocks_per_seq: int):
+                 max_blocks_per_seq: int, max_num_batched_tokens: int,
+                 chunk_width: int, *, enable_prefix_caching: bool = True):
+        if max_num_batched_tokens <= max_batch:
+            raise ValueError(
+                f"max_num_batched_tokens={max_num_batched_tokens} must "
+                f"exceed max_batch={max_batch} (decodes take one token "
+                "each; a prefill chunk needs leftover budget)")
         self.bm = bm
         self.max_batch = max_batch
         self.max_blocks_per_seq = max_blocks_per_seq
+        self.max_num_batched_tokens = max_num_batched_tokens
+        self.chunk_width = chunk_width
+        self.enable_prefix_caching = enable_prefix_caching
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}      # slot -> request
         self._join_order: list[int] = []           # slots, oldest first
         self.n_preemptions = 0
+        self.cache_hit_tokens = 0
 
     # -- queries ----------------------------------------------------------
 
@@ -85,12 +136,12 @@ class Scheduler:
     def free_slots(self) -> list[int]:
         return [s for s in range(self.max_batch) if s not in self.running]
 
-    # -- transitions ------------------------------------------------------
+    # -- submission -------------------------------------------------------
 
     def validate(self, req: Request) -> None:
-        # The decode loop conservatively holds blocks for context+1, so a
-        # request's full horizon must fit its block-table row — reject at
+        # A request's full horizon must fit its block-table row — reject at
         # submission instead of crashing mid-run when the table overflows.
+        # (Single source of truth: admission relies on this having run.)
         horizon = len(req.prompt) + req.max_new
         capacity = self.max_blocks_per_seq * self.bm.block_size
         if horizon > capacity:
@@ -102,50 +153,146 @@ class Scheduler:
         self.validate(req)
         self.waiting.append(req)
 
-    def admit(self) -> list[tuple[int, Request]]:
-        """FCFS: admit waiting requests while a slot and blocks exist.
-        Blocks are allocated for the prefill context plus one decode token
-        so a join can never be preempted before its first step."""
-        joins = []
-        free = self.free_slots()
-        while self.waiting and free:
-            req = self.waiting[0]
-            need = req.context_len + 1
-            if self.bm.blocks_for(need) > self.max_blocks_per_seq:
-                raise ValueError(
-                    f"request {req.rid}: {need} tokens exceeds "
-                    f"max_blocks_per_seq={self.max_blocks_per_seq}")
-            if not self.bm.can_allocate(need):
-                break
-            self.waiting.popleft()
-            slot = free.pop(0)
-            self.bm.allocate(req.rid, need)
-            self.running[slot] = req
-            self._join_order.append(slot)
-            joins.append((slot, req))
-        return joins
+    # -- the budgeted step ------------------------------------------------
 
-    def ensure_decode_capacity(self) -> list[Request]:
-        """Before a decode step every running request must own blocks for
-        context_len + 1 (the token about to be written). Preempts newest
-        requests until the survivors fit. Returns the preempted requests."""
-        preempted: list[Request] = []
+    def schedule(self) -> StepPlan:
+        """Build one step's plan: decode capacity first (preempting the
+        newest requests when the pool runs dry), then spend the leftover
+        budget on one prefill chunk — continuing the in-flight prefill or
+        admitting the next waiting request (with prefix-cache sharing)."""
+        copies: list[tuple[int, int]] = []
+        self._ensure_decode_capacity()
+        decodes = [(s, r) for s, r in sorted(self.running.items())
+                   if r.decode_ready]
+        budget_left = self.max_num_batched_tokens - len(decodes)
+
+        chunk = None
+        admitted = 0
+        pre = next(((s, r) for s, r in sorted(self.running.items())
+                    if not r.decode_ready), None)
+        while (pre is None and budget_left > 0 and self.waiting
+               and len(self.running) < self.max_batch):
+            slot, req = self._admit_one(copies)
+            admitted += 1
+            if not req.decode_ready:
+                pre = (slot, req)       # else: full cache hit minus one —
+                                        # it joins the decode batch next step
+        if pre is not None and budget_left > 0:
+            slot, req = pre
+            n = min(budget_left, self.chunk_width,
+                    req.context_len - req.num_computed)
+            n = self._fit_chunk(req, n)
+            if n > 0:
+                chunk = (slot, req, n)
+        return StepPlan(decodes=decodes, chunk=chunk, copies=copies,
+                        admitted=admitted)
+
+    def _ensure_decode_capacity(self) -> None:
+        """Every decode-ready request must own blocks for context_len + 1
+        (the token about to be written). Preempts newest requests until the
+        survivors fit."""
         for slot in list(self._join_order):             # oldest first
             req = self.running.get(slot)
-            if req is None:                             # already preempted
+            if req is None or not req.decode_ready:
                 continue
             while not self.bm.ensure(req.rid, req.context_len + 1):
                 victim_slot = self._pick_victim()       # newest running
-                if victim_slot is None or (victim_slot == slot
-                                           and not self.bm.num_free
-                                           and len(self.running) == 1):
+                if victim_slot == slot and len(self.running) == 1 and \
+                        self.bm.blocks_for(req.context_len + 1) \
+                        > self.bm.num_blocks - 1:
                     raise MemoryError(
                         f"block pool too small for request {req.rid} "
                         f"at {req.context_len + 1} tokens")
-                preempted.append(self._preempt(victim_slot))
+                self._preempt(victim_slot)
                 if victim_slot == slot:
                     break        # self-preempted: back to waiting, move on
-        return preempted
+
+    def _fit_chunk(self, req: Request, n: int) -> int:
+        """Reserve blocks for the next ``n`` prefill tokens, shrinking the
+        chunk to what the pool can actually cover. Admission never preempts
+        running work — a starved chunk waits for decodes to retire."""
+        avail = (len(self.bm.table(req.rid)) + self.bm.num_free) \
+            * self.bm.block_size - req.num_computed
+        n = min(n, avail)
+        if n <= 0:
+            if len(self.running) == 1:
+                raise MemoryError(
+                    f"block pool too small for request {req.rid} "
+                    f"at {req.num_computed + 1} tokens")
+            return 0
+        ok = self.bm.ensure(req.rid, req.num_computed + n)
+        assert ok, "ensure failed after availability check"
+        return n
+
+    def _admit_one(self, copies: list[tuple[int, int]]) -> \
+            tuple[int, Request]:
+        """FCFS admission with prefix-cache sharing. The new table starts
+        as the matched cached blocks (refcounted); fresh blocks arrive
+        chunk by chunk via ``_fit_chunk``."""
+        req = self.waiting.popleft()
+        bs = self.bm.block_size
+        total = req.context_len
+        hits: list[int] = []
+        if self.enable_prefix_caching:
+            hits = self.bm.match(extend_chain_hashes(
+                req.hash_chain, req.prefill_tokens(), bs))
+        n_cached = len(hits) * bs
+        cow_idx = None
+        if n_cached > total - 1:
+            # Whole stream cached: recompute the last token for its logits.
+            # Its KV write lands *inside* the final shared block — COW it,
+            # or drop that hit when no spare block exists for the copy.
+            # The copy target must still be free *after* adoption revives
+            # the matched cached-free blocks out of the free list.
+            n_cached = total - 1
+            cow_idx = n_cached // bs
+            n_revived = sum(1 for b in hits if self.bm.refcount(b) == 0)
+            if self.bm.refcount(hits[-1]) >= 1 \
+                    and self.bm.num_free - n_revived < 1:
+                hits = hits[:-1]
+                n_cached = len(hits) * bs
+                cow_idx = None
+        self.bm.adopt(req.rid, hits)
+        req.num_computed = n_cached
+        req.n_published = len(hits)         # matched blocks are registered
+        self.cache_hit_tokens += n_cached
+        if cow_idx is not None:
+            src = self.bm.table(req.rid)[cow_idx]
+            dst = self.bm.cow(req.rid, cow_idx)
+            if dst is not None:
+                copies.append((src, dst))
+            else:
+                # refcount was 1 (a revived cached block): the recompute
+                # will write its last position in place, so pull it from
+                # the cache index — a concurrent admission must not adopt
+                # a block with a pending write. It re-registers via
+                # note_progress once the write has happened.
+                self.bm.deregister(src)
+                req.n_published = cow_idx
+        slot = self.free_slots()[0]
+        self.running[slot] = req
+        self._join_order.append(slot)
+        return slot, req
+
+    # -- progress / bookkeeping -------------------------------------------
+
+    def note_progress(self, req: Request) -> None:
+        """Publish content hashes for every block req has fully computed,
+        making them shareable by later (or preempted-and-returning)
+        requests. Called by the engine after each step, before retirement
+        frees the blocks (freed blocks keep their hash)."""
+        if not self.enable_prefix_caching:
+            return
+        bs = self.bm.block_size
+        n_full = req.num_computed // bs
+        if n_full <= req.n_published:       # nothing newly full this step
+            return
+        table = self.bm.table(req.rid)
+        hashes = extend_chain_hashes(req.hash_chain,
+                                     req.prefill_tokens(), bs)
+        for j in range(req.n_published, n_full):
+            self.bm.register(table[j], hashes[j])
+        req.n_published = n_full
 
     def _pick_victim(self) -> int | None:
         for slot in reversed(self._join_order):         # newest first
@@ -157,6 +304,8 @@ class Scheduler:
         req = self.running.pop(slot)
         self._join_order.remove(slot)
         self.bm.free(req.rid)
+        req.num_computed = 0
+        req.n_published = 0         # re-admission gets a different table
         req.n_preempted += 1
         self.n_preemptions += 1
         self.waiting.appendleft(req)

@@ -1,7 +1,10 @@
-"""Serving subsystem tests: paged-attention kernel vs dense oracle,
-block-manager/scheduler invariants, and engine-vs-static-Server greedy
-equivalence (the continuous-batching path must be a pure latency/memory
-optimization — never a numerics change)."""
+"""Serving subsystem tests: paged-attention kernels (decode + chunked
+prefill) vs densifying oracles, refcounted block-manager / prefix-cache /
+COW invariants, budgeted-scheduler behaviour, and engine-vs-static-Server
+greedy equivalence (the continuous-batching path must be a pure
+latency/memory optimization — never a numerics change)."""
+
+import random
 
 import jax
 import jax.numpy as jnp
@@ -9,9 +12,12 @@ import numpy as np
 import pytest
 
 from repro.config import get_config
-from repro.kernels.paged_attention import paged_attention
-from repro.kernels.ref import attention_ref, paged_attention_ref
-from repro.serving.kv_cache import TRASH_BLOCK, BlockManager
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_prefill_attention)
+from repro.kernels.ref import (attention_ref, paged_attention_ref,
+                               paged_prefill_attention_ref)
+from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager,
+                                    chain_block_hashes)
 from repro.serving.scheduler import Request, SamplingParams, Scheduler
 
 RNG = np.random.default_rng(0)
@@ -86,6 +92,101 @@ def test_paged_inactive_slot_is_zero():
 
 
 # ---------------------------------------------------------------------------
+# Multi-query (chunked prefill) kernel
+# ---------------------------------------------------------------------------
+
+
+def _chunk_case(B, H, K, hd, bs, nblk, C, dtype):
+    N = 1 + B * nblk
+    q = jnp.asarray(RNG.normal(0, 1, (B, C, H, hd)),
+                    jnp.float32).astype(dtype)
+    kp = jnp.asarray(RNG.normal(0, 1, (N, bs, K, hd)),
+                     jnp.float32).astype(dtype)
+    vp = jnp.asarray(RNG.normal(0, 1, (N, bs, K, hd)),
+                     jnp.float32).astype(dtype)
+    perm = RNG.permutation(np.arange(1, N))[:B * nblk].reshape(B, nblk)
+    bt = jnp.asarray(perm, jnp.int32)
+    qlen = RNG.integers(0, C + 1, (B,))
+    qlen[0] = C                     # always one full chunk in the batch
+    ctx = np.array([RNG.integers(ql, nblk * bs + 1) if ql else 0
+                    for ql in qlen])
+    return (q, kp, vp, bt, jnp.asarray(ctx, jnp.int32),
+            jnp.asarray(qlen, jnp.int32))
+
+
+# acceptance: chunk lengths {1, block_size, 2.5 blocks} with causal masking
+CHUNK_CASES = [
+    # B, H, K, hd, block_size, blocks_per_seq, C, window, cap, dtype
+    (3, 4, 2, 16, 8, 4, 1, None, None, jnp.float32),
+    (2, 8, 2, 32, 16, 3, 16, None, 50.0, jnp.bfloat16),  # C == block_size
+    (2, 6, 6, 16, 8, 5, 20, None, None, jnp.float32),    # C == 2.5 blocks
+    (2, 6, 2, 16, 8, 5, 20, 12, None, jnp.float32),      # + sliding window
+    (1, 8, 1, 64, 8, 4, 20, None, None, jnp.bfloat16),   # MQA, 2.5 blocks
+]
+
+
+@pytest.mark.parametrize("case", CHUNK_CASES)
+def test_chunk_kernel_vs_ref(case):
+    B, H, K, hd, bs, nblk, C, window, cap, dt = case
+    q, kp, vp, bt, ctx, qlen = _chunk_case(B, H, K, hd, bs, nblk, C, dt)
+    o_k = paged_prefill_attention(q, kp, vp, bt, ctx, qlen, window=window,
+                                  cap=cap, interpret=True)
+    o_r = paged_prefill_attention_ref(q, kp, vp, bt, ctx, qlen,
+                                      window=window, cap=cap)
+    tol = 1e-2 if dt == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), atol=tol)
+
+
+def test_chunk_kernel_qlen1_matches_decode_kernel():
+    """A 1-token chunk is exactly a decode step."""
+    B, H, K, hd, bs, nblk = 3, 4, 2, 16, 8, 4
+    q, kp, vp, bt, ctx = _paged_case(B, H, K, hd, bs, nblk, jnp.float32)
+    o_d = paged_attention(q, kp, vp, bt, ctx, interpret=True)
+    o_c = paged_prefill_attention(q[:, None], kp, vp, bt, ctx,
+                                  jnp.ones(B, jnp.int32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_c)[:, 0], np.asarray(o_d))
+
+
+def test_chunk_ref_vs_dense_oracle():
+    """Densify by hand, run the plain oracle over the chunk's query span."""
+    B, H, K, hd, bs, nblk, C = 2, 4, 2, 16, 8, 4, 12
+    q, kp, vp, bt, ctx, qlen = _chunk_case(B, H, K, hd, bs, nblk, C,
+                                           jnp.float32)
+    o_p = np.asarray(paged_prefill_attention_ref(q, kp, vp, bt, ctx, qlen),
+                     np.float32)
+    for b in range(B):
+        n, S = int(qlen[b]), int(ctx[b])
+        if n == 0:
+            assert np.all(o_p[b] == 0)
+            continue
+        k = np.asarray(kp, np.float32)[np.asarray(bt[b])].reshape(
+            -1, K, hd)[:S]
+        v = np.asarray(vp, np.float32)[np.asarray(bt[b])].reshape(
+            -1, K, hd)[:S]
+        o_d = attention_ref(
+            jnp.asarray(q[b:b + 1, :n], jnp.float32),
+            jnp.asarray(k[None]), jnp.asarray(v[None]),
+            causal=True, q_offset=S - n)
+        np.testing.assert_allclose(o_p[b, :n], np.asarray(o_d)[0],
+                                   atol=1e-5)
+
+
+def test_chunk_padding_rows_are_zero():
+    q, kp, vp, bt, ctx, _ = _chunk_case(2, 4, 2, 16, 8, 3, 8, jnp.float32)
+    qlen = jnp.asarray([3, 0], jnp.int32)
+    ctx = jnp.asarray([10, 0], jnp.int32)
+    for fn in (lambda: paged_prefill_attention(q, kp, vp, bt, ctx, qlen,
+                                               interpret=True),
+               lambda: paged_prefill_attention_ref(q, kp, vp, bt, ctx,
+                                                   qlen)):
+        o = np.asarray(fn())
+        assert np.all(o[0, 3:] == 0)
+        assert np.all(o[1] == 0)
+        assert np.all(np.isfinite(o))
+
+
+# ---------------------------------------------------------------------------
 # Block manager
 # ---------------------------------------------------------------------------
 
@@ -123,6 +224,187 @@ def test_block_manager_exhaustion_and_reuse():
     bm.check()
 
 
+def test_block_manager_fork_refcount_and_cow():
+    bm = BlockManager(num_blocks=8, block_size=4)
+    t1 = bm.allocate(1, 8)          # 2 blocks
+    bm.fork(1, 2)
+    bm.check()
+    assert bm.table(2) == t1
+    assert all(bm.refcount(b) == 2 for b in t1)
+    assert bm.stats().blocks_in_use == 2       # shared, counted once
+    assert bm.stats().shared_blocks == 2
+    # COW the second block for writer 2
+    new = bm.cow(2, 1)
+    assert new is not None and new != t1[1]
+    assert bm.refcount(t1[1]) == 1 and bm.refcount(new) == 1
+    assert bm.table(1) == t1 and bm.table(2) == [t1[0], new]
+    assert bm.cow(2, 1) is None                # already exclusive: in place
+    bm.check()
+    # freeing one sharer keeps the shared block alive
+    bm.free(2)
+    bm.check()
+    assert bm.refcount(t1[0]) == 1
+    assert bm.table(1) == t1
+    bm.free(1)
+    bm.check()
+    assert bm.num_free == 7
+
+
+def test_block_manager_cow_oom():
+    bm = BlockManager(num_blocks=3, block_size=2)
+    bm.allocate(1, 4)               # both allocatable blocks
+    bm.fork(1, 2)
+    with pytest.raises(MemoryError):
+        bm.cow(2, 0)
+
+
+def test_prefix_hash_register_match_and_revival():
+    bm = BlockManager(num_blocks=9, block_size=4)
+    toks = np.arange(14, dtype=np.int32)
+    hashes = chain_block_hashes(toks, 4)
+    assert len(hashes) == 3                    # full blocks only
+    # chained: a different first block changes every downstream hash
+    other = chain_block_hashes(np.concatenate([[99], toks[1:]]), 4)
+    assert all(a != b for a, b in zip(hashes, other))
+    t1 = bm.allocate(1, 14)
+    for b, h in zip(t1, hashes):
+        bm.register(b, h)
+    bm.check()
+    assert bm.match(hashes) == t1[:3]
+    assert bm.match(other) == []
+    assert bm.match(hashes[:2] + [12345]) == t1[:2]    # longest prefix
+    # adopt shares the matched blocks
+    t2 = bm.adopt(2, bm.match(hashes))
+    assert t2 == t1[:3] and all(bm.refcount(b) == 2 for b in t2)
+    bm.check()
+    # freeing the original keeps the cached blocks matchable (revival)
+    bm.free(2)
+    bm.free(1)
+    bm.check()
+    assert bm.num_free == 8
+    assert bm.match(hashes) == t1[:3]          # still cached while free
+    t3 = bm.adopt(3, bm.match(hashes))
+    assert t3 == t1[:3]
+    assert bm.num_free == 5                    # revived out of the free list
+    bm.check()
+
+
+def test_prefix_cache_eviction_prefers_unhashed():
+    bm = BlockManager(num_blocks=5, block_size=2)
+    t = bm.allocate(1, 8)
+    bm.register(t[0], 111)
+    bm.free(1)
+    # allocating 2 blocks must prefer the 3 unhashed ones
+    t2 = bm.allocate(2, 4)
+    assert t[0] not in t2
+    assert bm.match([111]) == [t[0]]
+    # allocating past the unhashed supply evicts the cached block
+    bm.ensure(2, 8)
+    assert bm.match([111]) == []
+    bm.check()
+
+
+# ---------------------------------------------------------------------------
+# Property test: random walks over the block manager
+# ---------------------------------------------------------------------------
+
+
+def _bm_random_walk(tape):
+    """Interpret ``tape`` (an iterator of ints) as add/grow/fork/free/COW/
+    register/adopt ops against a BlockManager, asserting the full invariant
+    set and exact free-block accounting after every op."""
+    NB, BS = 9, 4
+    bm = BlockManager(num_blocks=NB, block_size=BS)
+    tokens: dict[int, int] = {}       # rid -> tokens covered
+    next_rid = [0]
+    next_hash = [0]
+
+    def draw(n):
+        return next(tape) % n
+
+    def new_rid():
+        next_rid[0] += 1
+        return next_rid[0]
+
+    def check_accounting():
+        bm.check()
+        in_use = {b for rid in tokens for b in bm.table(rid)}
+        assert bm.num_free == (NB - 1) - len(in_use)
+        assert bm.stats().blocks_in_use == len(in_use)
+
+    for _ in range(120):
+        op = draw(7)
+        rids = list(tokens)
+        if op == 0 or not rids:                       # allocate
+            rid = new_rid()
+            try:
+                bm.allocate(rid, draw(3 * BS + 1))
+                tokens[rid] = 0
+            except MemoryError:
+                pass
+        elif op == 1:                                 # grow
+            rid = rids[draw(len(rids))]
+            want = len(bm.table(rid)) * BS + draw(2 * BS) + 1
+            if bm.ensure(rid, want):
+                tokens[rid] = want
+        elif op == 2:                                 # fork
+            rid = new_rid()
+            src = rids[draw(len(rids))]
+            bm.fork(src, rid)
+            tokens[rid] = tokens[src]
+        elif op == 3:                                 # cow
+            rid = rids[draw(len(rids))]
+            t = bm.table(rid)
+            if t:
+                try:
+                    bm.cow(rid, draw(len(t)))
+                except MemoryError:
+                    pass
+        elif op == 4:                                 # free
+            rid = rids[draw(len(rids))]
+            bm.free(rid)
+            del tokens[rid]
+        elif op == 5:                                 # register a block
+            rid = rids[draw(len(rids))]
+            t = bm.table(rid)
+            if t:
+                next_hash[0] += 1
+                bm.register(t[draw(len(t))], next_hash[0])
+        else:                                         # adopt cached blocks
+            if next_hash[0]:
+                h = draw(next_hash[0]) + 1
+                blocks = bm.match([h])
+                if blocks:
+                    rid = new_rid()
+                    bm.adopt(rid, blocks)
+                    tokens[rid] = 0
+        check_accounting()
+    for rid in list(tokens):
+        bm.free(rid)
+        del tokens[rid]
+        check_accounting()
+    assert bm.num_free == NB - 1
+
+
+def test_block_manager_random_walk_seeded():
+    for seed in range(8):
+        rng = random.Random(seed)
+        _bm_random_walk(iter(lambda: rng.randrange(1 << 20), None))
+
+
+def test_block_manager_random_walk_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.integers(0, (1 << 20) - 1), max_size=900))
+    @hyp.settings(max_examples=60, deadline=None)
+    def prop(tape):
+        it = iter(tape)
+        _bm_random_walk(iter(lambda: next(it, 0), None))
+
+    prop()
+
+
 # ---------------------------------------------------------------------------
 # Scheduler
 # ---------------------------------------------------------------------------
@@ -133,52 +415,168 @@ def _req(n_prompt=8, max_new=4, **kw):
                    **kw)
 
 
-def test_scheduler_fcfs_admission_and_retire():
-    bm = BlockManager(num_blocks=9, block_size=4)
-    s = Scheduler(bm, max_batch=2, max_blocks_per_seq=4)
-    reqs = [_req() for _ in range(3)]
+def _sched(bm, max_batch=2, max_blocks_per_seq=4, budget=12, chunk=8, **kw):
+    return Scheduler(bm, max_batch, max_blocks_per_seq, budget, chunk, **kw)
+
+
+def _complete_chunk(plan):
+    """Simulate the engine finishing the planned chunk (+ a sampled token
+    when the prompt completes)."""
+    slot, req, n = plan.chunk
+    req.num_computed += n
+    if req.num_computed == req.context_len:
+        req.out.append(7)
+    return slot, req
+
+
+def test_scheduler_budget_and_fcfs_order():
+    bm = BlockManager(num_blocks=17, block_size=4)
+    s = _sched(bm, max_batch=2, budget=9, chunk=8)
+    reqs = [_req(n_prompt=12) for _ in range(3)]
     for r in reqs:
         s.add(r)
-    joins = s.admit()
-    assert [r.rid for _, r in joins] == [reqs[0].rid, reqs[1].rid]
-    assert len(s.waiting) == 1          # no free slot for the third
-    assert s.admit() == []
-    s.retire(joins[0][0])
-    bm.check()
-    joins2 = s.admit()                  # freed slot -> FCFS next
-    assert [r.rid for _, r in joins2] == [reqs[2].rid]
+    p1 = s.schedule()                       # admit first; chunk of 8
+    assert p1.decodes == [] and p1.admitted == 1
+    assert p1.chunk[1] is reqs[0] and p1.chunk[2] == 8
+    assert p1.scheduled_tokens <= 9
+    _complete_chunk(p1)
+    p2 = s.schedule()                       # finish req0's prompt (4 left)
+    assert p2.chunk[1] is reqs[0] and p2.chunk[2] == 4
+    _complete_chunk(p2)                     # samples req0's first token
+    assert reqs[0].decode_ready
+    p3 = s.schedule()                       # req0 decodes, req1 admits
+    assert [r.rid for _, r in p3.decodes] == [reqs[0].rid]
+    assert p3.chunk[1] is reqs[1]
+    assert p3.chunk[2] == 8                 # 9 budget - 1 decode
+    assert len(s.waiting) == 1              # no slot for the third yet
+
+
+def test_scheduler_admission_waits_for_free_slot():
+    bm = BlockManager(num_blocks=33, block_size=4)
+    s = _sched(bm, max_batch=1, budget=16, chunk=8)
+    a, b = _req(), _req()
+    s.add(a), s.add(b)
+    p = s.schedule()
+    _complete_chunk(p)
+    assert a.decode_ready and len(s.waiting) == 1
+    p2 = s.schedule()                       # slot busy: b keeps waiting
+    assert p2.chunk is None and len(p2.decodes) == 1
+    a.out.append(9)
+    a.num_computed += 1
+    s.retire(0)
+    p3 = s.schedule()
+    assert p3.chunk[1] is b
 
 
 def test_scheduler_preempts_newest_and_requeues_front():
-    # 6 allocatable blocks of 2 tokens; two requests of prompt 4 (2 blocks
-    # + 1 decode block each) fill the pool; growth must evict the newest.
+    # 6 allocatable blocks of 2 tokens; two requests of prompt 4 fill the
+    # pool after their first sampled token; growth must evict the newest.
     bm = BlockManager(num_blocks=7, block_size=2)
-    s = Scheduler(bm, max_batch=2, max_blocks_per_seq=6)
-    a, b = _req(n_prompt=4), _req(n_prompt=4)
+    s = _sched(bm, max_batch=2, max_blocks_per_seq=6, budget=8, chunk=4,
+               enable_prefix_caching=False)
+    a, b, c = _req(n_prompt=4), _req(n_prompt=4), _req(n_prompt=4)
     s.add(a), s.add(b)
-    joins = s.admit()
-    assert len(joins) == 2 and bm.num_free == 0
-    for _, r in joins:
-        r.out.append(7)                 # first sampled token -> ctx 5
-    a.out.append(8)                     # a at ctx 6: needs a 4th block
-    preempted = s.ensure_decode_capacity()
-    assert [r.rid for r in preempted] == [b.rid]
-    assert s.waiting[0].rid == b.rid    # requeued at the FRONT
+    _complete_chunk(s.schedule())           # a prefills, samples
+    _complete_chunk(s.schedule())           # b prefills, samples
+    assert a.decode_ready and b.decode_ready
+    s.schedule()                            # both decode: 3 blocks each
+    for r in (a, b):
+        r.out.append(8)
+        r.num_computed += 1
+    s.add(c)                                # queued behind any preemption
+    # a now at ctx 6 -> needs a 4th block; pool is dry -> b is evicted
+    plan = s.schedule()
+    assert [r.rid for _, r in plan.decodes] == [a.rid]
     assert b.n_preempted == 1 and s.n_preemptions == 1
-    assert b.out == [7]                 # keeps generated tokens (recompute)
+    assert b.out == [7, 8]                  # keeps generated tokens
+    # requeued at the FRONT: b re-admits ahead of c, recomputing
+    # prompt + generated from scratch
+    assert plan.chunk[1] is b and b.num_computed == 0
+    assert s.waiting[0].rid == c.rid
     assert np.array_equal(b.prefill_tokens(),
-                          np.concatenate([b.prompt, [7]]))
+                          np.concatenate([b.prompt, [7, 8]]))
     bm.check()
 
 
 def test_scheduler_rejects_horizon_past_capacity():
-    # regression: max_new that would grow the table past max_blocks_per_seq
-    # must be rejected at submission, not crash the decode loop later
+    # the one place horizon validation lives: submission. Admission relies
+    # on it instead of re-checking.
     bm = BlockManager(num_blocks=99, block_size=4)
-    s = Scheduler(bm, max_batch=1, max_blocks_per_seq=4)   # 16-token cap
+    s = _sched(bm, max_batch=1, max_blocks_per_seq=4)   # 16-token cap
     with pytest.raises(ValueError, match="exceeds max_len capacity"):
         s.add(_req(n_prompt=8, max_new=9))
     s.add(_req(n_prompt=8, max_new=8))                     # exactly fits
+    assert len(s.waiting) == 1
+
+
+def test_admission_full_hit_cow_with_drained_free_list():
+    """Regression: a full-prompt hit whose matched chain mixes a cached
+    *free* block (revived by adoption) with a *live* shared block must
+    drop the last hit when adoption drains the free list — the boundary
+    COW would otherwise raise an uncaught MemoryError."""
+    bm = BlockManager(num_blocks=5, block_size=2)
+    s = _sched(bm, max_batch=2, max_blocks_per_seq=3, budget=8, chunk=4)
+    toks = np.arange(4, dtype=np.int32)
+    h0, h1 = chain_block_hashes(toks, 2)
+    # stale cached-free copy of the first block (an earlier request's)
+    x = bm.allocate(7777, 2)[0]
+    bm.register(x, h0)
+    bm.free(7777)
+    # running request b computed its OWN copy of the prefix (h0 was taken
+    # first, so only its second block registered) and holds all remaining
+    # blocks; it is decode-ready and needs no growth
+    b = Request(toks.copy(), max_new=4)
+    b.out.append(8)
+    b.num_computed = 4
+    b.n_published = 2
+    bm.allocate(b.rid, 6)                          # 3 blocks
+    bm.register(bm.table(b.rid)[1], h1)
+    s.running[0] = b
+    s._join_order.append(0)
+    assert bm.match([h0, h1]) == [x, bm.table(b.rid)[1]]
+    assert bm.num_free == 1                        # exactly {x}
+    c = Request(toks.copy(), max_new=2)
+    s.add(c)
+    plan = s.schedule()                            # must not raise
+    assert plan.admitted == 1
+    assert c.num_computed == 2                     # last hit dropped
+    assert bm.table(c.rid) == [x]
+    bm.check()
+
+
+def test_admission_in_place_boundary_write_leaves_cache():
+    """Regression: a full-prompt hit revived with refcount 1 recomputes
+    its last token *in place*; until that write lands the block must leave
+    the hash index, or an admission in the same pass adopts a block with a
+    pending write (the decode would then write into a shared block)."""
+    bm = BlockManager(num_blocks=9, block_size=2)
+    s = _sched(bm, max_batch=2, max_blocks_per_seq=4, budget=8, chunk=4)
+    stream = np.array([0, 1, 2, 7], np.int32)
+    h0, h1 = chain_block_hashes(stream, 2)
+    old = bm.allocate(4242, 4)
+    bm.register(old[0], h0)
+    bm.register(old[1], h1)
+    bm.free(4242)                     # retired: both blocks cached-free
+    # d: preempted recompute of prompt [0,1,2] + generated [7] — full hit,
+    # immediately decode-ready, with a pending in-place write at pos 3
+    d = Request(stream[:3].copy(), max_new=4)
+    d.out.append(7)
+    e = Request(stream.copy(), max_new=2)
+    s.add(d)
+    s.add(e)
+    s.schedule()
+    assert d.decode_ready and bm.table(d.rid) == old
+    # e, admitted in the same pass, must NOT share d's pending-write block
+    assert old[1] not in bm.table(e.rid)
+    assert bm.refcount(old[1]) == 1
+    assert bm.match([h0, h1]) == [old[0]]
+    bm.check()
+
+
+def test_scheduler_budget_must_exceed_max_batch():
+    bm = BlockManager(num_blocks=9, block_size=4)
+    with pytest.raises(ValueError, match="must exceed max_batch"):
+        Scheduler(bm, 4, 4, 4, 1)
 
 
 def test_request_eos_and_maxnew_done():
@@ -221,7 +619,7 @@ def test_engine_matches_static_server_greedy(glm_smoke):
                for _ in range(4)]
     legacy = server.serve_batch([SRequest(p, max_new=8) for p in prompts])
     eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
-                          params=server.params)
+                          params=server.params, debug_invariants=True)
     reqs = [Request(p, max_new=8) for p in prompts]
     outs = eng.run(reqs, arrival_steps=[0, 0, 2, 5])
     for i, r in enumerate(reqs):
@@ -230,27 +628,81 @@ def test_engine_matches_static_server_greedy(glm_smoke):
         np.testing.assert_array_equal(outs[r.rid], legacy[i])
 
 
+def test_engine_chunked_prefill_matches_monolithic(glm_smoke):
+    """A chunk budget smaller than the prompt streams the prefill over
+    several steps — greedy outputs must not change."""
+    from repro.launch.serve import Request as SRequest
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    legacy = server.serve_batch([SRequest(p, max_new=6) for p in prompts])
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          max_num_batched_tokens=2 + 12,   # 12-token chunks
+                          params=server.params, debug_invariants=True)
+    reqs = [Request(p, max_new=6) for p in prompts]
+    outs = eng.run(reqs)
+    assert eng.stats["prefill_chunks"] >= 6     # ceil(32/12) = 3 per prompt
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(outs[r.rid], legacy[i])
+
+
+def test_engine_no_decode_stall_during_long_prefill(glm_smoke):
+    """While a long prompt streams in chunks, running decodes must make
+    progress every step (the two-phase engine's full-batch prefill stall
+    is gone)."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    short = Request(RNG.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new=24)
+    long_r = Request(RNG.integers(0, cfg.vocab_size, 64).astype(np.int32),
+                     max_new=4)
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          max_num_batched_tokens=2 + 8,    # 8-token chunks
+                          params=server.params, debug_invariants=True)
+    eng.sched.add(short)
+    eng.step()                       # short's whole prompt is one chunk
+    eng.step()                       # short decodes alone once
+    eng.sched.add(long_r)
+    decoded_during_prefill = 0
+    while long_r.num_computed < long_r.context_len and not long_r.out:
+        before = len(short.out)
+        assert eng.step()
+        assert len(short.out) == before + 1    # a decode token EVERY step
+        decoded_during_prefill += 1
+    assert decoded_during_prefill >= 8         # 64 tokens / 8-token chunks
+    while eng.sched.has_work:
+        eng.step()
+    assert len(short.out) == 24 and len(long_r.out) == 4
+
+
 def test_engine_eos_early_stop_frees_slot(glm_smoke):
     from repro.serving import InferenceEngine, Request
     cfg, mesh, server = glm_smoke
     prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
                for _ in range(2)]
-    # probe: discover the token request 0 greedily emits at step 3
+    # probe: find a token request 0 greedily emits for the first time at
+    # some early step — using it as EOS must stop generation right there
     eng = InferenceEngine(cfg, mesh, max_batch=1, block_size=16, max_len=96,
-                          params=server.params)
+                          params=server.params, debug_invariants=True)
     probe = Request(prompts[0], max_new=6)
-    eos = int(eng.run([probe])[probe.rid][3])
+    pout = eng.run([probe])[probe.rid].tolist()
+    idx = next((i for i in range(1, 6) if pout[i] not in pout[:i]), None)
+    if idx is None:
+        pytest.skip("probe emitted no first-occurrence token")
+    eos = pout[idx]
 
     eng = InferenceEngine(cfg, mesh, max_batch=1, block_size=16, max_len=96,
-                          params=server.params)
+                          params=server.params, debug_invariants=True)
     r0 = Request(prompts[0], max_new=32, eos_id=eos)
     r1 = Request(prompts[1], max_new=4)
     outs = eng.run([r0, r1])
-    assert outs[r0.rid][-1] == eos and len(outs[r0.rid]) == 4
+    assert outs[r0.rid][-1] == eos and len(outs[r0.rid]) == idx + 1
     assert len(outs[r1.rid]) == 4
-    # retired-at-EOS request stopped consuming decode steps: with one slot,
-    # total decode steps is (4-1) + (4-1), nowhere near r0's max_new=32
-    assert eng.stats["decode_steps"] == 6
+    # retired-at-EOS request stopped consuming steps: with one slot, each
+    # request costs 1 prefill-chunk step plus one decode step per further
+    # token — nowhere near r0's max_new=32
+    assert eng.stats["steps"] == (1 + idx) + (1 + 3)
     assert eng.bm.stats().blocks_in_use == 0       # everything freed
 
 
@@ -260,19 +712,90 @@ def test_engine_preemption_preserves_greedy_output(glm_smoke):
     prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
                for _ in range(2)]
     base = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
-                           max_len=96, params=server.params)
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
     want = base.run([Request(p, max_new=20) for p in prompts])
     want = list(want.values())
 
-    # 7 allocatable blocks of 16: two ctx-33 joins take 3 blocks each;
+    # 7 allocatable blocks of 16: two ctx-33 requests take 3 blocks each;
     # growth past 48 tokens (ctx 32+16) forces preempting the newer one.
     tight = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
-                            max_len=96, num_blocks=8, params=server.params)
+                            max_len=96, num_blocks=8, params=server.params,
+                            debug_invariants=True)
     reqs = [Request(p, max_new=20) for p in prompts]
     got = tight.run(reqs)
     assert tight.stats["preemptions"] >= 1
+    # the victim's recompute hits its own just-freed cached blocks
+    assert tight.stats["cache_hit_tokens"] > 0
     for w, r in zip(want, reqs):
         np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_engine_shared_prefix_shares_blocks(glm_smoke):
+    """N requests with a long common prefix: byte-identical outputs to the
+    no-sharing engine, with measurably fewer blocks in use."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    common = RNG.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    prompts = [np.concatenate(
+        [common, RNG.integers(0, cfg.vocab_size, 8).astype(np.int32)])
+        for _ in range(6)]
+    kw = dict(max_batch=4, block_size=16, max_len=96, params=server.params,
+              debug_invariants=True)
+    shared = InferenceEngine(cfg, mesh, **kw)
+    o_s = shared.run([Request(p, max_new=6) for p in prompts])
+    plain = InferenceEngine(cfg, mesh, enable_prefix_caching=False, **kw)
+    o_p = plain.run([Request(p, max_new=6) for p in prompts])
+    for a, b in zip(o_s.values(), o_p.values()):
+        np.testing.assert_array_equal(a, b)
+    # 4 shared 16-token blocks per request after the first
+    assert shared.stats["cache_hit_tokens"] >= 5 * 64
+    assert shared.stats["peak_blocks_in_use"] \
+        < plain.stats["peak_blocks_in_use"]
+    assert shared.stats["peak_block_utilization"] \
+        < plain.stats["peak_block_utilization"]
+
+
+def test_engine_full_prompt_cache_hit_cow(glm_smoke):
+    """Identical block-aligned prompts: the whole prompt hits the cache,
+    the recomputed last token's write lands in a shared block, and the
+    copy-on-write keeps outputs byte-identical."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompt = RNG.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    kw = dict(max_batch=4, block_size=16, max_len=96, params=server.params,
+              debug_invariants=True)
+    shared = InferenceEngine(cfg, mesh, **kw)
+    reqs = [Request(prompt.copy(), max_new=6) for _ in range(3)]
+    o_s = shared.run(reqs, arrival_steps=[0, 3, 6])
+    assert shared.stats["cow_copies"] >= 1
+    assert shared.stats["cache_hit_tokens"] >= 2 * 63
+    plain = InferenceEngine(cfg, mesh, enable_prefix_caching=False, **kw)
+    reqs_p = [Request(prompt.copy(), max_new=6) for _ in range(3)]
+    o_p = plain.run(reqs_p, arrival_steps=[0, 3, 6])
+    for a, b in zip(o_s.values(), o_p.values()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_latency_stats(glm_smoke):
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(3)]
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    reqs = [Request(p, max_new=4) for p in prompts]
+    eng.run(reqs, arrival_steps=[0, 0, 3])
+    lat = eng.stats["latency"]
+    assert set(lat) == {r.rid for r in reqs}
+    for r in reqs:
+        rec = lat[r.rid]
+        assert rec["arrival_step"] <= rec["first_token_step"] \
+            <= rec["done_step"]
+        assert rec["arrival_wall"] <= rec["first_token_wall"] \
+            <= rec["done_wall"]
+        # 4 tokens = first + 3 decodes, plus any preemption stalls
+        assert rec["done_step"] - rec["first_token_step"] >= 3
 
 
 def test_engine_rejects_unpageable_archs(glm_smoke):
