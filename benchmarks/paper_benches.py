@@ -92,7 +92,6 @@ def _latency_percentiles(eng, reqs):
 def bench_serving_throughput(rows):
     from repro.config import get_config
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.serve import Request as SRequest, Server
     from repro.serving import InferenceEngine, Request
 
     cfg = get_config("glm4_9b", smoke=True)
@@ -101,13 +100,12 @@ def bench_serving_throughput(rows):
     n_req, prompt_len, max_batch = 12, 32, 4
     prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
                for _ in range(n_req)]
-    # ragged horizons: static batching decodes max() steps for everyone
+    # ragged horizons: static batching would decode max() steps for all
     max_news = [4 + 4 * (i % 4) for i in range(n_req)]
 
     # prefix caching OFF for the headline row: the warmup run (for jit
     # compile) uses the same prompts, and cache hits would let the timed
-    # run skip nearly all prefill — not a fair comparison against the
-    # static server's full prefills
+    # run skip nearly all prefill — not representative of cold traffic
     eng = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,
                           max_len=128, enable_prefix_caching=False)
     reqs = [Request(p, max_new=mn) for p, mn in zip(prompts, max_news)]
@@ -139,25 +137,34 @@ def bench_serving_throughput(rows):
                      f"cache_hit_tokens={engc.stats['cache_hit_tokens']} "
                      + _latency_percentiles(engc, engc_reqs)))
 
-    server = Server(cfg, mesh, max_batch=max_batch, prompt_len=prompt_len,
-                    max_len=128)
-    batches = [prompts[i:i + max_batch]
-               for i in range(0, n_req, max_batch)]
-    mns = [max_news[i:i + max_batch] for i in range(0, n_req, max_batch)]
-    server.serve_batch([SRequest(p, max_new=mn)         # compile
-                        for p, mn in zip(batches[0], mns[0])])
-    t0 = time.perf_counter()
-    for bp, bm in zip(batches, mns):
-        server.serve_batch([SRequest(p, max_new=mn)
-                            for p, mn in zip(bp, bm)])
-    dt_srv = time.perf_counter() - t0
-    # the mechanism the engine buys: decode slot-steps actually spent vs
-    # static batching's pad-to-max(max_new) per batch (wall clock on a
-    # smoke-size CPU model is dispatch-bound, not attention-bound)
-    static_slot_steps = sum(max(bm) for bm in mns) * max_batch
-    rows.append(_csv("serving/static_batch", dt_srv / n_tok * 1e6,
-                     f"tok_s={n_tok/dt_srv:.1f} "
-                     f"slot_steps={static_slot_steps}"))
+    # the non-transformer runners on the same hot path: pure SSM (slot
+    # state, no block pool) and enc-dec (paged self-KV + admission-time
+    # encoder passes) — the workload families the runner refactor opened
+    for arch, plen in (("mamba2_370m", 24), ("whisper_large_v3", 8)):
+        fcfg = get_config(arch, smoke=True)
+        fprompts = [rng.integers(0, fcfg.vocab_size, plen).astype(np.int32)
+                    for _ in range(n_req)]
+        fframes = [rng.normal(0, 1, (fcfg.encoder_seq_len, fcfg.d_model)
+                              ).astype(np.float32)
+                   if fcfg.frontend == "audio" else None
+                   for _ in range(n_req)]
+        feng = InferenceEngine(fcfg, mesh, max_batch=max_batch,
+                               block_size=16, max_len=128)
+
+        def make_reqs():
+            return [Request(p, max_new=mn, frames=f)
+                    for p, mn, f in zip(fprompts, max_news, fframes)]
+
+        feng.run(make_reqs())                   # compile
+        t0 = time.perf_counter()
+        freqs = make_reqs()
+        feng.run(freqs)
+        dt_f = time.perf_counter() - t0
+        rows.append(_csv(f"serving/paged_engine_{arch}",
+                         dt_f / n_tok * 1e6,
+                         f"tok_s={n_tok/dt_f:.1f} "
+                         f"encodes={feng.stats['encodes']} "
+                         + _latency_percentiles(feng, freqs)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,104 +1,27 @@
-"""Serving driver: continuous batching over a paged KV cache (default) or
-the legacy static-batch path.
+"""Serving driver: continuous batching through the model-agnostic engine.
 
 Mirrors the paper's training/inference duality (§2.1: same model code for
-both). The engine path (``repro.serving``) admits requests from a queue as
-slots and cache blocks free up, retires each on its own EOS/max_new, and
-decodes every running request in one jitted step through per-request block
-tables — no padding to max_len, no decoding to the slowest request's
-horizon. The static ``Server`` is kept for SSM/enc-dec models the paged
-cache doesn't cover yet, and as the equivalence oracle in tests.
+both). The engine (``repro.serving``) admits requests from a queue as
+slots and cache resources free up, retires each on its own EOS/max_new,
+and steps every running request in one jitted budgeted step. Per-family
+runners cover decoder-only transformers (paged KV + prefix caching), pure
+SSM (per-slot Mamba state), hybrid mamba+attention, and encoder-decoder
+(paged self-KV + per-slot cross K/V) — the legacy static-batch ``Server``
+is gone.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2_370m --smoke
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper_large_v3 --smoke
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import compat as _compat  # noqa: F401  (jax API shims)
-from repro.config import ParallelConfig, get_config
-from repro.models import api
-from repro.spmd import steps as steps_mod
-
-
-@dataclass
-class Request:
-    prompt: np.ndarray          # (prompt_len,) int32
-    max_new: int = 16
-
-
-class Server:
-    """Legacy static-batch server: pads every request to a common prompt
-    length, decodes max(max_new) steps for the whole batch."""
-
-    def __init__(self, cfg, mesh, pcfg=None, max_batch: int = 8,
-                 prompt_len: int = 32, max_len: int = 128, seed: int = 0):
-        self.cfg, self.mesh = cfg, mesh
-        self.pcfg = pcfg or ParallelConfig(remat="none")
-        self.max_batch, self.prompt_len, self.max_len = (max_batch,
-                                                         prompt_len, max_len)
-        with jax.set_mesh(mesh):
-            params_f32, specs = api.init_model(cfg, jax.random.key(seed))
-            self.params = jax.tree.map(
-                lambda x: x.astype(jnp.bfloat16), params_f32)
-            self._prefill = jax.jit(
-                steps_mod.make_prefill_step(cfg, self.pcfg))
-            self._decode = jax.jit(
-                steps_mod.make_decode_step(cfg, self.pcfg),
-                donate_argnums=(1,))
-
-    def serve_batch(self, requests: list[Request]) -> list[np.ndarray]:
-        assert len(requests) <= self.max_batch
-        B = len(requests)
-        toks = np.stack([r.prompt[:self.prompt_len] for r in requests])
-        with jax.set_mesh(self.mesh):
-            # prefill at full cache capacity: pad prompt region
-            batch = {"tokens": jnp.asarray(toks, jnp.int32)}
-            if self.cfg.frontend == "vision":
-                batch["positions"] = jnp.broadcast_to(
-                    jnp.arange(self.prompt_len, dtype=jnp.int32)[None, None],
-                    (3, B, self.prompt_len))
-            if self.cfg.frontend == "audio":
-                batch["frames"] = jnp.zeros(
-                    (B, self.cfg.encoder_seq_len, self.cfg.d_model),
-                    jnp.bfloat16)
-            cache, tok = self._prefill(self.params, batch)
-            # grow attention caches to max_len capacity
-            cache = jax.tree_util.tree_map_with_path(self._grow, cache)
-            outs = [tok]
-            max_new = max(r.max_new for r in requests)
-            pos = jnp.full((B,), self.prompt_len, jnp.int32)
-            for _ in range(max_new - 1):
-                tok, cache = self._decode(
-                    self.params, cache,
-                    {"token": tok[:, None], "pos": pos})
-                outs.append(tok)
-                pos = pos + 1
-        gen = np.stack([np.asarray(t) for t in outs], axis=1)
-        return [gen[i, :requests[i].max_new] for i in range(B)]
-
-    def _grow(self, path, x):
-        """Pad self-attention K/V caches (L, B, S, K, hd) from prompt_len
-        to max_len. Keyed on the cache pytree *path* (leaves named "k"/"v"),
-        not shape sniffing: SSM conv/state leaves and enc-dec cross caches
-        ("xk"/"xv") whose shapes happen to collide are left alone."""
-        keys = [p.key for p in path
-                if isinstance(p, jax.tree_util.DictKey)]
-        if not (keys and keys[-1] in ("k", "v")):
-            return x
-        if not (x.ndim == 5 and x.shape[2] == self.prompt_len
-                and x.shape[3] == self.cfg.num_kv_heads
-                and x.shape[-1] == self.cfg.head_dim):
-            return x
-        pad = self.max_len - self.prompt_len
-        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+from repro.config import get_config
 
 
 def poisson_arrival_steps(n: int, rate: float, rng) -> list[int]:
@@ -112,7 +35,7 @@ def poisson_arrival_steps(n: int, rate: float, rng) -> list[int]:
 
 
 def run_engine(cfg, mesh, args):
-    from repro.serving import InferenceEngine, Request as EngRequest
+    from repro.serving import InferenceEngine, Request
     from repro.serving.scheduler import SamplingParams
     eng = InferenceEngine(cfg, mesh, max_batch=args.max_batch,
                           block_size=args.block_size, max_len=args.max_len,
@@ -125,41 +48,30 @@ def run_engine(cfg, mesh, args):
         max_new = max(1, args.max_new - (i % 4) * args.max_new // 4)
         sp = SamplingParams(temperature=args.temperature,
                             top_k=args.top_k, seed=i)
-        reqs.append(EngRequest(
+        frames = None
+        if cfg.frontend == "audio":
+            frames = rng.normal(0, 1, (cfg.encoder_seq_len, cfg.d_model)
+                                ).astype(np.float32)
+        reqs.append(Request(
             rng.integers(0, cfg.vocab_size, args.prompt_len
                          ).astype(np.int32),
-            max_new=max_new, sampling=sp, eos_id=args.eos_id))
+            max_new=max_new, sampling=sp, eos_id=args.eos_id,
+            frames=frames))
     arrivals = poisson_arrival_steps(len(reqs), args.rate, rng)
     outs = eng.run(reqs, arrival_steps=arrivals)
     s = eng.stats
-    print(f"[serve] engine=paged {len(reqs)} requests "
+    print(f"[serve] runner={type(eng.runner).__name__} {len(reqs)} requests "
           f"(poisson rate={args.rate}/step, arrivals={arrivals}), "
           f"{s['tokens']} tokens in {s['wall_s']:.2f}s "
           f"({s['tok_s']:.1f} tok/s incl. compile)")
     print(f"[serve] steps={s['steps']} "
           f"prefill_chunks={s['prefill_chunks']} "
+          f"encodes={s['encodes']} "
           f"preemptions={s['preemptions']} "
           f"cache_hit_tokens={s['cache_hit_tokens']} "
           f"cow_copies={s['cow_copies']} "
           f"peak_block_util={s['peak_block_utilization']:.2f}")
     print("[serve] sample output ids:", outs[reqs[0].rid][:8].tolist())
-    return outs
-
-
-def run_static(cfg, mesh, args):
-    server = Server(cfg, mesh, max_batch=args.max_batch,
-                    prompt_len=args.prompt_len, max_len=args.max_len)
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(rng.integers(0, cfg.vocab_size, args.prompt_len
-                                 ).astype(np.int32), max_new=args.max_new)
-            for _ in range(min(args.requests, args.max_batch))]
-    t0 = time.time()
-    outs = server.serve_batch(reqs)
-    dt = time.time() - t0
-    n_tok = sum(len(o) for o in outs)
-    print(f"[serve] engine=static {len(reqs)} requests, {n_tok} tokens "
-          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
-    print("[serve] sample output ids:", outs[0][:8].tolist())
     return outs
 
 
@@ -169,7 +81,6 @@ def main():
     ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="smoke-size config (default; --no-smoke for full)")
-    ap.add_argument("--engine", choices=("paged", "static"), default="paged")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -182,7 +93,7 @@ def main():
     ap.add_argument("--no-prefix-caching", action="store_true",
                     help="disable cross-request KV block sharing")
     ap.add_argument("--rate", type=float, default=0.5,
-                    help="poisson arrivals per decode step (paged engine)")
+                    help="poisson arrivals per decode step")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=None)
@@ -191,10 +102,7 @@ def main():
     cfg = get_config(args.arch, smoke=args.smoke)
     from repro.launch.mesh import make_host_mesh
     mesh = make_host_mesh(1, 1)
-    if args.engine == "paged":
-        run_engine(cfg, mesh, args)
-    else:
-        run_static(cfg, mesh, args)
+    run_engine(cfg, mesh, args)
 
 
 if __name__ == "__main__":

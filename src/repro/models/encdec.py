@@ -18,11 +18,15 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, ParallelConfig
 from repro.models import modules as m
 from repro.models.attention import (attention_scale, decode_attention,
-                                    init_attention, out_proj, project_kv,
+                                    init_attention, out_proj,
+                                    paged_chunk_attention,
+                                    paged_decode_attention, project_kv,
                                     project_q, sharded_attention,
-                                    update_cache)
-from repro.models.embedding import (decode_logits_argmax, embed, head_table,
-                                    init_embedding, lm_loss)
+                                    update_cache, update_paged_cache,
+                                    update_paged_cache_chunk)
+from repro.models.embedding import (decode_logits, decode_logits_argmax,
+                                    embed, head_table, init_embedding,
+                                    lm_loss)
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm, \
     rope_cos_sin
 from repro.kernels import ops as kops
@@ -149,6 +153,114 @@ def prefill(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
     nxt = decode_logits_argmax(x[:, -1:], head_table(params["embed"], cfg),
                                cfg)
     return caches, nxt
+
+
+def encode_cross_kv(params, frames, cfg: ModelConfig, pcfg: ParallelConfig):
+    """Run the encoder once and project every decoder layer's cross K/V.
+
+    frames: (B, T_enc, d_model) stub embeddings. Returns {"xk", "xv"} each
+    (L, B, T_enc, K, hd) — the serving ``EncoderCache``'s device half,
+    written once per request at admission and read-only afterwards.
+    """
+    enc_out = encode(params, frames, cfg, pcfg)
+
+    def body(_, bp):
+        kx, vx = project_kv(bp["xattn"], enc_out, cfg, None)
+        return None, {"xk": kx, "xv": vx}
+
+    _, kv = jax.lax.scan(body, None, params["decoder"])
+    return kv
+
+
+def prefill_chunk_paged(params, cache, batch, cfg: ModelConfig,
+                        pcfg: ParallelConfig):
+    """One chunk of decoder prompt prefill against a block-paged self-KV
+    cache plus the request's read-only cross K/V.
+
+    batch: tokens (B, C), q_start (B,), q_lens (B,), block_tables (B, nb),
+    ctx_lens (B,). cache: {"self": {"k","v"} page pools (L, NB, bs, K, hd),
+    "cross": {"xk","xv"} (L, B, Te, K, hd) — already sliced to this chunk's
+    slot row. Returns (logits (B, V_pad) fp32 at each row's last valid
+    token, new_cache)."""
+    tokens = batch["tokens"]
+    B, C = tokens.shape
+    x = embed(params["embed"]["table"], tokens, cfg)
+    positions = batch["q_start"][:, None] + jnp.arange(C, dtype=jnp.int32)
+    cos_sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+    scale = attention_scale(cfg)
+    bt, q_start, q_lens = (batch["block_tables"], batch["q_start"],
+                           batch["q_lens"])
+
+    def body(x, xs):
+        bp, c = xs
+        h = apply_norm(bp["norm"], x, cfg)
+        q = project_q(bp["attn"], h, cfg, cos_sin)
+        k, v = project_kv(bp["attn"], h, cfg, cos_sin)
+        kc = update_paged_cache_chunk(c["k"], k, bt, q_start, q_lens)
+        vc = update_paged_cache_chunk(c["v"], v, bt, q_start, q_lens)
+        y = paged_chunk_attention(q, kc, vc, bt, batch["ctx_lens"], q_lens,
+                                  scale=scale)
+        x = x + out_proj(bp["attn"], y, x.dtype)
+        h = apply_norm(bp["xnorm"], x, cfg)
+        qx = project_q(bp["xattn"], h, cfg, None)
+        # cross attention has no query-position dependence, so the exact
+        # prefill op sequence applies chunk by chunk (row-wise identical)
+        yx = sharded_attention(qx, c["xk"], c["xv"], cfg, causal=False,
+                               scale=scale,
+                               chunk_kv=min(1024, c["xk"].shape[1]))
+        x = x + out_proj(bp["xattn"], yx, x.dtype)
+        x = x + apply_mlp(bp["mlp"], apply_norm(bp["norm2"], x, cfg), cfg)
+        return x, {"k": kc, "v": vc}
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"],
+                  {"k": cache["self"]["k"], "v": cache["self"]["v"],
+                   "xk": cache["cross"]["xk"], "xv": cache["cross"]["xv"]}))
+    x = apply_norm(params["final_norm"], x, cfg)
+    last = jnp.clip(q_lens - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    logits = decode_logits(x_last, head_table(params["embed"], cfg), cfg)
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def decode_step_paged(params, cache, batch, cfg: ModelConfig,
+                      pcfg: ParallelConfig):
+    """One decode token per serving slot against the paged self-KV cache
+    and each slot's cross K/V. batch: token (B,1), pos (B,), block_tables
+    (B, nb), ctx_lens (B,). Returns (logits (B, V_pad) fp32, new_cache)."""
+    token, pos = batch["token"], batch["pos"]
+    B = token.shape[0]
+    x = embed(params["embed"]["table"], token, cfg)
+    cos_sin = rope_cos_sin(pos[:, None], cfg.head_dim, cfg.rope_theta)
+    scale = attention_scale(cfg)
+    bt = batch["block_tables"]
+
+    def body(x, xs):
+        bp, c = xs
+        h = apply_norm(bp["norm"], x, cfg)
+        q = project_q(bp["attn"], h, cfg, cos_sin)
+        k, v = project_kv(bp["attn"], h, cfg, cos_sin)
+        kc = update_paged_cache(c["k"], k, bt, pos)
+        vc = update_paged_cache(c["v"], v, bt, pos)
+        y = paged_decode_attention(q, kc, vc, bt, batch["ctx_lens"],
+                                   scale=scale)
+        x = x + out_proj(bp["attn"], y, x.dtype)
+        h = apply_norm(bp["xnorm"], x, cfg)
+        qx = project_q(bp["xattn"], h, cfg, None)
+        Te = c["xk"].shape[1]
+        full = jnp.full((B,), Te - 1, jnp.int32)
+        yx = decode_attention(qx, c["xk"], c["xv"], full, scale=scale)
+        x = x + out_proj(bp["xattn"], yx, x.dtype)
+        x = x + apply_mlp(bp["mlp"], apply_norm(bp["norm2"], x, cfg), cfg)
+        return x, {"k": kc, "v": vc}
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"],
+                  {"k": cache["self"]["k"], "v": cache["self"]["v"],
+                   "xk": cache["cross"]["xk"], "xv": cache["cross"]["xv"]}))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = decode_logits(x, head_table(params["embed"], cfg), cfg)
+    return logits, {"self": new_self, "cross": cache["cross"]}
 
 
 def decode_step(params, cache, batch, cfg: ModelConfig,

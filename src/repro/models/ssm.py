@@ -52,10 +52,14 @@ def init_mamba(cfg: ModelConfig, key):
     return m.merge(*pairs)
 
 
-def _causal_conv(x, w):
-    """Depthwise causal conv. x: (B,S,C); w: (K,C)."""
+def _causal_conv(x, w, left=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C); ``left`` is the K-1 rows
+    of pre-sequence context (zeros when None — the fresh-sequence case)."""
     K = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    if left is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([left.astype(x.dtype), x], axis=1)
     # windowed sum: y_t = sum_k w[k] * x[t-K+1+k]
     y = jnp.zeros_like(x)
     for k in range(K):
@@ -201,6 +205,70 @@ def mamba_block(params, x, cfg: ModelConfig, state=None):
     conv_tail = jnp.concatenate(
         [conv_in_x, conv_in_bc], axis=-1)[:, -(s.conv_kernel - 1):, :]
     return out, (conv_tail, h_last)
+
+
+def mamba_chunk(params, x, cfg: ModelConfig, state, q_lens):
+    """One serving prefill chunk with explicit state continuation.
+
+    x: (B, C, d) — a right-padded chunk of the prompt; q_lens: (B,) valid
+    tokens per row; state = (conv_tail (B, K-1, di+2gn), ssm_state
+    (B, nh, hp, N)) from the previous chunk (all-zeros for a fresh
+    sequence, which reproduces ``mamba_block``'s zero conv padding and
+    zero h0 exactly). Returns (y (B, C, d), new_state).
+
+    Padding rows are *identity* steps: dt is masked to 0 past q_lens, so
+    the decay is exp(0) = 1 and the state contribution dt·B·x = 0 — the
+    carried state is bitwise untouched. When every chunk boundary falls on
+    a multiple of ``cfg.ssm.chunk_size`` (the serving scheduler's chunk
+    quantum; the final chunk is exempt), the inner SSD chunk grouping is
+    identical to a monolithic ``mamba_block`` prefill, so chunked and
+    monolithic greedy outputs match bit for bit.
+    """
+    s: SSMConfig = cfg.ssm
+    B_, C, d = x.shape
+    di, nh, gn = s.d_inner(d), s.n_heads(d), s.n_groups * s.state_dim
+    conv_tail, h0 = state
+
+    z, xi, bc, dt = _split_proj(params, x, cfg)
+    conv_in = jnp.concatenate([xi, bc], axis=-1)            # (B,C,di+2gn)
+    xi = jax.nn.silu(_causal_conv(xi, params["conv_x"].astype(x.dtype),
+                                  left=conv_tail[..., :di]))
+    bc = jax.nn.silu(_causal_conv(bc, params["conv_bc"].astype(x.dtype),
+                                  left=conv_tail[..., di:]))
+    Bmat = bc[..., :gn].reshape(B_, C, s.n_groups, s.state_dim)
+    Cmat = bc[..., gn:].reshape(B_, C, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    valid = jnp.arange(C, dtype=jnp.int32)[None] < q_lens[:, None]
+    dt = jnp.where(valid[..., None], dt, 0.0)   # padding: exact identity
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xi.reshape(B_, C, nh, s.head_dim)
+    pad = (-C) % s.chunk_size
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    from repro.kernels import ops as kops
+    y, h_new = kops.ssd(xh, dt, A, Bmat, Cmat, chunk=s.chunk_size,
+                        h0=h0.astype(jnp.float32))
+    if pad:
+        y, xh = y[:, :C], xh[:, :C]
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B_, C, di)
+    y = rms_norm_fp32(y * jax.nn.silu(z.astype(jnp.float32)),
+                      params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     params["w_out"].astype(x.dtype))
+    # new conv tail = last K-1 conv inputs ending at each row's q_len
+    # (rows with q_len 0 keep their previous tail — self-masking)
+    full_in = jnp.concatenate(
+        [conv_tail.astype(conv_in.dtype), conv_in], axis=1)
+    new_tail = jax.vmap(
+        lambda f, n: jax.lax.dynamic_slice_in_dim(
+            f, n, s.conv_kernel - 1, axis=0))(full_in, q_lens)
+    return out, (new_tail, h_new)
 
 
 def mamba_decode(params, x, cfg: ModelConfig, state):

@@ -208,11 +208,15 @@ def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):
     zero = jnp.zeros((), jnp.float32)
     if kind == "mamba":
         h = apply_norm(bp["norm"], x, cfg)
-        if mode == "decode":
+        if mode in ("decode", "decode_paged"):
+            # the per-slot (conv_tail, ssm_state) cache is the serving
+            # SlotStateCache's device half: same entry for both cache kinds
             y, st = ssm_mod.mamba_decode(bp["mamba"], h, cfg, cache)
             return x + y, st, zero
-        assert mode not in ("decode_paged", "chunk_paged"), \
-            "paged serving: attention blocks only"
+        if mode == "chunk_paged":
+            y, st = ssm_mod.mamba_chunk(bp["mamba"], h, cfg, cache,
+                                        ctx["q_lens"])
+            return x + y, st, zero
         y, st = ssm_mod.mamba_block(bp["mamba"], h, cfg)
         return x + y, (st if mode == "prefill" else None), zero
     if mode == "chunk_paged":

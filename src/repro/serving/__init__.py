@@ -1,9 +1,16 @@
-"""Continuous-batching serving subsystem (paged KV cache + scheduler +
-engine). See README.md in this directory for the architecture."""
+"""Continuous-batching serving subsystem (cache kinds + per-family model
+runners + scheduler + engine). See README.md in this directory for the
+architecture."""
 
+from repro.serving.cache import EncoderCache, PagedKVCache, SlotStateCache
 from repro.serving.engine import InferenceEngine
 from repro.serving.kv_cache import BlockManager, init_paged_cache
+from repro.serving.runners import (EncDecRunner, HybridRunner, ModelRunner,
+                                   SSMRunner, TransformerRunner, make_runner)
 from repro.serving.scheduler import Request, SamplingParams, Scheduler
 
-__all__ = ["InferenceEngine", "BlockManager", "init_paged_cache",
+__all__ = ["InferenceEngine", "BlockManager", "PagedKVCache",
+           "SlotStateCache", "EncoderCache", "init_paged_cache",
+           "ModelRunner", "TransformerRunner", "SSMRunner", "HybridRunner",
+           "EncDecRunner", "make_runner",
            "Request", "SamplingParams", "Scheduler"]

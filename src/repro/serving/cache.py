@@ -1,0 +1,182 @@
+"""Cache-kind abstraction for the model-agnostic serving runtime.
+
+The engine manages three kinds of per-request device state, mirroring the
+paper's argument that shared mutable state should be managed by uniform
+primitives rather than per-workload machinery:
+
+* **Paged KV** (:class:`PagedKVCache` — the refcounted, content-hashed
+  ``BlockManager`` from :mod:`repro.serving.kv_cache`): growing attention
+  K/V, block-granular, shareable across requests (prefix cache, COW).
+* **Slot state** (:class:`SlotStateCache`): *constant-size* per-request
+  state — a Mamba block's (conv_tail, ssm_state). One slot per running
+  request; nothing grows, nothing is shared, there is no block horizon.
+  The device half is a pytree with a slot axis (``init_slot_state``).
+* **Encoder state** (:class:`EncoderCache`): read-only per-request
+  cross-attention K/V, written once by an encode pass at admission and
+  never touched by the step (``init_encoder_cache``).
+
+Host-side managers here are pure bookkeeping (which slot belongs to which
+request); the scheduler consults them for admission and the engine for
+array building. Block-based bookkeeping stays in ``kv_cache.BlockManager``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.serving.kv_cache import BlockManager, mamba_layer_stacks
+
+# the paged cache kind IS the refcounted/hashed block manager
+PagedKVCache = BlockManager
+
+__all__ = ["PagedKVCache", "SlotStateCache", "EncoderCache",
+           "SlotCacheStats", "init_slot_state", "init_encoder_cache",
+           "slot_state_bytes", "encoder_cache_bytes"]
+
+
+@dataclass
+class SlotCacheStats:
+    n_slots: int
+    in_use: int
+
+    @property
+    def utilization(self) -> float:
+        return self.in_use / max(self.n_slots, 1)
+
+
+class SlotStateCache:
+    """Host-side allocator for constant-size per-slot device state.
+
+    Each running request owns exactly one slot for its whole residence;
+    preemption and retirement free the slot (``free``), and a preempted
+    request's recompute starts from zeroed state (the runner zeroes the
+    slot row on a fresh chunk, so stale state from a previous occupant is
+    never read). Slots are never shared — there is no refcounting, no
+    content hashing, and no block horizon to validate against.
+    """
+
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self._slot_of: dict[int, int] = {}      # rid -> slot
+        self._rid_of: dict[int, int] = {}       # slot -> rid
+
+    # -- queries ----------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return self.n_slots - len(self._rid_of)
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.n_slots) if s not in self._rid_of]
+
+    def slot(self, rid: int) -> int:
+        return self._slot_of[rid]
+
+    def owner(self, slot: int) -> int | None:
+        return self._rid_of.get(slot)
+
+    def stats(self) -> SlotCacheStats:
+        return SlotCacheStats(n_slots=self.n_slots,
+                              in_use=len(self._rid_of))
+
+    # -- mutations --------------------------------------------------------
+
+    def allocate(self, rid: int, slot: int | None = None) -> int:
+        """Bind ``rid`` to ``slot`` (or the lowest free slot). Raises
+        KeyError on double-allocation, MemoryError when no slot is free or
+        the requested slot is taken."""
+        if rid in self._slot_of:
+            raise KeyError(f"request {rid} already holds a slot")
+        if slot is None:
+            free = self.free_slots()
+            if not free:
+                raise MemoryError("no free slots")
+            slot = free[0]
+        else:
+            if not (0 <= slot < self.n_slots):
+                raise ValueError(f"slot {slot} out of range")
+            if slot in self._rid_of:
+                raise MemoryError(
+                    f"slot {slot} is held by request {self._rid_of[slot]}")
+        self._slot_of[rid] = slot
+        self._rid_of[slot] = rid
+        return slot
+
+    def free(self, rid: int) -> int:
+        """Release rid's slot (retire or preempt). Returns the slot."""
+        slot = self._slot_of.pop(rid)
+        del self._rid_of[slot]
+        return slot
+
+    def check(self) -> None:
+        """Invariants: rid<->slot maps are a bijection within range."""
+        assert len(self._slot_of) == len(self._rid_of)
+        for rid, slot in self._slot_of.items():
+            assert 0 <= slot < self.n_slots, (rid, slot)
+            assert self._rid_of.get(slot) == rid, "slot maps disagree"
+
+
+class EncoderCache(SlotStateCache):
+    """Per-slot *read-only* encoder state (cross-attention K/V).
+
+    Same slot discipline as :class:`SlotStateCache`; the distinguishing
+    contract is that the step function never writes it — only the encode
+    pass at admission does, so a slot row is immutable for the bound
+    request's whole residence (recompute after preemption re-encodes)."""
+
+
+# ---------------------------------------------------------------------------
+# Device-side state builders (the zero pytrees the runners hand to jit)
+# ---------------------------------------------------------------------------
+
+
+def init_slot_state(cfg: ModelConfig, n_slots: int, dtype=jnp.bfloat16):
+    """Zero per-slot Mamba state for every mamba layer stack:
+    {sub_i: (conv_tail (NP, S, K-1, di+2gn) dtype,
+             ssm_state (NP, S, nh, hp, N) fp32)} with S = n_slots.
+    Matches ``transformer.init_cache``'s mamba leaves, slot axis = batch."""
+    from repro.models.transformer import period_structure
+    s = cfg.ssm
+    assert s is not None
+    _, NP = period_structure(cfg)
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.state_dim
+    tail = (NP, n_slots, s.conv_kernel - 1, di + 2 * gn)
+    h = (NP, n_slots, s.n_heads(cfg.d_model), s.head_dim, s.state_dim)
+    return {name: (jnp.zeros(tail, dtype), jnp.zeros(h, jnp.float32))
+            for name in mamba_layer_stacks(cfg)}
+
+
+def init_encoder_cache(cfg: ModelConfig, n_slots: int, dtype=jnp.bfloat16):
+    """Zero per-slot cross-attention K/V: {"xk","xv"} each
+    (L, n_slots, T_enc, K, hd), matching ``encdec.encode_cross_kv``."""
+    shape = (cfg.num_layers, n_slots, cfg.encoder_seq_len,
+             cfg.num_kv_heads, cfg.head_dim)
+    return {"xk": jnp.zeros(shape, dtype), "xv": jnp.zeros(shape, dtype)}
+
+
+def slot_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """HBM bytes of one slot's Mamba state across every mamba stack."""
+    s = cfg.ssm
+    if s is None:
+        return 0
+    from repro.models.transformer import period_structure
+    _, NP = period_structure(cfg)
+    n_stacks = len(mamba_layer_stacks(cfg))
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.state_dim
+    tail = (s.conv_kernel - 1) * (di + 2 * gn) * dtype_bytes
+    h = s.n_heads(cfg.d_model) * s.head_dim * s.state_dim * 4   # fp32
+    return NP * n_stacks * (tail + h)
+
+
+def encoder_cache_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """HBM bytes of one slot's cross-attention K/V."""
+    if not cfg.encoder_layers:
+        return 0
+    return (2 * cfg.num_layers * cfg.encoder_seq_len * cfg.num_kv_heads
+            * cfg.head_dim * dtype_bytes)

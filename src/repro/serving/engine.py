@@ -1,29 +1,31 @@
-"""Continuous-batching inference engine over a block-paged KV cache.
+"""Continuous-batching inference engine over per-family model runners.
 
-One ``InferenceEngine`` owns: model params, the paged KV pools, a
-``BlockManager`` and a ``Scheduler``. Every iteration is **one jitted
-step** spending a token budget (``max_num_batched_tokens``):
+One ``InferenceEngine`` owns: model params, a :class:`ModelRunner` (which
+declares the cache kinds it needs and builds the device cache), the host
+cache managers (``BlockManager`` for paged KV, ``SlotStateCache`` /
+``EncoderCache`` for constant-size per-slot state), and a ``Scheduler``.
+Every iteration is **one jitted step** spending a token budget
+(``max_num_batched_tokens``):
 
     while work:
         plan = scheduler.schedule()       # decodes (1 tok each) + one
                                           # prefill chunk, within budget
-        apply the plan's COW page copies
-        one jitted step:
-            chunk: C-token slice of one prompt, attention against the
-                paged cache (prior chunks read through the block table,
-                this chunk's KV scattered in), logits at its last token
+        run admission-time encode passes (enc-dec), apply COW page copies
+        one jitted runner step:
+            chunk: C-token slice of one prompt (attention against the
+                paged cache and/or SSM state continuation), logits at its
+                last token
             decode: full max_batch-wide batch, one token per running slot
             per-slot sampling over decode logits + the chunk's logits
         append sampled tokens; retire on EOS/max_new; publish content
-            hashes of newly-full blocks (prefix cache)
+            hashes of newly-full blocks (paged prefix cache only)
 
 The decode half always runs at the full ``max_batch`` width — idle slots
-are masked with ctx_len 0 and their KV writes land in the trash block.
-The chunk half always runs at the fixed ``chunk_width``. So there are
-exactly **two** compiled executables (step with / without a chunk)
-regardless of occupancy or prompt length — the per-prompt-length bucket
-compilation family is gone, and a long prompt streams in chunk by chunk
-while running decodes keep making progress every step.
+are masked with ctx_len 0: their KV writes land in the trash block and
+their slot-state rows are reverted after the step. The chunk half always
+runs at the fixed ``chunk_width``. So there are exactly **two** compiled
+step executables per model family (with / without a chunk) regardless of
+occupancy or prompt length, plus one encode executable for enc-dec.
 
 Time is measured in engine steps; request arrivals are given in the same
 unit so runs are deterministic and testable (launch/serve.py maps Poisson
@@ -42,10 +44,10 @@ import numpy as np
 
 from repro.config import ModelConfig, ParallelConfig
 from repro.models import api
-from repro.models import transformer
-from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes,
-                                    init_paged_cache)
-from repro.serving.sampling import sample_tokens
+from repro.serving.cache import (EncoderCache, SlotStateCache,
+                                 encoder_cache_bytes, slot_state_bytes)
+from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes)
+from repro.serving.runners import make_runner
 from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
                                      StepPlan)
 
@@ -56,16 +58,6 @@ __all__ = ["InferenceEngine", "Request", "SamplingParams"]
 LATENCY_RECORD_CAP = 4096
 
 
-def _engine_supported(cfg: ModelConfig) -> str | None:
-    if cfg.ssm is not None:
-        return "SSM state is not block-pageable"
-    if cfg.encoder_layers:
-        return "encoder-decoder cross caches are not paged"
-    if cfg.frontend is not None:
-        return "modality frontends need per-request position streams"
-    return None
-
-
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, mesh, pcfg: ParallelConfig = None,
                  *, max_batch: int = 8, block_size: int = 16,
@@ -74,13 +66,9 @@ class InferenceEngine:
                  enable_prefix_caching: bool = True,
                  debug_invariants: bool = False,
                  seed: int = 0, params=None):
-        why = _engine_supported(cfg)
-        if why is not None:
-            raise ValueError(
-                f"paged engine does not support {cfg.name}: {why}; "
-                "use the static launch.serve.Server path")
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
+        self.runner = make_runner(cfg, self.pcfg)   # raises if unsupported
         self.block_size = block_size
         self.max_len = max_len
         self.max_blocks_per_seq = -(-max_len // block_size)
@@ -94,10 +82,22 @@ class InferenceEngine:
         # together stay within the budget; no chunk can exceed max_len, so
         # a huge budget must not widen the compiled buffer past it
         self.chunk_width = min(max_num_batched_tokens - max_batch, max_len)
-        self.bm = BlockManager(num_blocks, block_size)
+        self.bm = (BlockManager(num_blocks, block_size)
+                   if self.runner.needs_blocks else None)
+        self.slot_cache = (SlotStateCache(max_batch)
+                           if self.runner.needs_slots else None)
+        self.encoder_cache = (EncoderCache(max_batch)
+                              if self.runner.needs_encoder else None)
+        # prefix caching requires KV that is a pure function of the token
+        # prefix — only the paged transformer kind qualifies
+        enable_prefix_caching = (enable_prefix_caching
+                                 and self.runner.supports_prefix_caching)
         self.sched = Scheduler(self.bm, max_batch, self.max_blocks_per_seq,
                                max_num_batched_tokens, self.chunk_width,
-                               enable_prefix_caching=enable_prefix_caching)
+                               enable_prefix_caching=enable_prefix_caching,
+                               chunk_quantum=self.runner.chunk_quantum,
+                               slot_cache=self.slot_cache,
+                               encoder_cache=self.encoder_cache)
         self.max_batch = max_batch
         self.debug_invariants = debug_invariants
 
@@ -107,109 +107,98 @@ class InferenceEngine:
                 params = jax.tree.map(
                     lambda x: x.astype(jnp.bfloat16), params_f32)
             self.params = params
-            self.cache = init_paged_cache(cfg, num_blocks, block_size)
+            self.cache = self.runner.init_cache(num_blocks, block_size,
+                                                max_batch)
 
         self._step_chunk = jax.jit(
-            functools.partial(self._step_fn, has_chunk=True),
+            functools.partial(self.runner.step, has_chunk=True),
             donate_argnums=(1,))
         self._step_plain = jax.jit(
-            functools.partial(self._step_fn, has_chunk=False),
+            functools.partial(self.runner.step, has_chunk=False),
             donate_argnums=(1,))
-        self._copy_block = jax.jit(self._copy_block_fn, donate_argnums=(0,))
+        if self.runner.needs_encoder:
+            self._encode = jax.jit(self.runner.encode, donate_argnums=(1,))
+        if self.runner.needs_blocks:
+            self._copy_block = jax.jit(self._copy_block_fn,
+                                       donate_argnums=(0,))
 
+        cache_mib = 0.0
+        if self.runner.needs_blocks:
+            cache_mib += num_blocks * block_bytes(cfg, block_size)
+        if self.runner.needs_slots:
+            cache_mib += max_batch * slot_state_bytes(cfg)
+        if self.runner.needs_encoder:
+            cache_mib += max_batch * encoder_cache_bytes(cfg)
         self.stats = {"steps": 0, "prefill_chunks": 0, "preemptions": 0,
                       "tokens": 0, "cache_hit_tokens": 0, "cow_copies": 0,
+                      "encodes": 0,
                       "peak_block_utilization": 0.0, "peak_blocks_in_use": 0,
                       "latency": {},
-                      "kv_cache_mib": round(
-                          num_blocks * block_bytes(cfg, block_size)
-                          / 2 ** 20, 3)}
+                      "kv_cache_mib": round(cache_mib / 2 ** 20, 3)}
         self.step_count = 0           # virtual clock: one step() = one tick
 
     # -- jitted bodies -----------------------------------------------------
 
-    def _step_fn(self, params, cache, c_tok, c_start, c_len, c_table,
-                 d_tok, d_pos, d_tables, d_active,
-                 temps, top_ks, seeds, counters, *, has_chunk):
-        """One budgeted step: optional prefill chunk, then the wide decode.
-
-        The two halves touch disjoint pages — a request is either in the
-        chunk or the decode batch, shared prefix blocks are read-only to
-        both (COW guarantees no write lands in a shared block) — so their
-        in-step order is irrelevant.
-
-        Sampling rows: 0..B-1 are the decode slots, row B is the chunk's
-        last valid token (consumed only when the chunk finishes a prompt).
-        """
-        if has_chunk:
-            logits_c, cache = transformer.prefill_chunk_paged(
-                params, cache,
-                {"tokens": c_tok, "q_start": c_start, "q_lens": c_len,
-                 "block_tables": c_table, "ctx_lens": c_start + c_len},
-                self.cfg, self.pcfg)
-        ctx_lens = jnp.where(d_active, d_pos + 1, 0)
-        logits_d, cache = transformer.decode_step_paged(
-            params, cache,
-            {"token": d_tok[:, None], "pos": d_pos,
-             "block_tables": d_tables, "ctx_lens": ctx_lens},
-            self.cfg, self.pcfg)
-        if not has_chunk:
-            logits_c = jnp.zeros_like(logits_d[:1])
-        logits = jnp.concatenate([logits_d, logits_c], axis=0)
-        nxt = sample_tokens(logits, temps, top_ks, seeds, counters)
-        return nxt, cache
-
     def _copy_block_fn(self, cache, src, dst):
-        """Copy one pool row (every layer stack, k and v) — the device half
-        of a copy-on-write."""
-        return jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]), cache)
+        """Copy one pool row (every attention layer stack, k and v) — the
+        device half of a copy-on-write. Only paged leaves have a
+        num_blocks axis; slot-state and encoder leaves are left alone."""
+        nb = self.bm.num_blocks
+
+        def leaf(p):
+            if p.ndim >= 2 and p.shape[1] == nb:
+                return p.at[:, dst].set(p[:, src])
+            return p
+
+        return jax.tree.map(leaf, cache)
 
     # -- host-side step ----------------------------------------------------
 
-    def _build_arrays(self, plan: StepPlan):
+    def _build_arrays(self, plan: StepPlan) -> dict:
         B, C, nbmax = self.max_batch, self.chunk_width, self.max_blocks_per_seq
-        d_tok = np.zeros(B, np.int32)
-        d_pos = np.zeros(B, np.int32)
-        d_tables = np.zeros((B, nbmax), np.int32)
-        d_active = np.zeros(B, bool)
-        temps = np.zeros(B + 1, np.float32)
-        top_ks = np.zeros(B + 1, np.int32)
-        seeds = np.zeros(B + 1, np.int32)
-        counters = np.zeros(B + 1, np.int32)
+        a = {"d_tok": np.zeros(B, np.int32),
+             "d_pos": np.zeros(B, np.int32),
+             "d_tables": np.zeros((B, nbmax), np.int32),
+             "d_active": np.zeros(B, bool),
+             "temps": np.zeros(B + 1, np.float32),
+             "top_ks": np.zeros(B + 1, np.int32),
+             "seeds": np.zeros(B + 1, np.int32),
+             "rids": np.zeros(B + 1, np.int32),
+             "counters": np.zeros(B + 1, np.int32),
+             "c_tok": np.zeros((1, C), np.int32),
+             "c_start": np.zeros(1, np.int32),
+             "c_len": np.zeros(1, np.int32),
+             "c_slot": np.zeros(1, np.int32),
+             "c_table": np.full((1, nbmax), TRASH_BLOCK, np.int32)}
 
         def samp(i, req):
-            temps[i] = req.sampling.temperature
-            top_ks[i] = req.sampling.top_k
-            seeds[i] = req.sampling.seed
-            counters[i] = len(req.out)
+            a["temps"][i] = req.sampling.temperature
+            a["top_ks"][i] = req.sampling.top_k
+            a["seeds"][i] = req.sampling.seed
+            a["rids"][i] = req.rid
+            a["counters"][i] = len(req.out)
 
         for slot, req in plan.decodes:
-            d_active[slot] = True
-            d_tok[slot] = req.out[-1]
-            d_pos[slot] = req.context_len - 1    # write position of out[-1]
-            row = self.bm.table(req.rid)
-            d_tables[slot, :len(row)] = row
+            a["d_active"][slot] = True
+            a["d_tok"][slot] = req.out[-1]
+            a["d_pos"][slot] = req.context_len - 1  # write position of out[-1]
+            if self.bm is not None:
+                row = self.bm.table(req.rid)
+                a["d_tables"][slot, :len(row)] = row
             samp(slot, req)
 
-        c_tok = np.zeros((1, C), np.int32)
-        c_start = np.zeros(1, np.int32)
-        c_len = np.zeros(1, np.int32)
-        c_table = np.full((1, nbmax), TRASH_BLOCK, np.int32)
         if plan.chunk is not None:
-            _, req, n = plan.chunk
+            slot, req, n = plan.chunk
             toks = req.prefill_tokens()
-            c_tok[0, :n] = toks[req.num_computed:req.num_computed + n]
-            c_start[0] = req.num_computed
-            c_len[0] = n
-            row = self.bm.table(req.rid)
-            c_table[0, :len(row)] = row
+            a["c_tok"][0, :n] = toks[req.num_computed:req.num_computed + n]
+            a["c_start"][0] = req.num_computed
+            a["c_len"][0] = n
+            a["c_slot"][0] = slot
+            if self.bm is not None:
+                row = self.bm.table(req.rid)
+                a["c_table"][0, :len(row)] = row
             samp(B, req)
-        return (jnp.asarray(c_tok), jnp.asarray(c_start),
-                jnp.asarray(c_len), jnp.asarray(c_table),
-                jnp.asarray(d_tok), jnp.asarray(d_pos),
-                jnp.asarray(d_tables), jnp.asarray(d_active),
-                jnp.asarray(temps), jnp.asarray(top_ks),
-                jnp.asarray(seeds), jnp.asarray(counters))
+        return {k: jnp.asarray(v) for k, v in a.items()}
 
     def _lat(self, rid: int) -> dict:
         return self.stats["latency"].setdefault(rid, {})
@@ -241,19 +230,35 @@ class InferenceEngine:
                             break
             self.sched.retire(slot)
 
+    def _run_encodes(self, plan: StepPlan) -> None:
+        """Admission-time encoder passes: write each new request's cross
+        K/V into its slot row before any decoder work touches it."""
+        for slot, req in plan.encodes:
+            frames = req.frames
+            if frames is None:
+                frames = np.zeros(
+                    (self.cfg.encoder_seq_len, self.cfg.d_model),
+                    np.float32)
+            self.cache = self._encode(
+                self.params, self.cache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(frames, jnp.bfloat16))
+            self.stats["encodes"] += 1
+
     def step(self) -> bool:
         """One engine iteration. Returns True when any work ran."""
         with jax.set_mesh(self.mesh):
             plan = self.sched.schedule()
             self.stats["preemptions"] = self.sched.n_preemptions
             self.stats["cache_hit_tokens"] = self.sched.cache_hit_tokens
-            st = self.bm.stats()
-            self.stats["peak_block_utilization"] = max(
-                self.stats["peak_block_utilization"], st.utilization)
-            self.stats["peak_blocks_in_use"] = max(
-                self.stats["peak_blocks_in_use"], st.blocks_in_use)
+            if self.bm is not None:
+                st = self.bm.stats()
+                self.stats["peak_block_utilization"] = max(
+                    self.stats["peak_block_utilization"], st.utilization)
+                self.stats["peak_blocks_in_use"] = max(
+                    self.stats["peak_blocks_in_use"], st.blocks_in_use)
             if self.debug_invariants:
                 self._check_invariants(plan)
+            self._run_encodes(plan)
             for src, dst in plan.copies:
                 self.stats["cow_copies"] += 1
                 self.cache = self._copy_block(
@@ -268,7 +273,7 @@ class InferenceEngine:
             arrays = self._build_arrays(plan)
             step_exec = (self._step_chunk if plan.chunk is not None
                          else self._step_plain)
-            nxt, self.cache = step_exec(self.params, self.cache, *arrays)
+            nxt, self.cache = step_exec(self.params, self.cache, arrays)
             nxt = np.asarray(nxt)
             for slot, req in plan.decodes:
                 req.num_computed += 1
@@ -283,11 +288,19 @@ class InferenceEngine:
                     self.sched.note_progress(req)
             self.stats["steps"] += 1
             self.step_count += 1
-            if self.debug_invariants:
+            if self.debug_invariants and self.bm is not None:
                 self.bm.check()
             return True
 
     def _check_invariants(self, plan: StepPlan) -> None:
+        for cache in (self.slot_cache, self.encoder_cache):
+            if cache is not None:
+                cache.check()
+                for slot, req in self.sched.running.items():
+                    assert cache.slot(req.rid) == slot, (req.rid, slot)
+        assert plan.scheduled_tokens <= self.max_num_batched_tokens
+        if self.bm is None:
+            return
         self.bm.check()
         bs = self.block_size
         for slot, req in self.sched.running.items():
@@ -309,7 +322,6 @@ class InferenceEngine:
             j = (req.context_len - 1) // bs
             assert self.bm.refcount(t[j]) == 1, \
                 f"decode would write shared block {t[j]}"
-        assert plan.scheduled_tokens <= self.max_num_batched_tokens
 
     def run(self, requests: list[Request],
             arrival_steps: list[int] | None = None) -> dict[int, np.ndarray]:
@@ -337,9 +349,11 @@ class InferenceEngine:
                 # defensive: the scheduler admits whenever a slot is free
                 # and raises MemoryError itself when the pool can't ever
                 # fit, so reaching this means a scheduling-policy bug
+                state = (self.bm.stats() if self.bm is not None
+                         else self.slot_cache.stats())
                 raise RuntimeError(
                     "engine stuck: scheduler made no progress with work "
-                    f"pending — {self.bm.stats()}")
+                    f"pending — {state}")
         dt = time.time() - t0
         self.stats["wall_s"] = round(dt, 3)
         self.stats["tok_s"] = round((self.stats["tokens"] - tok0)

@@ -82,15 +82,25 @@ def attn_layer_stacks(cfg: ModelConfig) -> list[str]:
     return out
 
 
+def mamba_layer_stacks(cfg: ModelConfig) -> list[str]:
+    """Names of the scanned cache sub-stacks holding per-slot SSM state."""
+    kinds, _ = period_structure(cfg)
+    return [f"sub{i}" for i, k in enumerate(kinds) if k == "mamba"]
+
+
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                      dtype=jnp.bfloat16):
-    """Zero page pools matching ``transformer.decode_step_paged``."""
+    """Zero page pools matching ``transformer.decode_step_paged``.
+
+    Covers the *attention* stacks only; mamba stacks carry constant-size
+    per-slot state (``serving.cache.init_slot_state``) rather than paged
+    KV — a hybrid model's serving cache is the union of both."""
     kinds, NP = period_structure(cfg)
     shape = (NP, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
     cache = {}
     for i, kind in enumerate(kinds):
         if kind == "mamba":
-            raise ValueError("paged cache: attention-only models")
+            continue
         cache[f"sub{i}"] = {"k": jnp.zeros(shape, dtype),
                             "v": jnp.zeros(shape, dtype)}
     if cfg.shared_attn_period:

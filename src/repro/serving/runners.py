@@ -1,0 +1,241 @@
+"""Per-family model runners for the serving engine.
+
+A :class:`ModelRunner` owns everything family-specific about serving one
+model: which cache kinds it needs (paged KV blocks / per-slot SSM state /
+read-only encoder state), how to build the zero device cache, and the
+jitted budgeted step — one prefill chunk plus the wide decode batch plus
+per-slot sampling. ``InferenceEngine`` and the ``Scheduler`` see only the
+runner's declared cache needs and its step/encode callables, so admitting
+a Mamba request and a transformer request is the same control flow.
+
+Runners:
+
+* :class:`TransformerRunner` — decoder-only attention models (paged KV).
+* :class:`SSMRunner` — pure Mamba2 (slot state only; no block horizon).
+* :class:`HybridRunner` — zamba2's interleaved mamba + shared attention
+  (slot state for the mamba stacks, paged KV for the attention stacks,
+  one block table spanning the attention layers).
+* :class:`EncDecRunner` — whisper (paged decoder self-KV + per-slot
+  read-only cross K/V written by an encode pass at admission).
+
+The step functions are shape-stable: decode always runs ``max_batch``
+wide (idle slots masked; their KV writes land in the trash block, their
+slot-state rows are reverted after the step), the chunk always runs at
+``chunk_width``. Sampling row B is the chunk's last-token logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.models import encdec, transformer
+from repro.serving.cache import init_encoder_cache, init_slot_state
+from repro.serving.kv_cache import (init_paged_cache, attn_layer_stacks,
+                                    mamba_layer_stacks)
+from repro.serving.sampling import sample_tokens
+
+__all__ = ["ModelRunner", "TransformerRunner", "SSMRunner", "HybridRunner",
+           "EncDecRunner", "make_runner"]
+
+
+def _slice_slot(tree, slot):
+    """Gather one slot row (axis 1 after the layer-stack dim) -> width 1."""
+    return jax.tree.map(
+        lambda t: jax.lax.dynamic_slice_in_dim(t, slot, 1, axis=1), tree)
+
+
+def _scatter_slot(full, row, slot):
+    """Write a width-1 slot row back (inverse of ``_slice_slot``)."""
+    return jax.tree.map(
+        lambda f, r: jax.lax.dynamic_update_slice_in_dim(
+            f, r.astype(f.dtype), slot, axis=1), full, row)
+
+
+def _mask_slot_rows(new, old, active):
+    """Keep updated state only for active decode slots; idle slots must
+    not have their state corrupted by the masked wide-batch compute."""
+    def leaf(n, o):
+        m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, o)
+    return jax.tree.map(leaf, new, old)
+
+
+class ModelRunner:
+    """Family-agnostic interface the engine/scheduler program against."""
+
+    needs_blocks: bool = False        # paged KV pools + block tables
+    needs_slots: bool = False         # constant-size per-slot SSM state
+    needs_encoder: bool = False       # read-only per-slot cross K/V
+    supports_prefix_caching: bool = False
+    chunk_quantum: int = 1            # chunk lengths must be multiples
+                                      # (except a prompt's final chunk)
+
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig):
+        self.cfg, self.pcfg = cfg, pcfg
+
+    def init_cache(self, num_blocks: int, block_size: int, max_batch: int):
+        raise NotImplementedError
+
+    def step(self, params, cache, a, *, has_chunk: bool):
+        """One budgeted step. ``a`` is the engine's array dict (chunk row,
+        decode batch, sampling params). Returns (sampled (B+1,), cache)."""
+        raise NotImplementedError
+
+    def encode(self, params, cache, slot, frames):
+        """Admission-time encode pass (enc-dec only)."""
+        raise NotImplementedError
+
+    # -- shared step halves ------------------------------------------------
+
+    def _sample(self, logits_d, logits_c, a, has_chunk):
+        if not has_chunk:
+            logits_c = jnp.zeros_like(logits_d[:1])
+        logits = jnp.concatenate([logits_d, logits_c], axis=0)
+        return sample_tokens(logits, a["temps"], a["top_ks"], a["seeds"],
+                             a["rids"], a["counters"])
+
+    @staticmethod
+    def _chunk_batch(a):
+        return {"tokens": a["c_tok"], "q_start": a["c_start"],
+                "q_lens": a["c_len"], "block_tables": a["c_table"],
+                "ctx_lens": a["c_start"] + a["c_len"]}
+
+    @staticmethod
+    def _decode_batch(a):
+        ctx_lens = jnp.where(a["d_active"], a["d_pos"] + 1, 0)
+        return {"token": a["d_tok"][:, None], "pos": a["d_pos"],
+                "block_tables": a["d_tables"], "ctx_lens": ctx_lens}
+
+
+class TransformerRunner(ModelRunner):
+    """Decoder-only attention families: everything is paged KV, prefix
+    caching applies (KV depends only on the token prefix)."""
+
+    needs_blocks = True
+    supports_prefix_caching = True
+
+    def init_cache(self, num_blocks, block_size, max_batch):
+        return init_paged_cache(self.cfg, num_blocks, block_size)
+
+    def step(self, params, cache, a, *, has_chunk):
+        if has_chunk:
+            logits_c, cache = transformer.prefill_chunk_paged(
+                params, cache, self._chunk_batch(a), self.cfg, self.pcfg)
+        else:
+            logits_c = None
+        logits_d, cache = transformer.decode_step_paged(
+            params, cache, self._decode_batch(a), self.cfg, self.pcfg)
+        return self._sample(logits_d, logits_c, a, has_chunk), cache
+
+
+class SSMRunner(ModelRunner):
+    """Pure Mamba2: constant-size slot state, no blocks, no horizon.
+    Prefix caching is off — a cached block id cannot stand in for the
+    recurrent state that produced it."""
+
+    needs_slots = True
+
+    def __init__(self, cfg, pcfg):
+        super().__init__(cfg, pcfg)
+        self._state_keys = tuple(mamba_layer_stacks(cfg))
+        # serving chunk boundaries must land on SSD inner-chunk boundaries
+        # so chunked prefill is bit-identical to a monolithic one
+        self.chunk_quantum = cfg.ssm.chunk_size
+        self.needs_blocks = bool(attn_layer_stacks(cfg))
+
+    def init_cache(self, num_blocks, block_size, max_batch):
+        cache = (init_paged_cache(self.cfg, num_blocks, block_size)
+                 if self.needs_blocks else {})
+        cache.update(init_slot_state(self.cfg, max_batch))
+        return cache
+
+    def step(self, params, cache, a, *, has_chunk):
+        logits_c = None
+        if has_chunk:
+            slot = a["c_slot"][0]
+            fresh = a["c_start"][0] == 0
+            chunk_cache = {}
+            for key, val in cache.items():
+                if key in self._state_keys:
+                    st = _slice_slot(val, slot)
+                    # first chunk after (re)admission starts from zeros —
+                    # never from a previous occupant's state
+                    st = jax.tree.map(
+                        lambda t: jnp.where(fresh, jnp.zeros_like(t), t),
+                        st)
+                    chunk_cache[key] = st
+                else:
+                    chunk_cache[key] = val
+            logits_c, out = transformer.prefill_chunk_paged(
+                params, chunk_cache, self._chunk_batch(a), self.cfg,
+                self.pcfg)
+            cache = {key: (_scatter_slot(cache[key], out[key], slot)
+                           if key in self._state_keys else out[key])
+                     for key in cache}
+        old_state = {key: cache[key] for key in self._state_keys}
+        logits_d, cache = transformer.decode_step_paged(
+            params, cache, self._decode_batch(a), self.cfg, self.pcfg)
+        for key in self._state_keys:
+            cache[key] = _mask_slot_rows(cache[key], old_state[key],
+                                         a["d_active"])
+        return self._sample(logits_d, logits_c, a, has_chunk), cache
+
+
+class HybridRunner(SSMRunner):
+    """zamba2: mamba stacks carry slot state, the shared attention block
+    reads/writes paged KV through one block table per sequence."""
+
+
+class EncDecRunner(ModelRunner):
+    """whisper: paged decoder self-KV + read-only per-slot cross K/V
+    (written once by ``encode`` at admission). Prefix caching is off —
+    decoder KV depends on the request's encoder output, so equal token
+    prefixes do *not* imply equal KV."""
+
+    needs_blocks = True
+    needs_encoder = True
+
+    def init_cache(self, num_blocks, block_size, max_batch):
+        cfg = self.cfg
+        shape = (cfg.num_layers, num_blocks, block_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        return {"self": {"k": jnp.zeros(shape, jnp.bfloat16),
+                         "v": jnp.zeros(shape, jnp.bfloat16)},
+                "cross": init_encoder_cache(cfg, max_batch)}
+
+    def encode(self, params, cache, slot, frames):
+        kv = encdec.encode_cross_kv(params, frames[None], self.cfg,
+                                    self.pcfg)
+        return {"self": cache["self"],
+                "cross": _scatter_slot(cache["cross"], kv, slot)}
+
+    def step(self, params, cache, a, *, has_chunk):
+        logits_c = None
+        if has_chunk:
+            cross_row = _slice_slot(cache["cross"], a["c_slot"][0])
+            logits_c, out = encdec.prefill_chunk_paged(
+                params, {"self": cache["self"], "cross": cross_row},
+                self._chunk_batch(a), self.cfg, self.pcfg)
+            cache = {"self": out["self"], "cross": cache["cross"]}
+        logits_d, out = encdec.decode_step_paged(
+            params, cache, self._decode_batch(a), self.cfg, self.pcfg)
+        cache = {"self": out["self"], "cross": cache["cross"]}
+        return self._sample(logits_d, logits_c, a, has_chunk), cache
+
+
+def make_runner(cfg: ModelConfig, pcfg: ParallelConfig) -> ModelRunner:
+    """Family dispatch. Raises for configs no runner covers yet."""
+    if cfg.frontend == "vision":
+        raise ValueError(
+            f"no serving runner for {cfg.name}: modality frontends need "
+            "per-request position streams")
+    if cfg.encoder_layers:
+        return EncDecRunner(cfg, pcfg)
+    if cfg.ssm is not None:
+        if cfg.shared_attn_period or any(
+                k != "mamba" for k in cfg.block_pattern):
+            return HybridRunner(cfg, pcfg)
+        return SSMRunner(cfg, pcfg)
+    return TransformerRunner(cfg, pcfg)

@@ -2,9 +2,12 @@
 
 Every slot samples with its own ``SamplingParams``: temperature 0 is exact
 greedy (argmax, no RNG), otherwise temperature + optional top-k truncation
-with a counter-based PRNG — key = fold_in(fold_in(PRNGKey(seed), counter))
-so a request's stream is reproducible regardless of batch composition,
-preemption, or which slot it lands in.
+with a counter-based PRNG — key = fold_in(fold_in(PRNGKey(seed), rid),
+counter). Folding the *request id* in keeps two same-seed requests on
+distinct streams, and keying by ``counter`` (= tokens generated so far,
+i.e. the request's own decode step) makes a request's stream a pure
+function of (seed, rid, step): reproducible regardless of batch
+composition, slot assignment, or recompute preemption.
 """
 
 from __future__ import annotations
@@ -15,18 +18,19 @@ import jax.numpy as jnp
 NEG = -1.0e30
 
 
-def sample_tokens(logits, temps, top_ks, seeds, counters):
-    """logits: (B, V) fp32; temps/seeds/counters: (B,); top_ks: (B,) int32
-    (0 disables truncation). Returns (B,) int32 tokens."""
+def sample_tokens(logits, temps, top_ks, seeds, rids, counters):
+    """logits: (B, V) fp32; temps/seeds/rids/counters: (B,); top_ks: (B,)
+    int32 (0 disables truncation). Returns (B,) int32 tokens."""
     B, V = logits.shape
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    def one(lg, t, k, s, c):
-        key = jax.random.fold_in(jax.random.PRNGKey(s), c)
+    def one(lg, t, k, s, r, c):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(s), r), c)
         lg = lg / jnp.maximum(t, 1e-6)
         kth = jnp.sort(lg)[V - jnp.clip(k, 1, V)]        # k-th largest
         lg = jnp.where((k > 0) & (lg < kth), NEG, lg)
         return jax.random.categorical(key, lg).astype(jnp.int32)
 
-    sampled = jax.vmap(one)(logits, temps, top_ks, seeds, counters)
+    sampled = jax.vmap(one)(logits, temps, top_ks, seeds, rids, counters)
     return jnp.where(temps <= 0.0, greedy, sampled)

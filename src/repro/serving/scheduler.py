@@ -58,6 +58,9 @@ class Request:
     max_new: int = 16
     sampling: SamplingParams = field(default_factory=SamplingParams)
     eos_id: int | None = None
+    # enc-dec only: (T_enc, d_model) stub frame embeddings for the
+    # admission-time encode pass (zeros when None)
+    frames: np.ndarray | None = field(default=None, repr=False)
     rid: int = field(default_factory=lambda: next(_RID))
     out: list[int] = field(default_factory=list)
     num_computed: int = 0                   # prefill_tokens() with KV cached
@@ -100,6 +103,8 @@ class StepPlan:
     chunk: tuple[int, Request, int] | None        # (slot, req, n_tokens)
     copies: list[tuple[int, int]]                 # device page copies (COW)
     admitted: int = 0                             # waiting -> running joins
+    # freshly admitted enc-dec requests needing an encode pass this step
+    encodes: list[tuple[int, Request]] = field(default_factory=list)
 
     @property
     def scheduled_tokens(self) -> int:
@@ -107,20 +112,43 @@ class StepPlan:
 
 
 class Scheduler:
-    def __init__(self, bm: BlockManager, max_batch: int,
+    """Cache-kind-aware token-budget scheduler.
+
+    ``bm`` is the paged cache's block manager, or None for runners whose
+    state is purely slot-based (pure SSM): with no block pool there is no
+    block horizon to validate, no growth to ensure, no preemption pressure
+    and no prefix cache — admission is slot-limited only. ``slot_cache``
+    and ``encoder_cache`` (``serving.cache``) are bound to the scheduler's
+    chosen slot at admission and released on preempt/retire.
+
+    ``chunk_quantum`` quantizes non-final prefill chunks down to a
+    multiple (SSM runners: the SSD inner chunk size, so a chunked prefill
+    re-groups the scan exactly like a monolithic one).
+    """
+
+    def __init__(self, bm: BlockManager | None, max_batch: int,
                  max_blocks_per_seq: int, max_num_batched_tokens: int,
-                 chunk_width: int, *, enable_prefix_caching: bool = True):
+                 chunk_width: int, *, enable_prefix_caching: bool = True,
+                 chunk_quantum: int = 1, slot_cache=None,
+                 encoder_cache=None):
         if max_num_batched_tokens <= max_batch:
             raise ValueError(
                 f"max_num_batched_tokens={max_num_batched_tokens} must "
                 f"exceed max_batch={max_batch} (decodes take one token "
                 "each; a prefill chunk needs leftover budget)")
+        if chunk_width < chunk_quantum:
+            raise ValueError(
+                f"chunk_width={chunk_width} below chunk_quantum="
+                f"{chunk_quantum}: no non-final chunk could ever run")
         self.bm = bm
         self.max_batch = max_batch
         self.max_blocks_per_seq = max_blocks_per_seq
         self.max_num_batched_tokens = max_num_batched_tokens
         self.chunk_width = chunk_width
-        self.enable_prefix_caching = enable_prefix_caching
+        self.chunk_quantum = chunk_quantum
+        self.slot_cache = slot_cache
+        self.encoder_cache = encoder_cache
+        self.enable_prefix_caching = enable_prefix_caching and bm is not None
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}      # slot -> request
         self._join_order: list[int] = []           # slots, oldest first
@@ -142,6 +170,9 @@ class Scheduler:
         # A request's full horizon must fit its block-table row — reject at
         # submission instead of crashing mid-run when the table overflows.
         # (Single source of truth: admission relies on this having run.)
+        # Slot-state caches are constant-size: no block horizon to check.
+        if self.bm is None:
+            return
         horizon = len(req.prompt) + req.max_new
         capacity = self.max_blocks_per_seq * self.bm.block_size
         if horizon > capacity:
@@ -161,6 +192,7 @@ class Scheduler:
         budget on one prefill chunk — continuing the in-flight prefill or
         admitting the next waiting request (with prefix-cache sharing)."""
         copies: list[tuple[int, int]] = []
+        encodes: list[tuple[int, Request]] = []
         self._ensure_decode_capacity()
         decodes = [(s, r) for s, r in sorted(self.running.items())
                    if r.decode_ready]
@@ -172,25 +204,39 @@ class Scheduler:
                     if not r.decode_ready), None)
         while (pre is None and budget_left > 0 and self.waiting
                and len(self.running) < self.max_batch):
-            slot, req = self._admit_one(copies)
+            slot, req = self._admit_one(copies, encodes)
             admitted += 1
             if not req.decode_ready:
                 pre = (slot, req)       # else: full cache hit minus one —
                                         # it joins the decode batch next step
         if pre is not None and budget_left > 0:
             slot, req = pre
-            n = min(budget_left, self.chunk_width,
-                    req.context_len - req.num_computed)
-            n = self._fit_chunk(req, n)
+            remaining = req.context_len - req.num_computed
+            n = min(budget_left, self.chunk_width, remaining)
+            n = self._quantize(n, remaining)
+            if n > 0:
+                n = self._quantize(self._fit_chunk(req, n), remaining)
             if n > 0:
                 chunk = (slot, req, n)
         return StepPlan(decodes=decodes, chunk=chunk, copies=copies,
-                        admitted=admitted)
+                        admitted=admitted, encodes=encodes)
+
+    def _quantize(self, n: int, remaining: int) -> int:
+        """Round a non-final chunk down to the chunk quantum (SSM runners:
+        the SSD inner chunk size, so chunked == monolithic bitwise). The
+        final chunk of a prompt is exempt — SSD padding is an exact
+        identity step there."""
+        if self.chunk_quantum > 1 and n < remaining:
+            return n // self.chunk_quantum * self.chunk_quantum
+        return n
 
     def _ensure_decode_capacity(self) -> None:
         """Every decode-ready request must own blocks for context_len + 1
         (the token about to be written). Preempts newest requests until the
-        survivors fit."""
+        survivors fit. Slot-state-only runners have constant-size state:
+        decode can never run out of capacity."""
+        if self.bm is None:
+            return
         for slot in list(self._join_order):             # oldest first
             req = self.running.get(slot)
             if req is None or not req.decode_ready:
@@ -211,6 +257,8 @@ class Scheduler:
         """Reserve blocks for the next ``n`` prefill tokens, shrinking the
         chunk to what the pool can actually cover. Admission never preempts
         running work — a starved chunk waits for decodes to retire."""
+        if self.bm is None:
+            return n                     # slot state: nothing to reserve
         avail = (len(self.bm.table(req.rid)) + self.bm.num_free) \
             * self.bm.block_size - req.num_computed
         n = min(n, avail)
@@ -224,12 +272,17 @@ class Scheduler:
         assert ok, "ensure failed after availability check"
         return n
 
-    def _admit_one(self, copies: list[tuple[int, int]]) -> \
+    def _admit_one(self, copies: list[tuple[int, int]],
+                   encodes: list[tuple[int, Request]] | None = None) -> \
             tuple[int, Request]:
-        """FCFS admission with prefix-cache sharing. The new table starts
-        as the matched cached blocks (refcounted); fresh blocks arrive
-        chunk by chunk via ``_fit_chunk``."""
+        """FCFS admission with prefix-cache sharing (paged kinds only).
+        The new table starts as the matched cached blocks (refcounted);
+        fresh blocks arrive chunk by chunk via ``_fit_chunk``. Slot-kind
+        caches are bound to the chosen slot; enc-dec requests are queued
+        for their admission-time encode pass."""
         req = self.waiting.popleft()
+        if self.bm is None:
+            return self._bind_slot(req, encodes)
         bs = self.bm.block_size
         total = req.context_len
         hits: list[int] = []
@@ -269,9 +322,20 @@ class Scheduler:
                 # note_progress once the write has happened.
                 self.bm.deregister(src)
                 req.n_published = cow_idx
+        return self._bind_slot(req, encodes)
+
+    def _bind_slot(self, req: Request,
+                   encodes: list[tuple[int, Request]] | None) -> \
+            tuple[int, Request]:
         slot = self.free_slots()[0]
         self.running[slot] = req
         self._join_order.append(slot)
+        if self.slot_cache is not None:
+            self.slot_cache.allocate(req.rid, slot)
+        if self.encoder_cache is not None:
+            self.encoder_cache.allocate(req.rid, slot)
+            if encodes is not None:
+                encodes.append((slot, req))
         return slot, req
 
     # -- progress / bookkeeping -------------------------------------------
@@ -281,7 +345,7 @@ class Scheduler:
         making them shareable by later (or preempted-and-returning)
         requests. Called by the engine after each step, before retirement
         frees the blocks (freed blocks keep their hash)."""
-        if not self.enable_prefix_caching:
+        if not self.enable_prefix_caching or self.bm is None:
             return
         bs = self.bm.block_size
         n_full = req.num_computed // bs
@@ -300,10 +364,18 @@ class Scheduler:
                 return slot
         return None
 
+    def _release(self, req: Request) -> None:
+        if self.bm is not None:
+            self.bm.free(req.rid)
+        if self.slot_cache is not None:
+            self.slot_cache.free(req.rid)
+        if self.encoder_cache is not None:
+            self.encoder_cache.free(req.rid)
+
     def _preempt(self, slot: int) -> Request:
         req = self.running.pop(slot)
         self._join_order.remove(slot)
-        self.bm.free(req.rid)
+        self._release(req)
         req.num_computed = 0
         req.n_published = 0         # re-admission gets a different table
         req.n_preempted += 1
@@ -314,5 +386,5 @@ class Scheduler:
     def retire(self, slot: int) -> Request:
         req = self.running.pop(slot)
         self._join_order.remove(slot)
-        self.bm.free(req.rid)
+        self._release(req)
         return req

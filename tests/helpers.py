@@ -1,4 +1,5 @@
-"""Run a python snippet in a subprocess with N virtual XLA devices."""
+"""Test helpers: subprocess runner with N virtual XLA devices, and the
+static-batch serving oracle the engine equivalence tests compare against."""
 
 from __future__ import annotations
 
@@ -8,6 +9,101 @@ import sys
 from pathlib import Path
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+class StaticServerOracle:
+    """The pre-refactor static-batch serving path, kept as a test oracle.
+
+    This is the deleted legacy ``launch.serve.Server`` verbatim: pad every
+    request to a common prompt length, monolithic prefill through
+    ``api.prefill_fn``, grow the dense caches to max_len, then decode
+    max(max_new) steps for the whole batch through ``api.decode_fn``. The
+    engine's continuous-batching path must reproduce its greedy outputs
+    byte for byte — serving is a latency/memory optimization, never a
+    numerics change.
+    """
+
+    def __init__(self, cfg, mesh, pcfg=None, max_batch: int = 8,
+                 prompt_len: int = 32, max_len: int = 128, seed: int = 0,
+                 params=None):
+        import jax
+        import jax.numpy as jnp
+        from repro.config import ParallelConfig
+        from repro.models import api
+        from repro.spmd import steps as steps_mod
+        self.cfg, self.mesh = cfg, mesh
+        self.pcfg = pcfg or ParallelConfig(remat="none")
+        self.max_batch, self.prompt_len, self.max_len = (max_batch,
+                                                         prompt_len, max_len)
+        with jax.set_mesh(mesh):
+            if params is None:
+                params_f32, _ = api.init_model(cfg, jax.random.key(seed))
+                params = jax.tree.map(
+                    lambda x: x.astype(jnp.bfloat16), params_f32)
+            self.params = params
+            self._prefill = jax.jit(
+                steps_mod.make_prefill_step(cfg, self.pcfg))
+            self._decode = jax.jit(
+                steps_mod.make_decode_step(cfg, self.pcfg),
+                donate_argnums=(1,))
+
+    def serve_batch(self, prompts, max_news, frames=None):
+        """prompts: list of (prompt_len,) int32; max_news: list of int;
+        frames: optional list of (T_enc, d_model) arrays (enc-dec).
+        Returns a list of (max_new,) int32 generated-token arrays."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        assert len(prompts) <= self.max_batch
+        B = len(prompts)
+        toks = np.stack([p[:self.prompt_len] for p in prompts])
+        with jax.set_mesh(self.mesh):
+            # prefill at full cache capacity: pad prompt region
+            batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+            if self.cfg.frontend == "vision":
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(self.prompt_len, dtype=jnp.int32)[None, None],
+                    (3, B, self.prompt_len))
+            if self.cfg.frontend == "audio":
+                if frames is None:
+                    batch["frames"] = jnp.zeros(
+                        (B, self.cfg.encoder_seq_len, self.cfg.d_model),
+                        jnp.bfloat16)
+                else:
+                    batch["frames"] = jnp.asarray(
+                        np.stack(frames), jnp.bfloat16)
+            cache, tok = self._prefill(self.params, batch)
+            # grow attention caches to max_len capacity
+            cache = jax.tree_util.tree_map_with_path(self._grow, cache)
+            outs = [tok]
+            max_new = max(max_news)
+            pos = jnp.full((B,), self.prompt_len, jnp.int32)
+            for _ in range(max_new - 1):
+                tok, cache = self._decode(
+                    self.params, cache,
+                    {"token": tok[:, None], "pos": pos})
+                outs.append(tok)
+                pos = pos + 1
+        gen = np.stack([np.asarray(t) for t in outs], axis=1)
+        return [gen[i, :max_news[i]] for i in range(B)]
+
+    def _grow(self, path, x):
+        """Pad self-attention K/V caches (L, B, S, K, hd) from prompt_len
+        to max_len. Keyed on the cache pytree *path* (leaves named "k"/"v"),
+        not shape sniffing: SSM conv/state leaves and enc-dec cross caches
+        ("xk"/"xv") whose shapes happen to collide are left alone."""
+        import jax
+        import jax.numpy as jnp
+        keys = [p.key for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        if not (keys and keys[-1] in ("k", "v")):
+            return x
+        if not (x.ndim == 5 and x.shape[2] == self.prompt_len
+                and x.shape[3] == self.cfg.num_kv_heads
+                and x.shape[-1] == self.cfg.head_dim):
+            return x
+        pad = self.max_len - self.prompt_len
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
 
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):

@@ -598,10 +598,10 @@ def test_request_eos_and_maxnew_done():
 
 @pytest.fixture(scope="module")
 def glm_smoke(tiny_mesh_module):
-    from repro.launch.serve import Server
+    from helpers import StaticServerOracle
     cfg = get_config("glm4_9b", smoke=True)
-    server = Server(cfg, tiny_mesh_module, max_batch=4, prompt_len=32,
-                    max_len=96)
+    server = StaticServerOracle(cfg, tiny_mesh_module, max_batch=4,
+                                prompt_len=32, max_len=96)
     return cfg, tiny_mesh_module, server
 
 
@@ -612,12 +612,11 @@ def tiny_mesh_module():
 
 
 def test_engine_matches_static_server_greedy(glm_smoke):
-    from repro.launch.serve import Request as SRequest
     from repro.serving import InferenceEngine, Request
     cfg, mesh, server = glm_smoke
     prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
                for _ in range(4)]
-    legacy = server.serve_batch([SRequest(p, max_new=8) for p in prompts])
+    legacy = server.serve_batch(prompts, [8] * 4)
     eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
                           params=server.params, debug_invariants=True)
     reqs = [Request(p, max_new=8) for p in prompts]
@@ -631,12 +630,11 @@ def test_engine_matches_static_server_greedy(glm_smoke):
 def test_engine_chunked_prefill_matches_monolithic(glm_smoke):
     """A chunk budget smaller than the prompt streams the prefill over
     several steps — greedy outputs must not change."""
-    from repro.launch.serve import Request as SRequest
     from repro.serving import InferenceEngine, Request
     cfg, mesh, server = glm_smoke
     prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
                for _ in range(2)]
-    legacy = server.serve_batch([SRequest(p, max_new=6) for p in prompts])
+    legacy = server.serve_batch(prompts, [6] * 2)
     eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
                           max_num_batched_tokens=2 + 12,   # 12-token chunks
                           params=server.params, debug_invariants=True)
@@ -798,10 +796,345 @@ def test_engine_latency_stats(glm_smoke):
         assert rec["done_step"] - rec["first_token_step"] >= 3
 
 
-def test_engine_rejects_unpageable_archs(glm_smoke):
-    from repro.serving import InferenceEngine
+def test_runner_dispatch_and_vision_rejection(glm_smoke):
+    from repro.config import ParallelConfig
+    from repro.serving import (EncDecRunner, HybridRunner, InferenceEngine,
+                               SSMRunner, TransformerRunner, make_runner)
     _, mesh, _ = glm_smoke
-    with pytest.raises(ValueError, match="SSM"):
-        InferenceEngine(get_config("mamba2_370m", smoke=True), mesh)
-    with pytest.raises(ValueError, match="cross caches"):
-        InferenceEngine(get_config("whisper_large_v3", smoke=True), mesh)
+    pcfg = ParallelConfig(remat="none")
+    pairs = [("glm4_9b", TransformerRunner), ("mamba2_370m", SSMRunner),
+             ("zamba2_2p7b", HybridRunner),
+             ("whisper_large_v3", EncDecRunner)]
+    for arch, klass in pairs:
+        assert type(make_runner(get_config(arch, smoke=True), pcfg)) is klass
+    with pytest.raises(ValueError, match="frontend"):
+        InferenceEngine(get_config("qwen2_vl_2b", smoke=True), mesh)
+
+
+# ---------------------------------------------------------------------------
+# SlotStateCache / EncoderCache
+# ---------------------------------------------------------------------------
+
+
+def test_slot_state_cache_basic():
+    from repro.serving import SlotStateCache
+    sc = SlotStateCache(2)
+    assert sc.allocate(10) == 0 and sc.allocate(11, 1) == 1
+    sc.check()
+    assert sc.num_free == 0 and sc.owner(0) == 10 and sc.slot(11) == 1
+    with pytest.raises(KeyError):
+        sc.allocate(10)                     # double alloc
+    with pytest.raises(MemoryError):
+        sc.allocate(12)                     # no free slot
+    assert sc.free(10) == 0
+    sc.check()
+    with pytest.raises(MemoryError):
+        sc.allocate(12, 1)                  # requested slot taken
+    assert sc.allocate(12) == 0
+    sc.check()
+    assert sc.stats().utilization == 1.0
+
+
+def _slot_cache_random_walk(tape):
+    """Interpret ``tape`` (an iterator of ints) as allocate/allocate-at/
+    free/preempt-readmit ops against a SlotStateCache, asserting the
+    bijection invariant and exact free-slot accounting after every op —
+    mirroring the BlockManager walks."""
+    from repro.serving import SlotStateCache
+    NS = 4
+    sc = SlotStateCache(NS)
+    bound: dict[int, int] = {}            # rid -> slot (our shadow model)
+    next_rid = [0]
+
+    def draw(n):
+        return next(tape) % n
+
+    def new_rid():
+        next_rid[0] += 1
+        return next_rid[0]
+
+    def check():
+        sc.check()
+        assert sc.num_free == NS - len(bound)
+        assert sorted(sc.free_slots()) == sorted(
+            set(range(NS)) - set(bound.values()))
+        for rid, slot in bound.items():
+            assert sc.slot(rid) == slot and sc.owner(slot) == rid
+
+    for _ in range(150):
+        op = draw(4)
+        rids = list(bound)
+        if op == 0 or not rids:                     # allocate lowest-free
+            rid = new_rid()
+            try:
+                bound[rid] = sc.allocate(rid)
+            except MemoryError:
+                assert len(bound) == NS
+        elif op == 1:                               # allocate a chosen slot
+            rid, slot = new_rid(), draw(NS)
+            try:
+                assert sc.allocate(rid, slot) == slot
+                bound[rid] = slot
+            except MemoryError:
+                assert slot in bound.values()
+        elif op == 2:                               # retire
+            rid = rids[draw(len(rids))]
+            assert sc.free(rid) == bound.pop(rid)
+        else:                                       # preempt + readmit
+            rid = rids[draw(len(rids))]
+            sc.free(rid)
+            del bound[rid]
+            check()
+            rid2 = new_rid()                 # recompute joins as a fresh
+            bound[rid2] = sc.allocate(rid2)  # binding, any free slot
+        check()
+    for rid in list(bound):
+        sc.free(rid)
+        del bound[rid]
+        check()
+    assert sc.num_free == NS
+
+
+def test_slot_cache_random_walk_seeded():
+    for seed in range(8):
+        rng = random.Random(seed)
+        _slot_cache_random_walk(iter(lambda: rng.randrange(1 << 20), None))
+
+
+def test_slot_cache_random_walk_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.integers(0, (1 << 20) - 1), max_size=900))
+    @hyp.settings(max_examples=60, deadline=None)
+    def prop(tape):
+        it = iter(tape)
+        _slot_cache_random_walk(iter(lambda: next(it, 0), None))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid / enc-dec runners vs the static oracle
+# ---------------------------------------------------------------------------
+
+
+def _oracle(arch, mesh, prompt_len, max_len=96, max_batch=4):
+    from helpers import StaticServerOracle
+    cfg = get_config(arch, smoke=True)
+    return cfg, StaticServerOracle(cfg, mesh, max_batch=max_batch,
+                                   prompt_len=prompt_len, max_len=max_len)
+
+
+def test_engine_matches_static_mamba2(tiny_mesh_module):
+    """Pure SSM through the engine: slot-state cache, no block manager,
+    greedy outputs byte-identical to the static oracle — including a
+    chunked prefill whose boundaries land on SSD chunk multiples."""
+    from repro.serving import InferenceEngine, Request
+    mesh = tiny_mesh_module
+    cfg, server = _oracle("mamba2_370m", mesh, prompt_len=24)
+    prompts = [RNG.integers(0, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(4)]
+    legacy = server.serve_batch(prompts, [8] * 4)
+    # chunk budget 16 < prompt 24: two chunks (16 then 8); the smoke SSD
+    # chunk_size is 8, so the 16-token boundary is quantum-aligned
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          max_num_batched_tokens=2 + 16,
+                          params=server.params, debug_invariants=True)
+    assert eng.bm is None and eng.slot_cache is not None
+    assert eng.sched.chunk_quantum == cfg.ssm.chunk_size == 8
+    reqs = [Request(p, max_new=8) for p in prompts]
+    outs = eng.run(reqs, arrival_steps=[0, 0, 3, 5])
+    assert eng.stats["prefill_chunks"] >= 8        # 2 chunks per prompt
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(outs[r.rid], legacy[i])
+
+
+def test_engine_ssm_quantized_chunk_lengths(tiny_mesh_module):
+    """Non-final SSM chunks are quantized to the SSD chunk size even when
+    the leftover step budget is not a multiple."""
+    from repro.serving import InferenceEngine, Request
+    mesh = tiny_mesh_module
+    cfg, server = _oracle("mamba2_370m", mesh, prompt_len=24)
+    prompts = [RNG.integers(0, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(2)]
+    legacy = server.serve_batch(prompts, [6] * 2)
+    # budget leaves 13 tokens of chunk: quantized down to 8 until the
+    # final chunk (24 = 8 + 8 + final 8; with a decode running, 13 -> 8)
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          max_num_batched_tokens=2 + 13,
+                          params=server.params, debug_invariants=True)
+    reqs = [Request(p, max_new=6) for p in prompts]
+    outs = eng.run(reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(outs[r.rid], legacy[i])
+
+
+def test_engine_matches_static_zamba2(tiny_mesh_module):
+    """Hybrid runner: mamba slot state + paged shared-attention KV behind
+    one block table; byte-identical to the static oracle under staggered
+    arrivals and chunked prefill."""
+    from repro.serving import InferenceEngine, Request
+    mesh = tiny_mesh_module
+    cfg, server = _oracle("zamba2_2p7b", mesh, prompt_len=24)
+    prompts = [RNG.integers(0, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(4)]
+    legacy = server.serve_batch(prompts, [8] * 4)
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          max_num_batched_tokens=2 + 16,
+                          params=server.params, debug_invariants=True)
+    assert eng.bm is not None and eng.slot_cache is not None
+    assert not eng.sched.enable_prefix_caching   # state is not shareable
+    reqs = [Request(p, max_new=8) for p in prompts]
+    outs = eng.run(reqs, arrival_steps=[0, 0, 2, 5])
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(outs[r.rid], legacy[i])
+
+
+def test_engine_zamba2_preemption_resets_slot_state(tiny_mesh_module):
+    """A hybrid victim of block-pool preemption recomputes from zeroed
+    slot state: greedy outputs stay preemption-invariant."""
+    from repro.serving import InferenceEngine, Request
+    mesh = tiny_mesh_module
+    cfg, server = _oracle("zamba2_2p7b", mesh, prompt_len=32)
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    base = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
+    want = list(base.run([Request(p, max_new=20) for p in prompts]).values())
+    # 7 allocatable blocks of 16: two ctx-33 requests take 3 blocks each;
+    # growth past 48 tokens forces preempting the newer one.
+    tight = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, num_blocks=8, params=server.params,
+                            debug_invariants=True)
+    reqs = [Request(p, max_new=20) for p in prompts]
+    got = tight.run(reqs)
+    assert tight.stats["preemptions"] >= 1
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_engine_matches_static_whisper(tiny_mesh_module):
+    """Enc-dec runner: paged decoder self-KV + per-slot read-only cross
+    K/V written by the admission encode pass; byte-identical to the
+    static oracle, with per-request (distinct) encoder inputs."""
+    from repro.serving import InferenceEngine, Request
+    mesh = tiny_mesh_module
+    cfg, server = _oracle("whisper_large_v3", mesh, prompt_len=8,
+                          max_len=64)
+    prompts = [RNG.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(3)]
+    frames = [RNG.normal(0, 1, (cfg.encoder_seq_len, cfg.d_model)
+                         ).astype(np.float32) for _ in range(3)]
+    # oracle decodes one batch per request so each keeps its own frames
+    legacy = [server.serve_batch([p], [6], frames=[f])[0]
+              for p, f in zip(prompts, frames)]
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=64,
+                          params=server.params, debug_invariants=True)
+    assert eng.encoder_cache is not None
+    reqs = [Request(p, max_new=6, frames=f)
+            for p, f in zip(prompts, frames)]
+    outs = eng.run(reqs, arrival_steps=[0, 1, 4])
+    assert eng.stats["encodes"] == 3
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(outs[r.rid], legacy[i])
+
+
+def test_engine_whisper_preemption_reencodes(tiny_mesh_module):
+    """An enc-dec victim of block-pool preemption re-runs its encode pass
+    on readmission — cross K/V at the (possibly different) slot is its
+    own, and greedy outputs stay preemption-invariant."""
+    from repro.serving import InferenceEngine, Request
+    mesh = tiny_mesh_module
+    cfg, server = _oracle("whisper_large_v3", mesh, prompt_len=32,
+                          max_len=96)
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    frames = [RNG.normal(0, 1, (cfg.encoder_seq_len, cfg.d_model)
+                         ).astype(np.float32) for _ in range(2)]
+
+    def make():
+        return [Request(p, max_new=20, frames=f)
+                for p, f in zip(prompts, frames)]
+
+    base = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
+    want = list(base.run(make()).values())
+    # 7 allocatable blocks of 16: growth past 48 tokens preempts the newer
+    tight = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, num_blocks=8, params=server.params,
+                            debug_invariants=True)
+    reqs = make()
+    got = tight.run(reqs)
+    assert tight.stats["preemptions"] >= 1
+    # one encode per admission: initial 2 + one per readmission
+    assert tight.stats["encodes"] >= 2 + tight.stats["preemptions"]
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_engine_ssm_no_horizon_validation(tiny_mesh_module):
+    """Slot caches have no block horizon: an SSM request whose
+    prompt+max_new exceeds max_len capacity is accepted (the state is
+    constant-size), while the paged transformer still rejects it."""
+    from repro.serving import InferenceEngine, Request
+    mesh = tiny_mesh_module
+    cfg, server = _oracle("mamba2_370m", mesh, prompt_len=24, max_len=32)
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=32,
+                          max_num_batched_tokens=2 + 16,
+                          params=server.params, debug_invariants=True)
+    long_req = Request(RNG.integers(0, cfg.vocab_size, 24).astype(np.int32),
+                       max_new=24)                 # 48 > 32-token "cap"
+    outs = eng.run([long_req])
+    assert len(outs[long_req.rid]) == 24
+
+
+# ---------------------------------------------------------------------------
+# Sampling determinism (rid + step folded into the key)
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_reproducible_across_preemption(glm_smoke):
+    """Temperature sampling is a pure function of (seed, rid, step):
+    outputs are identical with and without recompute-preemption."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    sp = SamplingParams(temperature=0.8, top_k=16, seed=3)
+
+    def make():
+        # pin rids: the sampling key folds (seed, rid, step), so replaying
+        # the same logical requests must reuse their ids
+        return [Request(p, max_new=20, sampling=sp, rid=77000 + i)
+                for i, p in enumerate(prompts)]
+
+    base = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
+    want = list(base.run(make()).values())
+    tight = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, num_blocks=8, params=server.params,
+                            debug_invariants=True)
+    reqs = make()
+    got = tight.run(reqs)
+    assert tight.stats["preemptions"] >= 1
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_sampling_same_seed_requests_decorrelated(glm_smoke):
+    """Folding the rid into the key keeps two same-seed, same-prompt
+    requests on distinct sampling streams."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompt = RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    sp = SamplingParams(temperature=1.2, top_k=0, seed=7)
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    a = Request(prompt.copy(), max_new=12, sampling=sp)
+    b = Request(prompt.copy(), max_new=12, sampling=sp)
+    outs = eng.run([a, b])
+    assert not np.array_equal(outs[a.rid], outs[b.rid])

@@ -6,7 +6,6 @@ import numpy as np
 
 from repro.config import OptimizerConfig, ParallelConfig, get_config
 from repro.launch.mesh import make_host_mesh
-from repro.launch.serve import Request, Server
 from repro.launch.train import train
 
 
@@ -29,14 +28,15 @@ def test_train_driver_learns_and_resumes(tmp_path):
 
 
 def test_serve_driver_batched_decode():
+    from repro.serving import InferenceEngine, Request
     cfg = get_config("qwen3_32b", smoke=True)       # qk-norm path
-    server = Server(cfg, make_host_mesh(1, 1), max_batch=4,
-                    prompt_len=16, max_len=32)
+    eng = InferenceEngine(cfg, make_host_mesh(1, 1), max_batch=4,
+                          block_size=16, max_len=32)
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
                     max_new=8) for _ in range(4)]
-    outs = server.serve_batch(reqs)
+    outs = eng.run(reqs)
     assert len(outs) == 4
-    for o in outs:
-        assert o.shape == (8,)
-        assert int(o.max()) < cfg.vocab_size
+    for r in reqs:
+        assert outs[r.rid].shape == (8,)
+        assert int(outs[r.rid].max()) < cfg.vocab_size
