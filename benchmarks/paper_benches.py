@@ -61,9 +61,10 @@ def bench_table1_step_time(rows):
 
 
 # ---------------------------------------------------------------------------
-# §2.1 production inference: continuous batching vs static batching under
-# Poisson arrivals (goodput per decode step; the mechanism behind the
-# paper's "serving at scale" claim, measured with the paged engine)
+# §2.1 production inference: the continuous-batching engine under ragged
+# horizons (goodput per decode step; the mechanism behind the paper's
+# "serving at scale" claim) — headline transformer row, prefix-cached row,
+# speculative draft-and-verify rows, and the SSM / enc-dec runner rows
 # ---------------------------------------------------------------------------
 
 
@@ -136,6 +137,42 @@ def bench_serving_throughput(rows):
                      f"tok_s={n_tok/dt_c:.1f} "
                      f"cache_hit_tokens={engc.stats['cache_hit_tokens']} "
                      + _latency_percentiles(engc, engc_reqs)))
+
+    # speculative decoding (draft-and-verify): a repetitive-prompt
+    # workload decoded with and without a k=2 self-draft (draft shares the
+    # target's params, so the draft agrees with the target wherever the
+    # decode/verify numerics do — mean accept length ~ k+1 and the row
+    # isolates the mechanism's accounting + verify-step overhead rather
+    # than draft quality). Prefix caching off, like the headline row.
+    scfg = get_config("starcoder2_3b", smoke=True)
+    pattern = np.tile(np.arange(7, dtype=np.int32), 1 + prompt_len // 7)
+    sprompts = [np.roll(pattern, i)[:prompt_len].astype(np.int32)
+                for i in range(n_req)]
+
+    def spec_reqs():
+        return [Request(p, max_new=mn)
+                for p, mn in zip(sprompts, max_news)]
+
+    soff = InferenceEngine(scfg, mesh, max_batch=max_batch, block_size=16,
+                           max_len=128, enable_prefix_caching=False)
+    soff.run(spec_reqs())                       # compile
+    t0 = time.perf_counter()
+    soff.run(spec_reqs())
+    dt_off = time.perf_counter() - t0
+    rows.append(_csv("serving/speculative_off", dt_off / n_tok * 1e6,
+                     f"tok_s={n_tok/dt_off:.1f} mean_accept_len=1.0"))
+    son = InferenceEngine(scfg, mesh, max_batch=max_batch, block_size=16,
+                          max_len=128, enable_prefix_caching=False,
+                          params=soff.params, draft_params=soff.params,
+                          num_speculative_tokens=2)
+    son.run(spec_reqs())                        # compile
+    t0 = time.perf_counter()
+    son.run(spec_reqs())
+    dt_on = time.perf_counter() - t0
+    rows.append(_csv("serving/speculative_k2", dt_on / n_tok * 1e6,
+                     f"tok_s={n_tok/dt_on:.1f} "
+                     f"mean_accept_len={son.stats['mean_accept_len']:.3f} "
+                     f"steps={son.stats['steps']}"))
 
     # the non-transformer runners on the same hot path: pure SSM (slot
     # state, no block pool) and enc-dec (paged self-KV + admission-time

@@ -5,13 +5,15 @@ both). The engine (``repro.serving``) admits requests from a queue as
 slots and cache resources free up, retires each on its own EOS/max_new,
 and steps every running request in one jitted budgeted step. Per-family
 runners cover decoder-only transformers (paged KV + prefix caching), pure
-SSM (per-slot Mamba state), hybrid mamba+attention, and encoder-decoder
-(paged self-KV + per-slot cross K/V) — the legacy static-batch ``Server``
-is gone.
+SSM (per-slot Mamba state), hybrid mamba+attention, encoder-decoder
+(paged self-KV + per-slot cross K/V), and draft-and-verify speculative
+decoding (``--num-speculative-tokens``; docs/speculative.md).
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2_370m --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch whisper_large_v3 --smoke
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2_3b --smoke \\
+      --num-speculative-tokens 2
 """
 
 from __future__ import annotations
@@ -37,10 +39,14 @@ def poisson_arrival_steps(n: int, rate: float, rng) -> list[int]:
 def run_engine(cfg, mesh, args):
     from repro.serving import InferenceEngine, Request
     from repro.serving.scheduler import SamplingParams
+    draft_cfg = (get_config(args.speculative_draft, smoke=args.smoke)
+                 if args.speculative_draft else None)
     eng = InferenceEngine(cfg, mesh, max_batch=args.max_batch,
                           block_size=args.block_size, max_len=args.max_len,
                           max_num_batched_tokens=args.max_batched_tokens,
-                          enable_prefix_caching=not args.no_prefix_caching)
+                          enable_prefix_caching=not args.no_prefix_caching,
+                          draft_cfg=draft_cfg,
+                          num_speculative_tokens=args.num_speculative_tokens)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
@@ -71,6 +77,11 @@ def run_engine(cfg, mesh, args):
           f"cache_hit_tokens={s['cache_hit_tokens']} "
           f"cow_copies={s['cow_copies']} "
           f"peak_block_util={s['peak_block_utilization']:.2f}")
+    if s["spec_decodes"]:
+        print(f"[serve] speculative: k={eng.runner.spec_tokens} "
+              f"draft={eng.draft_cfg.name} "
+              f"spec_decodes={s['spec_decodes']} "
+              f"mean_accept_len={s['mean_accept_len']:.3f}")
     print("[serve] sample output ids:", outs[reqs[0].rid][:8].tolist())
     return outs
 
@@ -92,6 +103,14 @@ def main():
                     "prefill chunk (default: max_batch + 2*block_size)")
     ap.add_argument("--no-prefix-caching", action="store_true",
                     help="disable cross-request KV block sharing")
+    ap.add_argument("--speculative-draft", default=None,
+                    help="draft-model arch for speculative decoding "
+                    "(defaults to --arch, i.e. a fresh-init self-draft, "
+                    "when --num-speculative-tokens > 0)")
+    ap.add_argument("--num-speculative-tokens", type=int, default=0,
+                    help="draft tokens proposed per slot per step; the "
+                    "target verifies k+1 positions in one widened step "
+                    "(0 disables speculation)")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="poisson arrivals per decode step")
     ap.add_argument("--temperature", type=float, default=0.0)

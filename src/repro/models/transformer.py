@@ -396,7 +396,7 @@ def prefill(params, batch, cfg: ModelConfig, pcfg: ParallelConfig):
 
 
 def prefill_chunk_paged(params, cache, batch, cfg: ModelConfig,
-                        pcfg: ParallelConfig):
+                        pcfg: ParallelConfig, *, all_logits: bool = False):
     """One chunk of prompt prefill against a block-paged KV cache.
 
     batch: tokens (B, C) the chunk's token slice (right-padded), q_start
@@ -405,7 +405,9 @@ def prefill_chunk_paged(params, cache, batch, cfg: ModelConfig,
     including this chunk (= q_start + q_lens).
     Returns (logits (B, V_pad) fp32 at each row's last valid token,
     new_cache). The engine samples from the logits only when the chunk
-    completes its prompt.
+    completes its prompt. With ``all_logits=True`` the logits cover every
+    chunk position — (B, C, V_pad) — which is what the speculative verify
+    step needs: one widened pass scoring all K+1 candidate positions.
     """
     tokens = batch["tokens"]
     B, C = tokens.shape
@@ -422,9 +424,13 @@ def prefill_chunk_paged(params, cache, batch, cfg: ModelConfig,
     x, _, new_cache = _scan_periods(params, x, cfg, ctx, "chunk_paged",
                                     ParallelConfig(remat="none"), cache)
     x = apply_norm(params["final_norm"], x, cfg)
+    ht = head_table(params["embed"], cfg)
+    if all_logits:
+        logits = decode_logits(x.reshape(B * C, 1, -1), ht, cfg)
+        return logits.reshape(B, C, -1), new_cache
     last = jnp.clip(batch["q_lens"] - 1, 0, C - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B,1,d)
-    logits = decode_logits(x_last, head_table(params["embed"], cfg), cfg)
+    logits = decode_logits(x_last, ht, cfg)
     return logits, new_cache
 
 

@@ -6,11 +6,12 @@ from repro.serving.cache import EncoderCache, PagedKVCache, SlotStateCache
 from repro.serving.engine import InferenceEngine
 from repro.serving.kv_cache import BlockManager, init_paged_cache
 from repro.serving.runners import (EncDecRunner, HybridRunner, ModelRunner,
-                                   SSMRunner, TransformerRunner, make_runner)
+                                   SpeculativeRunner, SSMRunner,
+                                   TransformerRunner, make_runner)
 from repro.serving.scheduler import Request, SamplingParams, Scheduler
 
 __all__ = ["InferenceEngine", "BlockManager", "PagedKVCache",
            "SlotStateCache", "EncoderCache", "init_paged_cache",
            "ModelRunner", "TransformerRunner", "SSMRunner", "HybridRunner",
-           "EncDecRunner", "make_runner",
+           "EncDecRunner", "SpeculativeRunner", "make_runner",
            "Request", "SamplingParams", "Scheduler"]

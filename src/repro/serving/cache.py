@@ -18,6 +18,15 @@ primitives rather than per-workload machinery:
 Host-side managers here are pure bookkeeping (which slot belongs to which
 request); the scheduler consults them for admission and the engine for
 array building. Block-based bookkeeping stays in ``kv_cache.BlockManager``.
+
+Invariants ``check()`` enforces (and the seeded + hypothesis random walks
+in tests/test_serving.py exercise): the rid->slot and slot->rid maps are
+mutually inverse, every bound slot is in range, and a slot is held by at
+most one request for its whole residence — slots are never shared, so
+there is no refcounting, no content hashing, and no block horizon. Note
+slot-state kinds have no fork/rewind story yet (state would need a copy,
+not a refcount), which is why beam search and speculative decoding are
+paged-transformer-only for now (see ROADMAP).
 """
 
 from __future__ import annotations

@@ -27,6 +27,13 @@ runs at the fixed ``chunk_width``. So there are exactly **two** compiled
 step executables per model family (with / without a chunk) regardless of
 occupancy or prompt length, plus one encode executable for enc-dec.
 
+With speculative decoding (``num_speculative_tokens`` = k > 0, paged
+transformers only) the decode half is the draft-and-verify step: k draft
+proposals per slot, one k+1-wide target verify row, in-jit rejection
+sampling (greedy byte-identical to plain decode), and the host appends
+the accepted prefix and rewinds rejected lookahead blocks via
+``BlockManager.truncate``. See docs/speculative.md.
+
 Time is measured in engine steps; request arrivals are given in the same
 unit so runs are deterministic and testable (launch/serve.py maps Poisson
 arrival times onto it).
@@ -65,23 +72,37 @@ class InferenceEngine:
                  max_num_batched_tokens: int | None = None,
                  enable_prefix_caching: bool = True,
                  debug_invariants: bool = False,
-                 seed: int = 0, params=None):
+                 seed: int = 0, params=None,
+                 draft_cfg: ModelConfig | None = None,
+                 num_speculative_tokens: int = 0, draft_params=None):
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
-        self.runner = make_runner(cfg, self.pcfg)   # raises if unsupported
+        if num_speculative_tokens and draft_cfg is None:
+            draft_cfg = cfg          # self-speculation (a fresh-init draft
+            #                          unless draft_params shares weights)
+        self.draft_cfg = draft_cfg
+        self.runner = make_runner(                  # raises if unsupported
+            cfg, self.pcfg, draft_cfg=draft_cfg,
+            num_speculative_tokens=num_speculative_tokens)
+        spec = self.runner.spec_tokens
         self.block_size = block_size
         self.max_len = max_len
-        self.max_blocks_per_seq = -(-max_len // block_size)
+        # block-table rows are widened past max_len by the speculative
+        # lookahead: a verify step writes up to spec positions past the
+        # context even on a request that retires before using them
+        self.max_blocks_per_seq = -(-max_len // block_size) \
+            + -(-spec // block_size)
         if num_blocks is None:
-            # every slot can reach max_len; +1 for the trash block
+            # every slot can reach max_len (+ lookahead); +1 trash block
             num_blocks = max_batch * self.max_blocks_per_seq + 1
         if max_num_batched_tokens is None:
-            max_num_batched_tokens = max_batch + 2 * block_size
+            max_num_batched_tokens = max_batch * (1 + spec) + 2 * block_size
         self.max_num_batched_tokens = max_num_batched_tokens
         # static chunk-buffer width: a full decode batch plus a full chunk
         # together stay within the budget; no chunk can exceed max_len, so
         # a huge budget must not widen the compiled buffer past it
-        self.chunk_width = min(max_num_batched_tokens - max_batch, max_len)
+        self.chunk_width = min(
+            max_num_batched_tokens - max_batch * (1 + spec), max_len)
         self.bm = (BlockManager(num_blocks, block_size)
                    if self.runner.needs_blocks else None)
         self.slot_cache = (SlotStateCache(max_batch)
@@ -97,7 +118,10 @@ class InferenceEngine:
                                enable_prefix_caching=enable_prefix_caching,
                                chunk_quantum=self.runner.chunk_quantum,
                                slot_cache=self.slot_cache,
-                               encoder_cache=self.encoder_cache)
+                               encoder_cache=self.encoder_cache,
+                               spec_tokens=spec,
+                               max_context=-(-max_len // block_size)
+                               * block_size)
         self.max_batch = max_batch
         self.debug_invariants = debug_invariants
 
@@ -106,6 +130,13 @@ class InferenceEngine:
                 params_f32, _ = api.init_model(cfg, jax.random.key(seed))
                 params = jax.tree.map(
                     lambda x: x.astype(jnp.bfloat16), params_f32)
+            if draft_cfg is not None:
+                if draft_params is None:
+                    dp_f32, _ = api.init_model(draft_cfg,
+                                               jax.random.key(seed + 1))
+                    draft_params = jax.tree.map(
+                        lambda x: x.astype(jnp.bfloat16), dp_f32)
+                params = {"tgt": params, "dft": draft_params}
             self.params = params
             self.cache = self.runner.init_cache(num_blocks, block_size,
                                                 max_batch)
@@ -125,6 +156,8 @@ class InferenceEngine:
         cache_mib = 0.0
         if self.runner.needs_blocks:
             cache_mib += num_blocks * block_bytes(cfg, block_size)
+        if draft_cfg is not None:
+            cache_mib += num_blocks * block_bytes(draft_cfg, block_size)
         if self.runner.needs_slots:
             cache_mib += max_batch * slot_state_bytes(cfg)
         if self.runner.needs_encoder:
@@ -132,6 +165,7 @@ class InferenceEngine:
         self.stats = {"steps": 0, "prefill_chunks": 0, "preemptions": 0,
                       "tokens": 0, "cache_hit_tokens": 0, "cow_copies": 0,
                       "encodes": 0,
+                      "spec_decodes": 0, "spec_emitted": 0,
                       "peak_block_utilization": 0.0, "peak_blocks_in_use": 0,
                       "latency": {},
                       "kv_cache_mib": round(cache_mib / 2 ** 20, 3)}
@@ -274,16 +308,37 @@ class InferenceEngine:
             step_exec = (self._step_chunk if plan.chunk is not None
                          else self._step_plain)
             nxt, self.cache = step_exec(self.params, self.cache, arrays)
-            nxt = np.asarray(nxt)
-            for slot, req in plan.decodes:
-                req.num_computed += 1
-                self._append_token(slot, req, int(nxt[slot]))
+            if self.runner.spec_tokens or self.draft_cfg is not None:
+                toks, n_acc, c_tok = nxt
+                toks, n_acc = np.asarray(toks), np.asarray(n_acc)
+                chunk_tok = int(np.asarray(c_tok)[0])
+                for slot, req in plan.decodes:
+                    self.stats["spec_decodes"] += 1
+                    # accepted draft prefix + the corrected / bonus token,
+                    # cut short by EOS or max_new retirement
+                    for i in range(int(n_acc[slot]) + 1):
+                        req.num_computed += 1
+                        self.stats["spec_emitted"] += 1
+                        self._append_token(slot, req, int(toks[slot, i]))
+                        if req.done:
+                            break
+                    if self.sched.running.get(slot) is req:
+                        # roll back lookahead blocks the rejected draft
+                        # tail reserved (in both models' pools at once —
+                        # they share the block table)
+                        self.bm.truncate(req.rid, req.context_len)
+            else:
+                nxt = np.asarray(nxt)
+                chunk_tok = int(nxt[self.max_batch])
+                for slot, req in plan.decodes:
+                    req.num_computed += 1
+                    self._append_token(slot, req, int(nxt[slot]))
             if plan.chunk is not None:
                 slot, req, n = plan.chunk
                 req.num_computed += n
                 self.stats["prefill_chunks"] += 1
                 if req.num_computed == req.context_len:
-                    self._append_token(slot, req, int(nxt[self.max_batch]))
+                    self._append_token(slot, req, chunk_tok)
                 else:
                     self.sched.note_progress(req)
             self.stats["steps"] += 1
@@ -319,9 +374,12 @@ class InferenceEngine:
                     f"chunk would write shared block {t[j]}"
         for slot, req in plan.decodes:
             t = self.bm.table(req.rid)
-            j = (req.context_len - 1) // bs
-            assert self.bm.refcount(t[j]) == 1, \
-                f"decode would write shared block {t[j]}"
+            # the decode (or the speculative verify row) writes positions
+            # context_len-1 .. context_len-1+spec: all exclusively owned
+            for p in range(req.context_len - 1,
+                           req.context_len + plan.spec_tokens):
+                assert self.bm.refcount(t[p // bs]) == 1, \
+                    f"decode would write shared block {t[p // bs]}"
 
     def run(self, requests: list[Request],
             arrival_steps: list[int] | None = None) -> dict[int, np.ndarray]:
@@ -358,4 +416,9 @@ class InferenceEngine:
         self.stats["wall_s"] = round(dt, 3)
         self.stats["tok_s"] = round((self.stats["tokens"] - tok0)
                                     / max(dt, 1e-9), 1)
+        if self.stats["spec_decodes"]:
+            # realized tokens per speculative decode slot-step: 1.0 means
+            # no draft token ever survived verification, 1 + k is the cap
+            self.stats["mean_accept_len"] = round(
+                self.stats["spec_emitted"] / self.stats["spec_decodes"], 3)
         return {r.rid: np.asarray(r.out, np.int32) for r in requests}

@@ -23,6 +23,9 @@ block tables plus a content-hash index for prefix caching:
 * **Copy-on-write** — a request must never write into a block another
   table can read. ``cow`` swaps a shared table entry for a fresh block and
   tells the caller which device page to copy.
+* **Truncate** — ``truncate`` rewinds a table's tail (free semantics,
+  hash retained): the speculative-decoding rollback for lookahead blocks
+  whose draft tokens were rejected (docs/kv-cache.md, docs/speculative.md).
 
 Block 0 is reserved as the *trash block* — idle serving slots carry
 all-zero table rows, so the decode step's unconditional KV write for an
@@ -299,6 +302,29 @@ class BlockManager:
         self._ref[new] = 1
         t[idx] = new
         return new
+
+    def truncate(self, rid: int, n_tokens: int) -> list[int]:
+        """Rewind rid's table to cover only ``n_tokens``, freeing the tail.
+
+        The speculative-decoding rollback: a verify step reserves blocks
+        for up to k+1 lookahead positions; when fewer draft tokens are
+        accepted the tail blocks past the surviving context are returned
+        to the pool. Dropped blocks follow ``free`` semantics — refcount
+        decremented, content hash retained while on the free list (the
+        engine only ever truncates past ``num_computed``, so a dropped
+        block is never one whose hash was published for *this* request's
+        stream). Returns the freed block ids (newest first)."""
+        t = self._tables[rid]
+        keep = self.blocks_for(max(n_tokens, 0))
+        dropped = []
+        while len(t) > keep:
+            b = t.pop()
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
+            dropped.append(b)
+        return dropped
 
     def free(self, rid: int) -> None:
         """Drop rid's references. Blocks keep their content hash while on

@@ -17,11 +17,26 @@ Runners:
   one block table spanning the attention layers).
 * :class:`EncDecRunner` — whisper (paged decoder self-KV + per-slot
   read-only cross K/V written by an encode pass at admission).
+* :class:`SpeculativeRunner` — draft-and-verify speculative decoding
+  over two TransformerRunners (one shared block table indexing a target
+  and a draft page-pool set; greedy byte-identical to plain decode).
 
 The step functions are shape-stable: decode always runs ``max_batch``
 wide (idle slots masked; their KV writes land in the trash block, their
 slot-state rows are reverted after the step), the chunk always runs at
 ``chunk_width``. Sampling row B is the chunk's last-token logits.
+
+Invariants every runner upholds (the engine equivalence tests pin them):
+
+* an idle decode slot never corrupts state — paged writes land in the
+  trash block, slot-state rows are reverted via the ``d_active`` mask;
+* a chunk that starts a (re)computed sequence reads zeroed slot state,
+  never a previous occupant's;
+* token KV/state is identical whether produced by monolithic prefill, a
+  chunk, or a decode step (the shared rounding convention — see
+  docs/kernels.md), which is what makes chunked prefill, preemption-
+  recompute, prefix-cache adoption and greedy speculative decode all
+  byte-identical to the plain path.
 """
 
 from __future__ import annotations
@@ -34,10 +49,11 @@ from repro.models import encdec, transformer
 from repro.serving.cache import init_encoder_cache, init_slot_state
 from repro.serving.kv_cache import (init_paged_cache, attn_layer_stacks,
                                     mamba_layer_stacks)
-from repro.serving.sampling import sample_tokens
+from repro.serving.sampling import (propose_tokens, sample_tokens,
+                                    speculative_verify)
 
 __all__ = ["ModelRunner", "TransformerRunner", "SSMRunner", "HybridRunner",
-           "EncDecRunner", "make_runner"]
+           "EncDecRunner", "SpeculativeRunner", "make_runner"]
 
 
 def _slice_slot(tree, slot):
@@ -71,6 +87,8 @@ class ModelRunner:
     supports_prefix_caching: bool = False
     chunk_quantum: int = 1            # chunk lengths must be multiples
                                       # (except a prompt's final chunk)
+    spec_tokens: int = 0              # draft tokens per slot per step
+                                      # (speculative decoding lookahead)
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig):
         self.cfg, self.pcfg = cfg, pcfg
@@ -225,12 +243,131 @@ class EncDecRunner(ModelRunner):
         return self._sample(logits_d, logits_c, a, has_chunk), cache
 
 
-def make_runner(cfg: ModelConfig, pcfg: ParallelConfig) -> ModelRunner:
-    """Family dispatch. Raises for configs no runner covers yet."""
+class SpeculativeRunner(ModelRunner):
+    """Draft-and-verify speculative decoding over two TransformerRunners.
+
+    A small *draft* model proposes ``spec_tokens`` (= k) tokens per slot
+    per step; the *target* model scores all k+1 candidate positions in one
+    widened chunk pass (``prefill_chunk_paged`` with ``all_logits=True``,
+    i.e. ``paged_chunk_attention`` with k+1 query rows per slot); the
+    longest agreeing prefix is accepted by rejection sampling that
+    preserves the target distribution (``sampling.speculative_verify``) —
+    greedy outputs stay byte-identical to non-speculative decode.
+
+    Cache design: draft and target KV always cover *the same token
+    positions* (the draft writes every token it is fed, the verify pass
+    writes the same k+1 positions in the target pools, chunk prefill runs
+    through both models), so both live in one pytree
+    ``{"tgt": ..., "dft": ...}`` indexed by **one shared block table per
+    request** — a single :class:`~repro.serving.kv_cache.BlockManager`
+    covers both models, and prefix caching, COW page copies and
+    preemption-recompute apply to the pair at once (a cached block's
+    content hash vouches for the draft KV exactly as it does for the
+    target's, since both are pure functions of the token prefix).
+
+    Per step and slot the draft runs k+1 single-token decodes (the last
+    one writes KV for the final proposal so the draft cache never trails
+    the accepted stream), the target runs one k+1-wide verify row, and the
+    host rolls rejected lookahead blocks back via ``BlockManager.truncate``.
+    ``params`` is the pair ``{"tgt": target_params, "dft": draft_params}``.
+    """
+
+    needs_blocks = True
+    supports_prefix_caching = True
+
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig,
+                 draft_cfg: ModelConfig, spec_tokens: int):
+        super().__init__(cfg, pcfg)
+        if spec_tokens < 0:
+            raise ValueError(f"spec_tokens={spec_tokens} must be >= 0")
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                f"{cfg.vocab_size}: draft proposals must be target ids")
+        self.draft_cfg = draft_cfg
+        self.spec_tokens = spec_tokens
+
+    def init_cache(self, num_blocks, block_size, max_batch):
+        return {"tgt": init_paged_cache(self.cfg, num_blocks, block_size),
+                "dft": init_paged_cache(self.draft_cfg, num_blocks,
+                                        block_size)}
+
+    def step(self, params, cache, a, *, has_chunk):
+        k = self.spec_tokens
+        B = a["d_tok"].shape[0]
+        tgt, dft = cache["tgt"], cache["dft"]
+        logits_c = None
+        if has_chunk:
+            cb = self._chunk_batch(a)
+            logits_c, tgt = transformer.prefill_chunk_paged(
+                params["tgt"], tgt, cb, self.cfg, self.pcfg)
+            _, dft = transformer.prefill_chunk_paged(
+                params["dft"], dft, cb, self.draft_cfg, self.pcfg)
+        temps, top_ks = a["temps"][:B], a["top_ks"][:B]
+        seeds, rids, cnts = a["seeds"][:B], a["rids"][:B], a["counters"][:B]
+        # -- draft phase: k proposals, k+1 KV writes (the last write backs
+        # the final proposal so the draft cache mirrors the target's) ----
+        toks = [a["d_tok"]]
+        dlogits = []
+        if k > 0:
+            for i in range(k + 1):
+                db = {"token": toks[-1][:, None], "pos": a["d_pos"] + i,
+                      "block_tables": a["d_tables"],
+                      "ctx_lens": jnp.where(a["d_active"],
+                                            a["d_pos"] + i + 1, 0)}
+                lg, dft = transformer.decode_step_paged(
+                    params["dft"], dft, db, self.draft_cfg, self.pcfg)
+                if i < k:
+                    dlogits.append(lg)
+                    toks.append(propose_tokens(lg, temps, top_ks, seeds,
+                                               rids, cnts + i))
+        # -- verify phase: one widened target pass over all k+1 positions
+        verify_tokens = jnp.stack(toks, axis=1)                  # (B, k+1)
+        vb = {"tokens": verify_tokens, "q_start": a["d_pos"],
+              "q_lens": jnp.where(a["d_active"], k + 1, 0),
+              "block_tables": a["d_tables"],
+              "ctx_lens": jnp.where(a["d_active"], a["d_pos"] + k + 1, 0)}
+        tlogits, tgt = transformer.prefill_chunk_paged(
+            params["tgt"], tgt, vb, self.cfg, self.pcfg, all_logits=True)
+        draft_logits = (jnp.stack(dlogits, axis=1) if dlogits else
+                        jnp.zeros((B, 0, tlogits.shape[-1]),
+                                  tlogits.dtype))
+        out_toks, n_acc = speculative_verify(
+            verify_tokens[:, 1:], draft_logits, tlogits,
+            temps, top_ks, seeds, rids, cnts)
+        if has_chunk:
+            c_tok = sample_tokens(logits_c, a["temps"][B:], a["top_ks"][B:],
+                                  a["seeds"][B:], a["rids"][B:],
+                                  a["counters"][B:])
+        else:
+            c_tok = jnp.zeros((1,), jnp.int32)
+        return (out_toks, n_acc, c_tok), {"tgt": tgt, "dft": dft}
+
+
+def make_runner(cfg: ModelConfig, pcfg: ParallelConfig, *,
+                draft_cfg: ModelConfig | None = None,
+                num_speculative_tokens: int = 0) -> ModelRunner:
+    """Family dispatch. Raises for configs no runner covers yet.
+
+    With ``draft_cfg`` set, wraps target and draft in a
+    :class:`SpeculativeRunner` — both must resolve to the plain paged
+    transformer family (slot-state kinds have no fork/rewind story for
+    recurrent state yet; see ROADMAP)."""
     if cfg.frontend == "vision":
         raise ValueError(
             f"no serving runner for {cfg.name}: modality frontends need "
             "per-request position streams")
+    if draft_cfg is not None:
+        base = make_runner(cfg, pcfg)
+        draft = make_runner(draft_cfg, pcfg)
+        if type(base) is not TransformerRunner \
+                or type(draft) is not TransformerRunner:
+            raise ValueError(
+                "speculative decoding needs paged-transformer target and "
+                f"draft, got {type(base).__name__} target / "
+                f"{type(draft).__name__} draft")
+        return SpeculativeRunner(cfg, pcfg, draft_cfg,
+                                 num_speculative_tokens)
     if cfg.encoder_layers:
         return EncDecRunner(cfg, pcfg)
     if cfg.ssm is not None:

@@ -8,6 +8,21 @@ distinct streams, and keying by ``counter`` (= tokens generated so far,
 i.e. the request's own decode step) makes a request's stream a pure
 function of (seed, rid, step): reproducible regardless of batch
 composition, slot assignment, or recompute preemption.
+
+Speculative decoding adds three more streams per (seed, rid, counter)
+triple, each a distinct tag folded into the same base key so none of them
+collides with the plain sampling stream:
+
+* ``_DRAFT``  — the draft model's proposal at that counter,
+* ``_ACCEPT`` — the accept/reject uniform of standard rejection sampling,
+* ``_RESID``  — the residual-distribution sample emitted on rejection.
+
+Because every stream is keyed only by (seed, rid, counter), a speculative
+run replays identically across preemption-recompute and is independent of
+batch composition — and with ``k = 0`` draft tokens the verify step
+consumes exactly the plain stream, so it degenerates byte-identically to
+non-speculative decoding (``speculative_verify`` with K = 0 is
+``sample_tokens``).
 """
 
 from __future__ import annotations
@@ -17,20 +32,123 @@ import jax.numpy as jnp
 
 NEG = -1.0e30
 
+# stream tags folded into the per-(seed, rid, counter) base key
+_DRAFT = 1
+_ACCEPT = 2
+_RESID = 3
+
+
+def _base_key(seed, rid, counter):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), rid), counter)
+
+
+def _prep_logits(lg, t, k):
+    """Temperature-scale + top-k-truncate one (V,) logit row. This is the
+    one distribution transform every sampling path shares — draft proposals
+    (q), target verification (p), and plain sampling must all see the same
+    truncated distribution or rejection sampling would not preserve p."""
+    V = lg.shape[-1]
+    lg = lg / jnp.maximum(t, 1e-6)
+    kth = jnp.sort(lg)[V - jnp.clip(k, 1, V)]        # k-th largest
+    return jnp.where((k > 0) & (lg < kth), NEG, lg)
+
+
+def _sample_stream(logits, temps, top_ks, seeds, rids, counters, tag=None):
+    """One greedy / temperature / top-k sampling pass over (B, V) logit
+    rows. ``tag`` selects an independent stream off the same per-(seed,
+    rid, counter) base key — the single implementation keeps the plain
+    and draft streams' distributions provably identical, which the
+    rejection sampler's p/q consistency depends on."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(lg, t, k, s, r, c):
+        key = _base_key(s, r, c)
+        if tag is not None:
+            key = jax.random.fold_in(key, tag)
+        return jax.random.categorical(
+            key, _prep_logits(lg, t, k)).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(logits, temps, top_ks, seeds, rids, counters)
+    return jnp.where(temps <= 0.0, greedy, sampled)
+
 
 def sample_tokens(logits, temps, top_ks, seeds, rids, counters):
     """logits: (B, V) fp32; temps/seeds/rids/counters: (B,); top_ks: (B,)
     int32 (0 disables truncation). Returns (B,) int32 tokens."""
-    B, V = logits.shape
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return _sample_stream(logits, temps, top_ks, seeds, rids, counters)
 
-    def one(lg, t, k, s, r, c):
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(s), r), c)
-        lg = lg / jnp.maximum(t, 1e-6)
-        kth = jnp.sort(lg)[V - jnp.clip(k, 1, V)]        # k-th largest
-        lg = jnp.where((k > 0) & (lg < kth), NEG, lg)
-        return jax.random.categorical(key, lg).astype(jnp.int32)
 
-    sampled = jax.vmap(one)(logits, temps, top_ks, seeds, rids, counters)
-    return jnp.where(temps <= 0.0, greedy, sampled)
+def propose_tokens(logits, temps, top_ks, seeds, rids, counters):
+    """Draft-model proposals for speculative decoding: same greedy /
+    temperature / top-k semantics as :func:`sample_tokens`, but drawn from
+    the ``_DRAFT``-tagged stream so a proposal never consumes the
+    randomness the verify step will use at the same counter."""
+    return _sample_stream(logits, temps, top_ks, seeds, rids, counters,
+                          tag=_DRAFT)
+
+
+def speculative_verify(draft_tokens, draft_logits, target_logits,
+                       temps, top_ks, seeds, rids, counters):
+    """Accept/reject K draft tokens against K+1 target-logit rows.
+
+    draft_tokens: (B, K) int32 proposals (sampled via
+    :func:`propose_tokens`); draft_logits: (B, K, V) the logits they were
+    sampled from; target_logits: (B, K+1, V) — row i is the target model's
+    distribution for the token at counter ``counters + i``. Returns
+    ``(out_tokens (B, K+1) int32, n_accept (B,) int32)``: the realized new
+    tokens for row b are ``out_tokens[b, :n_accept[b] + 1]``.
+
+    * temperature 0: accept while the draft token equals the target argmax;
+      the emitted tokens are exactly the target argmaxes, so greedy
+      speculative decode is byte-identical to plain greedy decode.
+    * temperature > 0: standard rejection sampling — accept draft token d
+      at position i with probability min(1, p_i(d)/q_i(d)); on the first
+      rejection emit one sample from the residual ``max(p_i - q_i, 0)``;
+      if all K are accepted emit a bonus sample from ``p_K`` using the
+      *plain* stream key, which is what makes K = 0 degenerate exactly to
+      :func:`sample_tokens`. The realized tokens are distributed exactly
+      as sequential sampling from p (Leviathan et al. 2023), though for
+      K > 0 they are not sample-identical to the non-speculative stream.
+    """
+    B, K1, V = target_logits.shape
+    K = K1 - 1
+
+    def one(d_toks, d_lg, t_lg, t, k, s, r, c0):
+        t_arg = jnp.argmax(t_lg, axis=-1).astype(jnp.int32)     # (K+1,)
+        p_lg = jax.vmap(_prep_logits, (0, None, None))(t_lg, t, k)
+        if K == 0:
+            fresh = jax.random.categorical(
+                _base_key(s, r, c0), p_lg[0]).astype(jnp.int32)
+            out = jnp.where(t <= 0.0, t_arg, fresh[None])
+            return out, jnp.zeros((), jnp.int32)
+        q_lg = jax.vmap(_prep_logits, (0, None, None))(d_lg, t, k)
+        p = jax.nn.softmax(p_lg, axis=-1)                       # (K+1, V)
+        q = jax.nn.softmax(q_lg, axis=-1)                       # (K, V)
+        cs = c0 + jnp.arange(K, dtype=jnp.int32)
+        u = jax.vmap(lambda c: jax.random.uniform(
+            jax.random.fold_in(_base_key(s, r, c), _ACCEPT)))(cs)
+        p_d = jnp.take_along_axis(p[:K], d_toks[:, None], axis=1)[:, 0]
+        q_d = jnp.take_along_axis(q, d_toks[:, None], axis=1)[:, 0]
+        acc_temp = u < p_d / jnp.maximum(q_d, 1e-37)
+        acc = jnp.where(t <= 0.0, d_toks == t_arg[:K], acc_temp)
+        n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32)))
+        # residual sample for every possible rejection point (only the
+        # n_acc-th is ever consumed); fall back to p when p <= q pointwise
+        # (then rejection is impossible and the row is never used)
+        resid = jnp.clip(p[:K] - q, 0.0, None)
+        r_lg = jnp.where(resid.sum(-1, keepdims=True) > 0,
+                         jnp.log(jnp.maximum(resid, 1e-37)), p_lg[:K])
+        r_toks = jax.vmap(lambda c, lg: jax.random.categorical(
+            jax.random.fold_in(_base_key(s, r, c), _RESID), lg))(
+                cs, r_lg).astype(jnp.int32)
+        # bonus token when all K accepted: the plain stream at counter c0+K
+        fresh = jax.random.categorical(
+            _base_key(s, r, c0 + K), p_lg[K]).astype(jnp.int32)
+        out_temp = jnp.concatenate(
+            [jnp.where(jnp.arange(K) < n_acc, d_toks, r_toks), fresh[None]])
+        out = jnp.where(t <= 0.0, t_arg, out_temp)
+        return out, n_acc
+
+    return jax.vmap(one)(draft_tokens, draft_logits, target_logits,
+                         temps, top_ks, seeds, rids, counters)

@@ -29,6 +29,27 @@ so far; on re-admission it recomputes prompt+generated (prefix-cache hits
 on its own just-freed blocks usually make this cheap), so greedy outputs
 are preemption-invariant.
 
+With speculative decoding (``spec_tokens`` = k > 0) each decode slot
+costs ``1 + k`` budget tokens (the widened verify row) and its block
+horizon is ensured at ``context_len + 1 + k`` — the engine rewinds the
+rejected tail via ``BlockManager.truncate`` after the step — and a
+preemption victim's recompute chunk stops one token short of its stream
+so the final token is re-emitted by the verify step with the original
+rejection-sampling window alignment (temperature replay invariance).
+
+Invariants this module maintains (asserted by ``validate``, the engine's
+``debug_invariants`` checks, and the scheduler tests):
+
+* a request is accepted only if ``prompt + max_new`` fits the per-request
+  block-table capacity (``max_context``) — checked once, at submission;
+* every decode-ready request owns blocks covering
+  ``context_len + 1 + spec_tokens`` before its step runs;
+* a step's ``scheduled_tokens`` never exceeds ``max_num_batched_tokens``;
+* running decodes are never starved: admission and chunk growth spend
+  only the *leftover* budget, and admission never preempts;
+* slot-kind caches hold a rid<->slot bijection, bound at admission and
+  released exactly once on preempt/retire.
+
 Pure host-side and jax-free so the policy is unit-testable in isolation.
 """
 
@@ -105,10 +126,14 @@ class StepPlan:
     admitted: int = 0                             # waiting -> running joins
     # freshly admitted enc-dec requests needing an encode pass this step
     encodes: list[tuple[int, Request]] = field(default_factory=list)
+    # speculative lookahead: each decode slot costs 1 + spec_tokens target
+    # positions (the widened verify row)
+    spec_tokens: int = 0
 
     @property
     def scheduled_tokens(self) -> int:
-        return len(self.decodes) + (self.chunk[2] if self.chunk else 0)
+        return (len(self.decodes) * (1 + self.spec_tokens)
+                + (self.chunk[2] if self.chunk else 0))
 
 
 class Scheduler:
@@ -130,12 +155,14 @@ class Scheduler:
                  max_blocks_per_seq: int, max_num_batched_tokens: int,
                  chunk_width: int, *, enable_prefix_caching: bool = True,
                  chunk_quantum: int = 1, slot_cache=None,
-                 encoder_cache=None):
-        if max_num_batched_tokens <= max_batch:
+                 encoder_cache=None, spec_tokens: int = 0,
+                 max_context: int | None = None):
+        if max_num_batched_tokens <= max_batch * (1 + spec_tokens):
             raise ValueError(
                 f"max_num_batched_tokens={max_num_batched_tokens} must "
-                f"exceed max_batch={max_batch} (decodes take one token "
-                "each; a prefill chunk needs leftover budget)")
+                f"exceed max_batch={max_batch} x (1 + spec_tokens="
+                f"{spec_tokens}) (each decode slot costs a 1 + k wide "
+                "verify row; a prefill chunk needs leftover budget)")
         if chunk_width < chunk_quantum:
             raise ValueError(
                 f"chunk_width={chunk_width} below chunk_quantum="
@@ -148,6 +175,14 @@ class Scheduler:
         self.chunk_quantum = chunk_quantum
         self.slot_cache = slot_cache
         self.encoder_cache = encoder_cache
+        # speculative lookahead: decodes reserve blocks for k extra
+        # positions and cost 1 + k budget tokens (the verify row width).
+        # max_context caps prompt+max_new at validation when the engine
+        # widened the block tables past max_len to fit the lookahead.
+        self.spec_tokens = spec_tokens
+        self.max_context = (max_context if max_context is not None
+                            else max_blocks_per_seq
+                            * (bm.block_size if bm is not None else 0))
         self.enable_prefix_caching = enable_prefix_caching and bm is not None
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}      # slot -> request
@@ -174,7 +209,7 @@ class Scheduler:
         if self.bm is None:
             return
         horizon = len(req.prompt) + req.max_new
-        capacity = self.max_blocks_per_seq * self.bm.block_size
+        capacity = self.max_context
         if horizon > capacity:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new = {horizon} tokens "
@@ -196,7 +231,8 @@ class Scheduler:
         self._ensure_decode_capacity()
         decodes = [(s, r) for s, r in sorted(self.running.items())
                    if r.decode_ready]
-        budget_left = self.max_num_batched_tokens - len(decodes)
+        budget_left = self.max_num_batched_tokens \
+            - len(decodes) * (1 + self.spec_tokens)
 
         chunk = None
         admitted = 0
@@ -212,6 +248,14 @@ class Scheduler:
         if pre is not None and budget_left > 0:
             slot, req = pre
             remaining = req.context_len - req.num_computed
+            if self.spec_tokens and req.out:
+                # speculative preemption-recompute stops one token short:
+                # the final token must be re-emitted by the verify step,
+                # not resampled from the chunk row, so the rejection-
+                # sampling windows stay aligned with the uninterrupted
+                # run (a preemption only ever lands on a window boundary)
+                # and temperature streams replay identically
+                remaining -= 1
             n = min(budget_left, self.chunk_width, remaining)
             n = self._quantize(n, remaining)
             if n > 0:
@@ -219,7 +263,8 @@ class Scheduler:
             if n > 0:
                 chunk = (slot, req, n)
         return StepPlan(decodes=decodes, chunk=chunk, copies=copies,
-                        admitted=admitted, encodes=encodes)
+                        admitted=admitted, encodes=encodes,
+                        spec_tokens=self.spec_tokens)
 
     def _quantize(self, n: int, remaining: int) -> int:
         """Round a non-final chunk down to the chunk quantum (SSM runners:
@@ -232,23 +277,27 @@ class Scheduler:
 
     def _ensure_decode_capacity(self) -> None:
         """Every decode-ready request must own blocks for context_len + 1
-        (the token about to be written). Preempts newest requests until the
-        survivors fit. Slot-state-only runners have constant-size state:
-        decode can never run out of capacity."""
+        (the token about to be written) plus ``spec_tokens`` lookahead
+        positions the speculative verify row may write (rejected tail
+        blocks are rolled back after the step via ``BlockManager.truncate``).
+        Preempts newest requests until the survivors fit. Slot-state-only
+        runners have constant-size state: decode can never run out of
+        capacity."""
         if self.bm is None:
             return
         for slot in list(self._join_order):             # oldest first
             req = self.running.get(slot)
             if req is None or not req.decode_ready:
                 continue
-            while not self.bm.ensure(req.rid, req.context_len + 1):
+            horizon = req.context_len + 1 + self.spec_tokens
+            while not self.bm.ensure(req.rid, horizon):
                 victim_slot = self._pick_victim()       # newest running
                 if victim_slot == slot and len(self.running) == 1 and \
-                        self.bm.blocks_for(req.context_len + 1) \
+                        self.bm.blocks_for(horizon) \
                         > self.bm.num_blocks - 1:
                     raise MemoryError(
                         f"block pool too small for request {req.rid} "
-                        f"at {req.context_len + 1} tokens")
+                        f"at {horizon} tokens")
                 self._preempt(victim_slot)
                 if victim_slot == slot:
                     break        # self-preempted: back to waiting, move on

@@ -1,0 +1,28 @@
+"""Docs hygiene: every relative markdown link in the repo must resolve.
+
+The same check runs as a CI step (``python tools/check_links.py``); having
+it under tier-1 means a dead link shows up in the local test run too, not
+only after pushing.
+"""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_links import dead_links, markdown_files  # noqa: E402
+
+
+def test_docs_tree_exists():
+    for page in ("architecture.md", "kv-cache.md", "kernels.md",
+                 "speculative.md"):
+        assert (REPO / "docs" / page).is_file(), f"docs/{page} missing"
+    assert (REPO / "README.md").is_file()
+
+
+def test_no_dead_relative_links():
+    assert len(list(markdown_files(REPO))) >= 5
+    bad = dead_links(REPO)
+    assert not bad, "dead relative links:\n" + "\n".join(
+        f"{md}: {target}" for md, target in bad)

@@ -289,6 +289,28 @@ def test_prefix_hash_register_match_and_revival():
     bm.check()
 
 
+def test_block_manager_truncate_rewind():
+    """Speculative rollback: truncate frees tail blocks (newest first),
+    respects sharing via refcounts, and keeps content hashes on freed
+    blocks so prefix entries survive a rewind."""
+    bm = BlockManager(num_blocks=9, block_size=4)
+    t = bm.allocate(1, 16)              # 4 blocks
+    assert bm.truncate(1, 9) == [t[3]]  # keep ceil(9/4) = 3
+    assert bm.table(1) == t[:3] and bm.num_free == 5
+    bm.check()
+    bm.fork(1, 2)
+    bm.truncate(2, 4)                   # rid 2 keeps 1 block
+    assert bm.table(2) == t[:1]
+    assert bm.refcount(t[1]) == 1 and bm.table(1) == t[:3]
+    bm.check()
+    bm.register(t[2], b"spec")
+    bm.truncate(1, 5)                   # drops the hashed tail block
+    assert bm.match([b"spec"]) == [t[2]]     # cached-free, revivable
+    assert bm.truncate(1, 0) == [t[1], t[0]]
+    assert bm.truncate(1, 0) == []           # idempotent on empty
+    bm.check()
+
+
 def test_prefix_cache_eviction_prefers_unhashed():
     bm = BlockManager(num_blocks=5, block_size=2)
     t = bm.allocate(1, 8)
@@ -311,8 +333,9 @@ def test_prefix_cache_eviction_prefers_unhashed():
 
 def _bm_random_walk(tape):
     """Interpret ``tape`` (an iterator of ints) as add/grow/fork/free/COW/
-    register/adopt ops against a BlockManager, asserting the full invariant
-    set and exact free-block accounting after every op."""
+    register/adopt/truncate ops against a BlockManager, asserting the full
+    invariant set and exact free-block accounting after every op (truncate
+    is the speculative draft/target rewind path)."""
     NB, BS = 9, 4
     bm = BlockManager(num_blocks=NB, block_size=BS)
     tokens: dict[int, int] = {}       # rid -> tokens covered
@@ -333,7 +356,7 @@ def _bm_random_walk(tape):
         assert bm.stats().blocks_in_use == len(in_use)
 
     for _ in range(120):
-        op = draw(7)
+        op = draw(8)
         rids = list(tokens)
         if op == 0 or not rids:                       # allocate
             rid = new_rid()
@@ -370,6 +393,12 @@ def _bm_random_walk(tape):
             if t:
                 next_hash[0] += 1
                 bm.register(t[draw(len(t))], next_hash[0])
+        elif op == 7:                                 # truncate (spec rewind)
+            rid = rids[draw(len(rids))]
+            cover = len(bm.table(rid)) * BS
+            n = draw(cover + 1) if cover else 0
+            bm.truncate(rid, n)
+            tokens[rid] = min(tokens[rid], n)
         else:                                         # adopt cached blocks
             if next_hash[0]:
                 h = draw(next_hash[0]) + 1
@@ -1123,6 +1152,212 @@ def test_sampling_reproducible_across_preemption(glm_smoke):
     assert tight.stats["preemptions"] >= 1
     for w, r in zip(want, reqs):
         np.testing.assert_array_equal(got[r.rid], w)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding (draft-and-verify)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def star_params(tiny_mesh_module):
+    """Shared target params for the speculative tests (starcoder2-class
+    dense GQA config, per the acceptance bar for byte-equivalence)."""
+    import jax.numpy as jnp
+    from repro.models import api
+    cfg = get_config("starcoder2_3b", smoke=True)
+    with jax.set_mesh(tiny_mesh_module):
+        params_f32, _ = api.init_model(cfg, jax.random.key(0))
+        params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params_f32)
+    return cfg, params
+
+
+def _spec_engine(cfg, mesh, params, k, *, self_draft=False, **kw):
+    from repro.serving import InferenceEngine
+    return InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=params,
+                           num_speculative_tokens=k,
+                           draft_params=params if self_draft else None,
+                           debug_invariants=True, **kw)
+
+
+@pytest.mark.parametrize("self_draft", [True, False])
+def test_engine_speculative_greedy_matches_plain(tiny_mesh_module,
+                                                 star_params, self_draft):
+    """Greedy speculative decode is byte-identical to plain decode, both
+    with a self-draft (full acceptance: every verify row agrees) and with
+    an independently initialized draft (near-zero acceptance: every token
+    is the target's correction) — acceptance only moves *throughput*."""
+    from repro.serving import InferenceEngine, Request, SpeculativeRunner
+    cfg, params = star_params
+    mesh = tiny_mesh_module
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(4)]
+    plain = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, params=params,
+                            debug_invariants=True)
+    want = plain.run([Request(p, max_new=8) for p in prompts])
+    want = list(want.values())
+    spec = _spec_engine(cfg, mesh, params, 2, self_draft=self_draft)
+    assert isinstance(spec.runner, SpeculativeRunner)
+    reqs = [Request(p, max_new=8) for p in prompts]
+    got = spec.run(reqs, arrival_steps=[0, 0, 2, 5])
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+    assert spec.stats["spec_decodes"] >= 1
+    if self_draft:
+        # identical draft == target logits: every draft token is accepted
+        assert spec.stats["mean_accept_len"] > 1.0
+
+
+def test_engine_speculative_prefix_cache_hit_cow(tiny_mesh_module,
+                                                 star_params):
+    """Full-prompt prefix-cache hits (boundary COW included) under
+    speculation: cached blocks carry draft *and* target KV — outputs stay
+    byte-identical to the non-speculative engine on the same workload."""
+    from repro.serving import InferenceEngine, Request
+    cfg, params = star_params
+    mesh = tiny_mesh_module
+    prompt = RNG.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    kw = dict(max_batch=4, block_size=16, max_len=96, params=params,
+              debug_invariants=True)
+    plain = InferenceEngine(cfg, mesh, **kw)
+    reqs_p = [Request(prompt.copy(), max_new=6) for _ in range(3)]
+    o_p = plain.run(reqs_p, arrival_steps=[0, 3, 6])
+    spec = InferenceEngine(cfg, mesh, num_speculative_tokens=2,
+                           draft_params=params, **kw)
+    reqs_s = [Request(prompt.copy(), max_new=6) for _ in range(3)]
+    o_s = spec.run(reqs_s, arrival_steps=[0, 3, 6])
+    assert spec.stats["cow_copies"] >= 1
+    assert spec.stats["cache_hit_tokens"] >= 2 * 63
+    assert spec.stats["mean_accept_len"] > 1.0
+    for a, b in zip(reqs_p, reqs_s):
+        np.testing.assert_array_equal(o_p[a.rid], o_s[b.rid])
+
+
+def test_engine_speculative_preemption_greedy(tiny_mesh_module, star_params):
+    """Recompute-preemption under speculation (lookahead block pressure
+    included): greedy outputs byte-identical to the unconstrained plain
+    engine, and rejected lookahead blocks are rolled back (truncate) so
+    the tight pool never leaks."""
+    from repro.serving import InferenceEngine, Request
+    cfg, params = star_params
+    mesh = tiny_mesh_module
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    plain = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, params=params,
+                            debug_invariants=True)
+    want = list(plain.run([Request(p, max_new=20) for p in prompts])
+                .values())
+    tight = _spec_engine(cfg, mesh, params, 2, num_blocks=8)
+    reqs = [Request(p, max_new=20) for p in prompts]
+    got = tight.run(reqs)
+    assert tight.stats["preemptions"] >= 1
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+    assert tight.bm.stats().blocks_in_use == 0
+
+
+def test_engine_speculative_temperature_replays_across_preemption(
+        tiny_mesh_module, star_params):
+    """Temperature speculative sampling is a pure function of
+    (seed, rid, counter): the draft/accept/residual streams key off the
+    same rid-folded base keys as plain sampling, and preemption-recompute
+    stops one token short so verify windows stay aligned — outputs replay
+    identically under block-pool pressure."""
+    cfg, params = star_params
+    from repro.serving import Request
+    mesh = tiny_mesh_module
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    sp = SamplingParams(temperature=0.9, top_k=16, seed=3)
+
+    def make():
+        return [Request(p, max_new=20, sampling=sp, rid=88000 + i)
+                for i, p in enumerate(prompts)]
+
+    base = _spec_engine(cfg, mesh, params, 2)
+    want = list(base.run(make()).values())
+    tight = _spec_engine(cfg, mesh, params, 2, num_blocks=8)
+    reqs = make()
+    got = tight.run(reqs)
+    assert tight.stats["preemptions"] >= 1
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_engine_speculative_k0_degenerates_to_plain(tiny_mesh_module,
+                                                    star_params):
+    """k = 0 is the non-speculative path byte for byte, *including* the
+    temperature RNG stream (the bonus sample uses the plain stream key)."""
+    from repro.serving import InferenceEngine, Request
+    cfg, params = star_params
+    mesh = tiny_mesh_module
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    sp = SamplingParams(temperature=0.9, top_k=16, seed=7)
+
+    def make():
+        return [Request(p, max_new=10, sampling=sp, rid=99000 + i)
+                for i, p in enumerate(prompts)]
+
+    plain = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, params=params,
+                            debug_invariants=True)
+    want = list(plain.run(make()).values())
+    k0 = _spec_engine(cfg, mesh, params, 0, draft_cfg=cfg)
+    got = k0.run(make())
+    for w, (rid, g) in zip(want, sorted(got.items())):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_speculative_verify_preserves_target_distribution():
+    """Rejection sampling must leave the realized first-token marginal
+    equal to the target distribution p even when the draft q is badly
+    miscalibrated (chi-square-ish bound over many independent rids)."""
+    from repro.serving.sampling import propose_tokens, speculative_verify
+    V, N = 4, 4000
+    p_logits = jnp.asarray([0.0, 1.0, -1.0, 0.5], jnp.float32)
+    q_logits = jnp.asarray([2.0, -2.0, 0.0, 0.0], jnp.float32)
+    temps = jnp.ones((N,), jnp.float32)
+    top_ks = jnp.zeros((N,), jnp.int32)
+    seeds = jnp.zeros((N,), jnp.int32)
+    rids = jnp.arange(N, dtype=jnp.int32)
+    cnts = jnp.zeros((N,), jnp.int32)
+    q_rows = jnp.broadcast_to(q_logits, (N, V))
+    d_toks = propose_tokens(q_rows, temps, top_ks, seeds, rids, cnts)
+    out, n_acc = speculative_verify(
+        d_toks[:, None], q_rows[:, None],
+        jnp.broadcast_to(p_logits, (N, 2, V)),
+        temps, top_ks, seeds, rids, cnts)
+    first = np.asarray(out[:, 0])
+    want = np.asarray(jax.nn.softmax(p_logits))
+    got = np.bincount(first, minlength=V) / N
+    np.testing.assert_allclose(got, want, atol=0.03)
+    # and the proposals themselves follow q, not p
+    got_q = np.bincount(np.asarray(d_toks), minlength=V) / N
+    np.testing.assert_allclose(got_q, np.asarray(jax.nn.softmax(q_logits)),
+                               atol=0.03)
+
+
+def test_speculative_runner_rejects_bad_pairs():
+    from repro.config import ParallelConfig
+    from repro.serving import make_runner
+    pcfg = ParallelConfig(remat="none")
+    star = get_config("starcoder2_3b", smoke=True)
+    with pytest.raises(ValueError, match="paged-transformer"):
+        make_runner(get_config("mamba2_370m", smoke=True), pcfg,
+                    draft_cfg=star, num_speculative_tokens=2)
+    with pytest.raises(ValueError, match="paged-transformer"):
+        make_runner(star, pcfg,
+                    draft_cfg=get_config("mamba2_370m", smoke=True),
+                    num_speculative_tokens=2)
+    # full-size configs: smoke vocabs all coincide at 256
+    with pytest.raises(ValueError, match="vocab"):
+        make_runner(get_config("starcoder2_3b"), pcfg,
+                    draft_cfg=get_config("glm4_9b"),
+                    num_speculative_tokens=2)
 
 
 def test_sampling_same_seed_requests_decorrelated(glm_smoke):

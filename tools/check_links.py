@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Dead-link checker for the repo's markdown tree.
+
+Walks every ``*.md`` under the repo (docs/, READMEs, ROADMAP, ...),
+extracts inline ``[text](target)`` links, and fails when a *relative*
+target does not resolve to an existing file or directory. External
+(http/https/mailto) and pure-anchor links are skipped; a ``#fragment``
+suffix on a relative link is stripped before resolution (anchors are not
+validated — only file existence is).
+
+Run from anywhere:  python tools/check_links.py [repo_root]
+Exit status 1 on any dead link — CI runs this as the docs gate, and
+``tests/test_docs_links.py`` runs it under tier-1.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "__pycache__", ".claude", "node_modules",
+             ".venv", ".pytest_cache", ".hypothesis"}
+
+
+def markdown_files(root: Path):
+    for p in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+def dead_links(root: Path) -> list[tuple[Path, str]]:
+    """(markdown file, link target) pairs whose relative target is dead."""
+    bad = []
+    for md in markdown_files(root):
+        for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel or not (md.parent / rel).exists():
+                bad.append((md.relative_to(root), target))
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    root = (Path(argv[1]) if len(argv) > 1
+            else Path(__file__).resolve().parents[1])
+    n_files = len(list(markdown_files(root)))
+    bad = dead_links(root)
+    for md, target in bad:
+        print(f"{md}: dead relative link -> {target}")
+    status = f"FAIL: {len(bad)} dead link(s)" if bad else "OK"
+    print(f"[check_links] {status} across {n_files} markdown files")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
