@@ -203,6 +203,49 @@ def bench_serving_throughput(rows):
                          f"encodes={feng.stats['encodes']} "
                          + _latency_percentiles(feng, freqs)))
 
+    # tensor-parallel row: the headline workload on a forced 2-device host
+    # mesh (page pools sharded by kv head over "model"; docs/multi-host.md).
+    # Runs in a subprocess because the virtual device count is fixed at
+    # process start. On CPU this measures the TP *overhead* (collectives +
+    # per-shard dispatch on virtual devices), not a speedup — the row
+    # exists so the sharded step's hot path is timed and smoke-checked.
+    import os
+    import subprocess
+    import sys
+    tp_code = (
+        "import jax, jax.numpy as jnp, numpy as np, time\n"
+        "import repro.compat\n"
+        "from repro.config import get_config\n"
+        "from repro.serving import InferenceEngine, Request\n"
+        "cfg = get_config('glm4_9b', smoke=True)\n"
+        "mesh = jax.make_mesh((1, 2), ('data', 'model'),\n"
+        "    axis_types=(jax.sharding.AxisType.Auto,) * 2)\n"
+        "rng = np.random.default_rng(0)\n"
+        "prompts = [rng.integers(0, cfg.vocab_size, 32).astype(np.int32)\n"
+        "           for _ in range(12)]\n"
+        "max_news = [4 + 4 * (i % 4) for i in range(12)]\n"
+        "eng = InferenceEngine(cfg, mesh, max_batch=4, block_size=16,\n"
+        "                      max_len=128, enable_prefix_caching=False)\n"
+        "reqs = lambda: [Request(p, max_new=mn)\n"
+        "                for p, mn in zip(prompts, max_news)]\n"
+        "eng.run(reqs())\n"
+        "t0 = time.perf_counter()\n"
+        "eng.run(reqs())\n"
+        "print('TP2RESULT', time.perf_counter() - t0, sum(max_news))\n"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    proc = subprocess.run([sys.executable, "-c", tp_code],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("TP2RESULT"))
+    dt_tp, n_tp = float(line.split()[1]), int(line.split()[2])
+    rows.append(_csv("serving/paged_engine_tp2", dt_tp / n_tp * 1e6,
+                     f"tok_s={n_tp/dt_tp:.1f} mesh=model2"))
+
 
 # ---------------------------------------------------------------------------
 # Figure 6: null-step synchronous replication (scalar / dense / sparse)

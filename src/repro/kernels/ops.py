@@ -73,6 +73,27 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                                window=window, cap=cap, scale=scale)
 
 
+def paged_attention_partial(q, k_pages, v_pages, block_tables, ctx_lens,
+                            block_mask, *, window=None, cap=None,
+                            scale=None):
+    """Partial-softmax paged decode over a shard-local block table:
+    attends only table entries selected by ``block_mask`` and returns
+    ``(o, lse)`` for the cross-shard LSE stitch
+    (``models.attention.stitch_paged_partials``). See
+    kernels/paged_attention.py."""
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import paged_attention as pa
+        return pa.paged_attention(     # fp32 (o, lse) partials
+            q, k_pages, v_pages, block_tables, ctx_lens, window=window,
+            cap=cap, scale=scale, block_mask=block_mask, return_lse=True,
+            interpret=(mode == "interpret"))
+    from repro.kernels.ref import paged_attention_partial_ref
+    return paged_attention_partial_ref(
+        q, k_pages, v_pages, block_tables, ctx_lens, block_mask,
+        window=window, cap=cap, scale=scale)
+
+
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                             q_lens, *, window=None, cap=None, scale=None):
     """Chunked-prefill attention through a block table: C queries per

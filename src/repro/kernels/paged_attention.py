@@ -24,6 +24,19 @@ C chunk queries per sequence, each causally masked at its absolute position
 against the same paged context (C == 1 reproduces the decode kernel
 exactly). The serving engine uses it to stream long prompts in while other
 sequences keep decoding.
+
+Both kernels expose a *partial-softmax return path* for pool-sharded
+(multi-host) serving: with ``block_mask`` a shard attends only the table
+entries whose pages it holds (a shard-local block table — masked entries
+are skipped entirely, never read), and with ``return_lse=True`` it also
+returns each row's log-sum-exp so partials from different shards stitch
+exactly like ``models.attention.decode_attention`` stitches dense
+flash-decode: ``o = Σ o_i·exp(lse_i - m) / Σ exp(lse_i - m)``. The stitch
+combiner lives in ``models.attention.stitch_paged_partials``; the oracle
+proving the math is ``kernels.ref.paged_shard_attention_ref``. The
+kv-head-sharded engine path (docs/multi-host.md) needs no stitch — each
+model shard owns whole kv heads — so this path is the substrate for
+sharding the *blocks* axis past the kv-head count.
 """
 
 from __future__ import annotations
@@ -38,9 +51,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1.0e30
 
 
-def _decode_kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, scale, cap, window,
-                   block_size, num_kv_heads):
+def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, k_ref, v_ref, o_ref,
+                   *rest, scale, cap, window, block_size, num_kv_heads,
+                   with_lse):
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        m_scr, l_scr, acc_scr = rest
     bk = pl.program_id(0)
     j = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -54,7 +71,7 @@ def _decode_kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     first_k = j * block_size
-    live = first_k < ctx
+    live = (first_k < ctx) & (mask_ref[b, j] != 0)
     if window is not None:
         live &= first_k + block_size - 1 > ctx - 1 - window
 
@@ -88,44 +105,82 @@ def _decode_kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-37)
         o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+        if with_lse:
+            lse_ref[...] = m_scr[...] + jnp.log(l)
+
+
+def _head_major(o, B, K, G):
+    """(B*K, G, ...) -> g-major (B, G, K, ...) -> (B, H, ...)."""
+    tail = o.shape[2:]
+    o = o.reshape(B, K, G, *tail)
+    perm = (0, 2, 1) + tuple(range(3, o.ndim))
+    return o.transpose(*perm).reshape(B, G * K, *tail)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
-                    window=None, cap=None, scale=None, interpret=False):
+                    window=None, cap=None, scale=None, interpret=False,
+                    block_mask=None, return_lse=False):
     """q: (B, H, hd) one decode token per sequence.
     k_pages/v_pages: (num_blocks, block_size, K, hd).
     block_tables: (B, max_blocks_per_seq) int32 pool-row ids (padding rows
     are ignored past ctx). ctx_lens: (B,) int32 — tokens visible per
     sequence, 0 for an inactive slot (output row is zeros).
     Returns (B, H, hd) in q.dtype.
+
+    ``block_mask`` (B, max_blocks_per_seq) selects the table entries this
+    shard holds pages for (None = all): masked entries are skipped, never
+    read — the shard-local-table path for pool-sharded serving. With
+    ``return_lse`` the output switches to fp32 partials ``(o, lse)`` —
+    o the locally-normalized output, lse the per-(b, head) log-sum-exp of
+    the attended (masked, in-context) keys — ready for
+    ``models.attention.stitch_paged_partials`` (rounding o to q.dtype
+    before the stitch would make the result shard-count-dependent). Rows
+    that attended nothing return lse <= NEG_INF (zero stitch weight).
     """
     B, H, hd = q.shape
     _, block_size, K, _ = k_pages.shape
     G = H // K
     nb = block_tables.shape[1]
     scale = hd ** -0.5 if scale is None else scale
+    if block_mask is None:
+        block_mask = jnp.ones((B, nb), jnp.int32)
 
     # g-major regroup: (B, H, hd) -> (B, G, K, hd) -> (B*K, G, hd)
     qg = q.reshape(B, G, K, hd).transpose(0, 2, 1, 3).reshape(B * K, G, hd)
 
-    def page_index(bk, j, bt_ref, ctx_ref):
-        return (bt_ref[bk // K, j], 0, bk % K, 0)
+    def page_index(bk, j, bt_ref, ctx_ref, mask_ref):
+        # masked entries redirect the fetch to pool row 0 (never used —
+        # the kernel's `live` guard skips their compute): a shard neither
+        # reads nor DMAs pages it does not hold
+        b = bk // K
+        return (jnp.where(mask_ref[b, j] != 0, bt_ref[b, j], 0),
+                0, bk % K, 0)
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, cap=cap, window=window,
-        block_size=block_size, num_kv_heads=K)
+        block_size=block_size, num_kv_heads=K, with_lse=return_lse)
+
+    out_specs = pl.BlockSpec((None, G, hd), lambda bk, j, *_: (bk, 0, 0))
+    if return_lse:
+        # partials stay fp32: they are re-weighted by exp(lse - m) in the
+        # stitch, and rounding them to q.dtype first would make the
+        # stitched result depend on the shard count
+        out_specs = (out_specs,
+                     pl.BlockSpec((None, G, 1), lambda bk, j, *_: (bk, 0, 0)))
+        out_shape = (jax.ShapeDtypeStruct((B * K, G, hd), jnp.float32),
+                     jax.ShapeDtypeStruct((B * K, G, 1), jnp.float32))
+    else:
+        out_shape = jax.ShapeDtypeStruct((B * K, G, hd), q.dtype)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B * K, nb),
         in_specs=[
-            pl.BlockSpec((None, G, hd),
-                         lambda bk, j, bt_ref, ctx_ref: (bk, 0, 0)),
+            pl.BlockSpec((None, G, hd), lambda bk, j, *_: (bk, 0, 0)),
             pl.BlockSpec((None, block_size, None, hd), page_index),
             pl.BlockSpec((None, block_size, None, hd), page_index),
         ],
-        out_specs=pl.BlockSpec((None, G, hd),
-                               lambda bk, j, bt_ref, ctx_ref: (bk, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -136,18 +191,21 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     o = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
-      qg, k_pages, v_pages)
+      block_mask.astype(jnp.int32), qg, k_pages, v_pages)
 
-    # (B*K, G, hd) -> (B, K, G, hd) -> g-major (B, G, K, hd) -> (B, H, hd)
-    return o.reshape(B, K, G, hd).transpose(0, 2, 1, 3).reshape(B, H, hd)
+    if return_lse:
+        o, lse = o
+        return (_head_major(o, B, K, G),
+                _head_major(lse[..., 0], B, K, G))
+    return _head_major(o, B, K, G)
 
 
-def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale, cap, window,
-                  block_size, num_kv_heads, num_groups):
+def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, k_ref, v_ref,
+                  o_ref, *rest, scale, cap, window, block_size,
+                  num_kv_heads, num_groups, with_lse):
     """Multi-query sibling of ``_decode_kernel`` for chunked prefill.
 
     One program owns all C chunk queries of one (sequence, kv-head) pair;
@@ -157,6 +215,10 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, q_ref, k_ref, v_ref, o_ref,
     the streaming softmax (p zeroed where masked, not exp(0)) keeps their
     (l, acc) at zero so they finalize to zeros.
     """
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        m_scr, l_scr, acc_scr = rest
     bk = pl.program_id(0)
     j = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -173,7 +235,7 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, q_ref, k_ref, v_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     first_k = j * block_size
-    live = first_k < ctx
+    live = (first_k < ctx) & (mask_ref[b, j] != 0)
     if window is not None:
         # earliest in-window key over the chunk: qstart - window + 1
         live &= first_k + block_size - 1 > qstart - window
@@ -214,11 +276,14 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, q_ref, k_ref, v_ref, o_ref,
         l = jnp.maximum(l_scr[...], 1e-37)
         o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype).reshape(
             C, G, -1)
+        if with_lse:
+            lse_ref[...] = (m_scr[...] + jnp.log(l)).reshape(C, G, 1)
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                             q_lens, *, window=None, cap=None, scale=None,
-                            interpret=False):
+                            interpret=False, block_mask=None,
+                            return_lse=False):
     """Chunked-prefill attention against a paged KV cache.
 
     q: (B, C, H, hd) — C chunk queries per sequence; row i sits at absolute
@@ -226,26 +291,47 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     paged context (the chunk's own KV must already be scattered into the
     pages). q_lens: (B,) valid rows; padding rows produce zeros, as does a
     wholly inactive sequence (q_len == 0). Returns (B, C, H, hd) in q.dtype.
+
+    ``block_mask`` / ``return_lse`` are the shard-local-table and
+    partial-softmax options described on :func:`paged_attention`; the lse
+    output is (B, C, H) fp32.
     """
     B, C, H, hd = q.shape
     _, block_size, K, _ = k_pages.shape
     G = H // K
     nb = block_tables.shape[1]
     scale = hd ** -0.5 if scale is None else scale
+    if block_mask is None:
+        block_mask = jnp.ones((B, nb), jnp.int32)
 
     # g-major regroup: (B,C,H,hd) -> (B,C,G,K,hd) -> (B*K, C, G, hd)
     qg = q.reshape(B, C, G, K, hd).transpose(0, 3, 1, 2, 4) \
         .reshape(B * K, C, G, hd)
 
-    def page_index(bk, j, bt_ref, ctx_ref, qlen_ref):
-        return (bt_ref[bk // K, j], 0, bk % K, 0)
+    def page_index(bk, j, bt_ref, ctx_ref, qlen_ref, mask_ref):
+        b = bk // K                    # masked -> row 0; see paged_attention
+        return (jnp.where(mask_ref[b, j] != 0, bt_ref[b, j], 0),
+                0, bk % K, 0)
 
     kernel = functools.partial(
         _chunk_kernel, scale=scale, cap=cap, window=window,
-        block_size=block_size, num_kv_heads=K, num_groups=G)
+        block_size=block_size, num_kv_heads=K, num_groups=G,
+        with_lse=return_lse)
+
+    out_specs = pl.BlockSpec((None, C, G, hd),
+                             lambda bk, j, *_: (bk, 0, 0, 0))
+    if return_lse:
+        # fp32 partials for the stitch; see paged_attention
+        out_specs = (out_specs,
+                     pl.BlockSpec((None, C, G, 1),
+                                  lambda bk, j, *_: (bk, 0, 0, 0)))
+        out_shape = (jax.ShapeDtypeStruct((B * K, C, G, hd), jnp.float32),
+                     jax.ShapeDtypeStruct((B * K, C, G, 1), jnp.float32))
+    else:
+        out_shape = jax.ShapeDtypeStruct((B * K, C, G, hd), q.dtype)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(B * K, nb),
         in_specs=[
             pl.BlockSpec((None, C, G, hd),
@@ -253,8 +339,7 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
             pl.BlockSpec((None, block_size, None, hd), page_index),
             pl.BlockSpec((None, block_size, None, hd), page_index),
         ],
-        out_specs=pl.BlockSpec((None, C, G, hd),
-                               lambda bk, j, *_: (bk, 0, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((C * G, 1), jnp.float32),
             pltpu.VMEM((C * G, 1), jnp.float32),
@@ -265,11 +350,19 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     o = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B * K, C, G, hd), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
-      q_lens.astype(jnp.int32), qg, k_pages, v_pages)
+      q_lens.astype(jnp.int32), block_mask.astype(jnp.int32),
+      qg, k_pages, v_pages)
 
-    # (B*K, C, G, hd) -> (B, K, C, G, hd) -> (B, C, G, K, hd) -> (B, C, H, hd)
-    return o.reshape(B, K, C, G, hd).transpose(0, 2, 3, 1, 4) \
-        .reshape(B, C, H, hd)
+    def head_major(x):
+        # (B*K, C, G, t) -> (B, K, C, G, t) -> (B, C, G, K, t) -> (B, C, H, t)
+        t = x.shape[-1]
+        return x.reshape(B, K, C, G, t).transpose(0, 2, 3, 1, 4) \
+            .reshape(B, C, H, t)
+
+    if return_lse:
+        o, lse = o
+        return head_major(o), head_major(lse)[..., 0]
+    return head_major(o)

@@ -73,6 +73,88 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_attention_partial_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                                block_mask, *, window=None, cap=None,
+                                scale=None):
+    """Partial-softmax paged decode oracle for pool-sharded serving.
+
+    Identical math to :func:`paged_attention_ref` except keys are *also*
+    masked where their table entry's ``block_mask`` is False (a shard
+    attends only the pages it holds), and the per-(b, head) fp32
+    log-sum-exp comes back alongside the locally-normalized output —
+    ``(o, lse)`` with o (B, H, hd) fp32, lse (B, H). A row that attended
+    nothing has o = 0 and lse <= -1e30 (zero weight in the stitch). With a
+    full mask, o equals ``paged_attention_ref`` bit for bit (same op
+    order) before the final q.dtype cast.
+    """
+    B, H, hd = q.shape
+    _, bs, K, _ = k_pages.shape
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, -1, K, hd)
+    v = v_pages[block_tables].reshape(B, -1, K, hd)
+    S = k.shape[1]
+    qg = q.reshape(B, G, K, hd)
+    logits = jnp.einsum("bgkh,bskh->bgks", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    k_pos = jnp.arange(S)
+    ok = k_pos[None, :] < ctx_lens[:, None]                   # (B, S)
+    if window is not None:
+        ok &= k_pos[None, :] > ctx_lens[:, None] - 1 - window
+    ok &= jnp.repeat(block_mask.astype(bool), bs, axis=1)     # shard-local
+    logits = jnp.where(ok[:, None, None, :], logits, -1e30)
+    mx = logits.max(axis=-1)
+    p = jnp.exp(logits - mx[..., None])
+    p = jnp.where(ok[:, None, None, :], p, 0.0)
+    sm = jnp.maximum(p.sum(axis=-1), 1e-37)
+    lse = mx + jnp.log(sm)
+    p = (p / sm[..., None]).astype(v.dtype)
+    o = jnp.einsum("bgks,bskh->bgkh", p, v,
+                   preferred_element_type=jnp.float32)
+    return (o.reshape(B, H, hd).astype(jnp.float32),
+            lse.reshape(B, H))
+
+
+def paged_shard_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
+                              n_shards, *, window=None, cap=None,
+                              scale=None):
+    """LSE-stitch oracle for pool-sharded paged decode attention.
+
+    Simulates ``n_shards`` shards that each hold a disjoint subset of a
+    sequence's pages (table entry j belongs to shard ``j % n_shards`` —
+    the round-robin stand-in for by-pool-residence ownership), computes
+    each shard's partial softmax attention, and stitches the partials with
+    the same max/LSE combine ``models.attention.decode_attention`` uses
+    for dense flash-decode:
+
+        m   = max_i lse_i
+        o   = sum_i o_i * exp(lse_i - m) / sum_i exp(lse_i - m)
+
+    Must agree with :func:`paged_attention_ref` for every n_shards — the
+    property the stitch tests pin. Raises ValueError for n_shards < 1.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards} must be >= 1")
+    B, nb = block_tables.shape
+    entry = jnp.arange(nb)[None, :]
+    os, lses = [], []
+    for s in range(n_shards):
+        mask = jnp.broadcast_to(entry % n_shards == s, (B, nb))
+        o, lse = paged_attention_partial_ref(
+            q, k_pages, v_pages, block_tables, ctx_lens, mask,
+            window=window, cap=cap, scale=scale)
+        os.append(o)
+        lses.append(lse)
+    os, lses = jnp.stack(os), jnp.stack(lses)         # (S, B, H, [hd])
+    m = lses.max(axis=0)
+    w = jnp.exp(lses - m[None])
+    den = jnp.maximum(w.sum(axis=0), 1e-37)
+    out = (os * w[..., None]).sum(axis=0) / den[..., None]
+    return out.astype(q.dtype)
+
+
 def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
                                 q_lens, *, window=None, cap=None, scale=None):
     """Multi-query (chunked-prefill) paged attention oracle.

@@ -14,6 +14,13 @@ decoding (``--num-speculative-tokens``; docs/speculative.md).
   PYTHONPATH=src python -m repro.launch.serve --arch whisper_large_v3 --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2_3b --smoke \\
       --num-speculative-tokens 2
+
+Tensor-parallel serving (page pools sharded by kv head over the mesh
+"model" axis; docs/multi-host.md) — needs that many devices, e.g. a forced
+host platform for CPU smoke runs:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \\
+      python -m repro.launch.serve --arch glm4_9b --smoke --mesh model=2
 """
 
 from __future__ import annotations
@@ -34,6 +41,20 @@ def poisson_arrival_steps(n: int, rate: float, rng) -> list[int]:
         t += rng.exponential(1.0 / max(rate, 1e-9))
         out.append(int(t))
     return out
+
+
+def parse_mesh(spec: str | None) -> tuple[int, int]:
+    """'model=2' / 'data=2,model=4' -> (data, model); None -> (1, 1)."""
+    sizes = {"data": 1, "model": 1}
+    if spec:
+        for part in spec.split(","):
+            name, _, val = part.partition("=")
+            if name not in sizes or not val.isdigit() or int(val) < 1:
+                raise ValueError(
+                    f"bad --mesh entry {part!r}: expected data=N / model=N "
+                    "with N >= 1")
+            sizes[name] = int(val)
+    return sizes["data"], sizes["model"]
 
 
 def run_engine(cfg, mesh, args):
@@ -66,6 +87,8 @@ def run_engine(cfg, mesh, args):
     arrivals = poisson_arrival_steps(len(reqs), args.rate, rng)
     outs = eng.run(reqs, arrival_steps=arrivals)
     s = eng.stats
+    print(f"[serve] mesh=data={mesh.shape['data']},model="
+          f"{mesh.shape['model']} tp={eng.tp}")
     print(f"[serve] runner={type(eng.runner).__name__} {len(reqs)} requests "
           f"(poisson rate={args.rate}/step, arrivals={arrivals}), "
           f"{s['tokens']} tokens in {s['wall_s']:.2f}s "
@@ -111,6 +134,11 @@ def main():
                     help="draft tokens proposed per slot per step; the "
                     "target verifies k+1 positions in one widened step "
                     "(0 disables speculation)")
+    ap.add_argument("--mesh", default=None,
+                    help='mesh axis sizes, e.g. "model=2" or '
+                    '"data=2,model=2" (default: 1x1). The "model" axis '
+                    "tensor-parallel-shards the page pools by kv head; "
+                    "needs that many local devices")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="poisson arrivals per decode step")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -120,7 +148,8 @@ def main():
     args = ap.parse_args()
     cfg = get_config(args.arch, smoke=args.smoke)
     from repro.launch.mesh import make_host_mesh
-    mesh = make_host_mesh(1, 1)
+    data, model = parse_mesh(args.mesh)
+    mesh = make_host_mesh(data, model)
     run_engine(cfg, mesh, args)
 
 

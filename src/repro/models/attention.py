@@ -296,6 +296,18 @@ def update_cache(cache, new, pos):
             cache, new, pos)
 
 
+def _constrain_pool(pages):
+    """Keep a page pool sharded by kv head across the scatter update —
+    without the constraint GSPMD is free to replicate the (large) pools
+    between the KV write and the shard_map'd attention read."""
+    tp, mesh = _paged_tp(pages.shape[2])
+    if tp == 1:
+        return pages
+    return jax.lax.with_sharding_constraint(
+        pages, jax.sharding.NamedSharding(
+            mesh, P(None, None, "model", None)))
+
+
 def update_paged_cache(pages, new, block_tables, pos):
     """Scatter one new KV row per sequence into its block-table page.
 
@@ -307,7 +319,8 @@ def update_paged_cache(pages, new, block_tables, pos):
     bs = pages.shape[1]
     block_ids = jnp.take_along_axis(
         block_tables, (pos // bs)[:, None], axis=1)[:, 0]     # (B,)
-    return pages.at[block_ids, pos % bs].set(new[:, 0].astype(pages.dtype))
+    return _constrain_pool(
+        pages.at[block_ids, pos % bs].set(new[:, 0].astype(pages.dtype)))
 
 
 def update_paged_cache_chunk(pages, new, block_tables, q_start, q_lens):
@@ -326,18 +339,82 @@ def update_paged_cache_chunk(pages, new, block_tables, q_start, q_lens):
     blk = jnp.take_along_axis(block_tables, idx, axis=1)            # (B, C)
     valid = jnp.arange(C)[None] < q_lens[:, None]
     blk = jnp.where(valid, blk, 0)                  # trash the padding rows
-    return pages.at[blk.reshape(-1), (pos % bs).reshape(-1)].set(
-        new.reshape(B * C, *new.shape[2:]).astype(pages.dtype))
+    return _constrain_pool(
+        pages.at[blk.reshape(-1), (pos % bs).reshape(-1)].set(
+            new.reshape(B * C, *new.shape[2:]).astype(pages.dtype)))
+
+
+def replicate_over_model(x):
+    """Gather ``x`` to replicated when the mesh has a nontrivial "model"
+    axis (no-op otherwise). The serving TP invariant hangs on this: state
+    shards by kv head (paged KV pools, per-slot cross K/V), per-head
+    compute is exact on its shard, and the head-sharded result is
+    gathered *before* any contraction that crosses heads (out-proj). The
+    gather is an exact collective, so every weight contraction then runs
+    whole on every shard in single-device op order — engine outputs stay
+    bitwise identical on any mesh shape (docs/multi-host.md)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if "model" not in mesh.axis_names or mesh.shape["model"] <= 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*([None] * x.ndim))))
+
+
+def _paged_tp(num_kv_heads: int):
+    """(tp, mesh) for the serving kv-head-sharded paged-attention path.
+
+    tp > 1 only when the ambient mesh has a "model" axis that divides the
+    kv-head count — the pools shard by whole kv heads, so an indivisible
+    count falls back to the replicated single-device path (the engine
+    refuses such meshes up front; see spmd.sharding.paged_pool_pspec)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if "model" not in mesh.axis_names:
+        return 1, None
+    tp = mesh.shape["model"]
+    if tp <= 1 or num_kv_heads % tp != 0:
+        return 1, None
+    return tp, mesh
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                            window=None, cap=None, scale=None):
-    """Decode attention via block tables. q: (B,1,H,hd) -> (B,1,H,hd)."""
+    """Decode attention via block tables. q: (B,1,H,hd) -> (B,1,H,hd).
+
+    On a mesh with a "model" axis that divides the kv-head count this runs
+    under ``shard_map``: the page pools stay sharded by kv head, each
+    shard runs the paged kernel over its own head slice (all G query heads
+    of each local kv head — attention per head is complete on its shard,
+    no cross-shard stitch), and only the host-replicated block table and
+    context lengths are shared. Computation moves to where the KV lives —
+    the paper's §4.2 argument, applied to the serving pools.
+    """
     from repro.kernels import ops as kops
-    scale = q.shape[-1] ** -0.5 if scale is None else scale
-    o = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
-                             ctx_lens, window=window, cap=cap, scale=scale)
-    return o[:, None].astype(q.dtype)
+    B, _, H, hd = q.shape
+    K = k_pages.shape[2]
+    scale = hd ** -0.5 if scale is None else scale
+    tp, mesh = _paged_tp(K)
+    if tp == 1:
+        o = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                                 ctx_lens, window=window, cap=cap,
+                                 scale=scale)
+        return o[:, None].astype(q.dtype)
+    G = H // K
+    qg = q[:, 0].reshape(B, G, K, hd)         # g-major; see dense_attention
+
+    def body(qg, kp, vp, bt, ctx):
+        K_l = kp.shape[2]
+        o = kops.paged_attention(qg.reshape(B, G * K_l, hd), kp, vp, bt,
+                                 ctx, window=window, cap=cap, scale=scale)
+        return o.reshape(B, G, K_l, hd)
+
+    o = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, "model", None),
+                  P(None, None, "model", None),
+                  P(None, None, "model", None), P(None, None), P(None)),
+        out_specs=P(None, None, "model", None),
+    )(qg, k_pages, v_pages, block_tables, ctx_lens)
+    return replicate_over_model(o).reshape(B, 1, H, hd).astype(q.dtype)
 
 
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
@@ -345,12 +422,78 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     """Chunked-prefill attention via block tables: the C queries of one
     prompt chunk attend causally to the paged context (prior chunks' KV
     read through the table; this chunk's KV already scattered in).
-    q: (B,C,H,hd) -> (B,C,H,hd)."""
+    q: (B,C,H,hd) -> (B,C,H,hd). Sharded over kv heads exactly like
+    :func:`paged_decode_attention` when the mesh allows."""
     from repro.kernels import ops as kops
-    scale = q.shape[-1] ** -0.5 if scale is None else scale
-    o = kops.paged_prefill_attention(q, k_pages, v_pages, block_tables,
-                                     ctx_lens, q_lens, window=window,
-                                     cap=cap, scale=scale)
+    B, C, H, hd = q.shape
+    K = k_pages.shape[2]
+    scale = hd ** -0.5 if scale is None else scale
+    tp, mesh = _paged_tp(K)
+    if tp == 1:
+        o = kops.paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                         ctx_lens, q_lens, window=window,
+                                         cap=cap, scale=scale)
+        return o.astype(q.dtype)
+    G = H // K
+    qg = q.reshape(B, C, G, K, hd)            # g-major; see dense_attention
+
+    def body(qg, kp, vp, bt, ctx, qlen):
+        K_l = kp.shape[2]                     # (nb, bs, K_l, hd)
+        o = kops.paged_prefill_attention(
+            qg.reshape(B, C, G * K_l, hd), kp, vp, bt, ctx, qlen,
+            window=window, cap=cap, scale=scale)
+        return o.reshape(B, C, G, K_l, hd)
+
+    o = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, None, "model", None),
+                  P(None, None, "model", None),
+                  P(None, None, "model", None), P(None, None), P(None),
+                  P(None)),
+        out_specs=P(None, None, None, "model", None),
+    )(qg, k_pages, v_pages, block_tables, ctx_lens, q_lens)
+    return replicate_over_model(o).reshape(B, C, H, hd).astype(q.dtype)
+
+
+def stitch_paged_partials(os, lses):
+    """Combine per-shard partial paged attentions into the global result.
+
+    os: (S, ..., hd) locally-normalized fp32 outputs; lses: (...,) matching
+    fp32 log-sum-exps (one entry per shard along axis 0). The combine is
+    the flash-decode stitch ``decode_attention`` uses across its "model"
+    shards: renormalize each partial by its share of the global softmax
+    mass. Rows no shard attended (all lse <= -1e30) come out zero.
+    """
+    m = lses.max(axis=0)
+    w = jnp.exp(lses - m[None])
+    den = jnp.maximum(w.sum(axis=0), 1e-37)
+    return (os * w[..., None]).sum(axis=0) / den[..., None]
+
+
+def paged_shard_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                          n_shards, *, window=None, cap=None, scale=None):
+    """Pool-sharded paged decode attention: blocks-axis sharding + stitch.
+
+    The substrate for scaling the page pools past the kv-head count
+    (multi-host serving, docs/multi-host.md): shard s holds the pages of
+    table entries ``j % n_shards == s`` (round-robin stand-in for
+    by-residence ownership), runs the partial-softmax kernel over its
+    shard-local table, and the partials are LSE-stitched. Equivalent to
+    :func:`paged_decode_attention`'s math for any n_shards — pinned
+    against ``kernels.ref.paged_shard_attention_ref`` and the dense
+    reference by the stitch tests. q: (B, H, hd) -> (B, H, hd).
+    """
+    from repro.kernels import ops as kops
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards} must be >= 1")
+    B, nb = block_tables.shape
+    entry = jnp.arange(nb)[None, :]
+    parts = [kops.paged_attention_partial(
+        q, k_pages, v_pages, block_tables, ctx_lens,
+        jnp.broadcast_to(entry % n_shards == s, (B, nb)),
+        window=window, cap=cap, scale=scale) for s in range(n_shards)]
+    o = stitch_paged_partials(jnp.stack([p[0] for p in parts]),
+                              jnp.stack([p[1] for p in parts]))
     return o.astype(q.dtype)
 
 

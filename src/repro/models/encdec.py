@@ -18,11 +18,12 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, ParallelConfig
 from repro.models import modules as m
 from repro.models.attention import (attention_scale, decode_attention,
-                                    init_attention, out_proj,
-                                    paged_chunk_attention,
+                                    decode_attention_local, init_attention,
+                                    out_proj, paged_chunk_attention,
                                     paged_decode_attention, project_kv,
-                                    project_q, sharded_attention,
-                                    update_cache, update_paged_cache,
+                                    project_q, replicate_over_model,
+                                    sharded_attention, update_cache,
+                                    update_paged_cache,
                                     update_paged_cache_chunk)
 from repro.models.embedding import (decode_logits, decode_logits_argmax,
                                     embed, head_table, init_embedding,
@@ -204,11 +205,14 @@ def prefill_chunk_paged(params, cache, batch, cfg: ModelConfig,
         h = apply_norm(bp["xnorm"], x, cfg)
         qx = project_q(bp["xattn"], h, cfg, None)
         # cross attention has no query-position dependence, so the exact
-        # prefill op sequence applies chunk by chunk (row-wise identical)
+        # prefill op sequence applies chunk by chunk (row-wise identical).
+        # The cross K/V arrives sharded by kv head on a TP mesh; attention
+        # is per-head-exact, and the gather before out_proj keeps the
+        # residual stream bitwise mesh-invariant (docs/multi-host.md).
         yx = sharded_attention(qx, c["xk"], c["xv"], cfg, causal=False,
                                scale=scale,
                                chunk_kv=min(1024, c["xk"].shape[1]))
-        x = x + out_proj(bp["xattn"], yx, x.dtype)
+        x = x + out_proj(bp["xattn"], replicate_over_model(yx), x.dtype)
         x = x + apply_mlp(bp["mlp"], apply_norm(bp["norm2"], x, cfg), cfg)
         return x, {"k": kc, "v": vc}
 
@@ -249,8 +253,13 @@ def decode_step_paged(params, cache, batch, cfg: ModelConfig,
         qx = project_q(bp["xattn"], h, cfg, None)
         Te = c["xk"].shape[1]
         full = jnp.full((B,), Te - 1, jnp.int32)
-        yx = decode_attention(qx, c["xk"], c["xv"], full, scale=scale)
-        x = x + out_proj(bp["xattn"], yx, x.dtype)
+        # per-head local attention over the (kv-head-sharded) per-slot
+        # cross K/V — not the seq-sharded flash-decode stitch, whose
+        # cross-shard psum would reorder float adds and cost the engine
+        # its bitwise mesh-invariance; the cross cache is per-slot small,
+        # so there is no long sequence axis to shard anyway
+        yx = decode_attention_local(qx, c["xk"], c["xv"], full, scale=scale)
+        x = x + out_proj(bp["xattn"], replicate_over_model(yx), x.dtype)
         x = x + apply_mlp(bp["mlp"], apply_norm(bp["norm2"], x, cfg), cfg)
         return x, {"k": kc, "v": vc}
 

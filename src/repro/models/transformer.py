@@ -12,7 +12,11 @@ HLO small at 64 layers and is what the dry-run compiles.
 Entry points per model: ``loss_fn`` (train), ``prefill`` (build cache, emit
 first token), ``decode_step`` (one token against the cache), and the paged
 serving pair ``prefill_chunk_paged`` / ``decode_step_paged`` (prompt chunks
-and single tokens against block-paged page pools).
+and single tokens against block-paged page pools). The serving pair is
+mesh-aware through the attention ops: on a mesh with a "model" axis the
+page pools arrive sharded by kv head and ``paged_decode_attention`` /
+``paged_chunk_attention`` run under shard_map over their local head
+slices (docs/multi-host.md); nothing here mentions the mesh.
 """
 
 from __future__ import annotations

@@ -57,6 +57,7 @@ from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes)
 from repro.serving.runners import make_runner
 from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
                                      StepPlan)
+from repro.spmd import sharding as shd
 
 __all__ = ["InferenceEngine", "Request", "SamplingParams"]
 
@@ -74,9 +75,18 @@ class InferenceEngine:
                  debug_invariants: bool = False,
                  seed: int = 0, params=None,
                  draft_cfg: ModelConfig | None = None,
-                 num_speculative_tokens: int = 0, draft_params=None):
+                 num_speculative_tokens: int = 0, draft_params=None,
+                 shard_params: bool = False):
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
+        # tensor parallelism over the mesh "model" axis: page pools and
+        # the encoder cache shard by kv head; Mamba slot state and (by
+        # default) weights stay replicated so engine outputs are bitwise
+        # mesh-invariant. All host-side metadata (tables, refcounts,
+        # hashes, slots) stays global, so scheduling is identical on
+        # every mesh shape (docs/multi-host.md).
+        self.tp = shd.serving_tp(mesh)
+        self.shard_params = shard_params
         if num_speculative_tokens and draft_cfg is None:
             draft_cfg = cfg          # self-speculation (a fresh-init draft
             #                          unless draft_params shares weights)
@@ -84,6 +94,12 @@ class InferenceEngine:
         self.runner = make_runner(                  # raises if unsupported
             cfg, self.pcfg, draft_cfg=draft_cfg,
             num_speculative_tokens=num_speculative_tokens)
+        if self.tp > 1 and self.runner.needs_blocks:
+            # fail at construction, not in the jitted step: pools shard by
+            # whole kv heads (target and draft pools alike)
+            shd.paged_pool_pspec(cfg.num_kv_heads, self.tp)
+            if draft_cfg is not None:
+                shd.paged_pool_pspec(draft_cfg.num_kv_heads, self.tp)
         spec = self.runner.spec_tokens
         self.block_size = block_size
         self.max_len = max_len
@@ -136,10 +152,18 @@ class InferenceEngine:
                                                jax.random.key(seed + 1))
                     draft_params = jax.tree.map(
                         lambda x: x.astype(jnp.bfloat16), dp_f32)
-                params = {"tgt": params, "dft": draft_params}
+                params = {"tgt": self._place_params(params, cfg),
+                          "dft": self._place_params(draft_params,
+                                                    draft_cfg)}
+            else:
+                params = self._place_params(params, cfg)
             self.params = params
             self.cache = self.runner.init_cache(num_blocks, block_size,
                                                 max_batch)
+            if self.tp > 1:
+                self.cache = jax.device_put(
+                    self.cache, shd.serving_cache_shardings(self.cache,
+                                                            mesh))
 
         self._step_chunk = jax.jit(
             functools.partial(self.runner.step, has_chunk=True),
@@ -170,6 +194,33 @@ class InferenceEngine:
                       "latency": {},
                       "kv_cache_mib": round(cache_mib / 2 ** 20, 3)}
         self.step_count = 0           # virtual clock: one step() = one tick
+
+    def _place_params(self, params, cfg: ModelConfig):
+        """Place one model's weights on the mesh.
+
+        Default (``shard_params=False``): explicitly *replicated*. Every
+        contraction over weights then happens whole on every shard, in the
+        same order as on one device, so engine outputs are bitwise
+        mesh-invariant — the property the TP equivalence suite enforces.
+        Only the page pools / encoder caches (the memory that actually
+        grows with traffic) and the attention compute over them shard.
+
+        ``shard_params=True`` additionally shards the weights with the
+        standard logical-axis rules (``spmd.sharding.make_rules``): less
+        HBM and TP matmul flops, but GSPMD's partial-sum all-reduces
+        reorder float adds, so outputs are only argmax-close, not bitwise
+        equal, across mesh shapes — don't combine it with tests that
+        demand byte identity."""
+        if self.tp <= 1:
+            return params
+        if not self.shard_params:
+            return jax.device_put(
+                params, jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec()))
+        _, specs = api.abstract_params(cfg)
+        rules = shd.make_rules(cfg, self.pcfg)
+        return jax.device_put(
+            params, shd.tree_shardings(params, specs, rules, self.mesh))
 
     # -- jitted bodies -----------------------------------------------------
 

@@ -30,6 +30,12 @@ block tables plus a content-hash index for prefix caching:
 Block 0 is reserved as the *trash block* — idle serving slots carry
 all-zero table rows, so the decode step's unconditional KV write for an
 inactive slot lands there and corrupts nothing.
+
+On a tensor-parallel mesh the pools shard over the "model" axis by whole
+kv heads (``spmd.sharding.paged_pool_pspec``); block ids index pool rows
+on *every* shard at once, so nothing in this module — tables, refcounts,
+content hashes, free lists, truncate — ever sees the mesh. The
+mesh-invariance walks in tests/test_serving_tp.py pin that property.
 """
 
 from __future__ import annotations
@@ -112,11 +118,22 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
     return cache
 
 
-def block_bytes(cfg: ModelConfig, block_size: int, dtype_bytes: int = 2):
-    """HBM bytes one block id costs across every layer's k+v pools."""
+def block_bytes(cfg: ModelConfig, block_size: int, dtype_bytes: int = 2,
+                tp: int = 1):
+    """HBM bytes one block id costs across every layer's k+v pools.
+
+    ``tp`` > 1 gives the *per-shard* cost on a kv-head-sharded mesh
+    (docs/multi-host.md): each model shard holds num_kv_heads/tp heads of
+    every page, so a block's footprint divides exactly — the accounting
+    the mesh-invariance walks pin. Requires tp to divide num_kv_heads
+    (the engine validates via ``spmd.sharding.paged_pool_pspec``)."""
     kinds, NP = period_structure(cfg)
     n_stacks = len(attn_layer_stacks(cfg))
-    return (2 * NP * n_stacks * block_size * cfg.num_kv_heads
+    if cfg.num_kv_heads % tp != 0:
+        raise ValueError(
+            f"num_kv_heads={cfg.num_kv_heads} is not divisible by tp={tp}"
+            " (see spmd.sharding.paged_pool_pspec)")
+    return (2 * NP * n_stacks * block_size * (cfg.num_kv_heads // tp)
             * cfg.head_dim * dtype_bytes)
 
 

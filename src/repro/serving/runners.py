@@ -36,7 +36,11 @@ Invariants every runner upholds (the engine equivalence tests pin them):
   chunk, or a decode step (the shared rounding convention — see
   docs/kernels.md), which is what makes chunked prefill, preemption-
   recompute, prefix-cache adoption and greedy speculative decode all
-  byte-identical to the plain path.
+  byte-identical to the plain path;
+* runners are mesh-oblivious: tensor parallelism enters only through the
+  engine's cache/param placement and the shard_map'd paged-attention
+  core (docs/multi-host.md), so a runner's step is byte-identical on
+  every mesh shape — the TP equivalence suite pins this per family.
 """
 
 from __future__ import annotations

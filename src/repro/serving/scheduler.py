@@ -48,7 +48,12 @@ Invariants this module maintains (asserted by ``validate``, the engine's
 * running decodes are never starved: admission and chunk growth spend
   only the *leftover* budget, and admission never preempts;
 * slot-kind caches hold a rid<->slot bijection, bound at admission and
-  released exactly once on preempt/retire.
+  released exactly once on preempt/retire;
+* everything here is mesh-invariant: block ids, tables, hashes and slots
+  are global regardless of how the device pools shard over the mesh
+  "model" axis (docs/multi-host.md), so the same request stream produces
+  the same plans on any mesh shape — pinned by the TP walks and the
+  subprocess stats-equality tests in tests/test_serving_tp.py.
 
 Pure host-side and jax-free so the policy is unit-testable in isolation.
 """

@@ -115,3 +115,69 @@ def kv_cache_spec(global_batch: int, seq: int, mesh) -> P:
     seq_ax = "model" if ("model" in mesh.axis_names
                          and seq % mesh.shape["model"] == 0) else None
     return P(b[0] if len(b) else None, seq_ax, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Serving cache sharding (tensor-parallel paged engine; docs/multi-host.md)
+# ---------------------------------------------------------------------------
+
+
+def serving_tp(mesh) -> int:
+    """Tensor-parallel degree of the serving engine: the "model" axis."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def paged_pool_pspec(num_kv_heads: int, tp: int) -> P:
+    """Spec for a page-pool stack (NP, num_blocks, block_size, K, hd).
+
+    Pools shard over "model" by *whole kv heads* — the one pool dim whose
+    slices are self-contained (every query group of a kv head attends only
+    that head's K/V), so block tables, refcounts, hashes and every other
+    piece of host-side metadata stay global and mesh-invariant. An
+    indivisible head count cannot shard this way; raising here (rather
+    than silently replicating a cache that exists precisely to be big)
+    surfaces the misconfiguration at engine construction.
+    """
+    if tp > 1 and num_kv_heads % tp != 0:
+        raise ValueError(
+            f"num_kv_heads={num_kv_heads} is not divisible by the mesh "
+            f"model axis ({tp}): page pools shard by whole kv heads. "
+            "Choose a model-axis size that divides num_kv_heads, or shard "
+            "the blocks axis via the LSE-stitch path (docs/multi-host.md).")
+    return P(None, None, None, "model" if tp > 1 else None, None)
+
+
+def serving_cache_pspec(path, leaf, tp: int) -> P:
+    """Spec for one serving-cache leaf, keyed on the cache pytree path.
+
+    * paged pools / encoder K-V (dict leaves "k"/"v"/"xk"/"xv", 5D with kv
+      heads on axis 3) shard by kv head — per-head attention over them is
+      computed entirely on the owning shard and gathered before any
+      cross-head contraction, so outputs stay bitwise mesh-invariant;
+    * Mamba slot-state tuples (conv tail, ssm state) stay **replicated**:
+      they are constant-size per slot (nothing grows with context), and
+      storing the recurrent state sharded lets GSPMD propagate that
+      sharding back into the SSD scan's inner contractions, reordering
+      float adds — sharding it bitwise-safely needs a shard_map'd SSD
+      (ROADMAP);
+    * anything else is replicated.
+    """
+    if tp <= 1:
+        return P()
+    keys = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+    if keys and keys[-1] in ("k", "v", "xk", "xv") and leaf.ndim == 5:
+        ok = leaf.shape[3] % tp == 0
+        return P(None, None, None, "model" if ok else None, None)
+    return P()
+
+
+def serving_cache_shardings(cache, mesh):
+    """NamedSharding tree for a runner's device cache (see
+    ``serving_cache_pspec``); the engine device_puts the zero cache with
+    these at construction and jit/donation keep them in place."""
+    tp = serving_tp(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, serving_cache_pspec(p, x, tp)),
+        cache)
