@@ -123,6 +123,37 @@ def bench_serving_throughput(rows):
                      f"slot_steps={eng_steps * max_batch} "
                      + _latency_percentiles(eng, eng2_reqs)))
 
+    # the same workload through the async streaming front-end (driver +
+    # admission control + per-request token streams; docs/
+    # serving-frontend.md) on the warm headline engine: measures the
+    # front-end's overhead over the bare batch driver — the admission
+    # path live HTTP traffic takes, so this row and the headline stay
+    # comparable by construction (no SLO target: nothing sheds)
+    import asyncio
+
+    from repro.serving.frontend import AdmissionController, AsyncEngineDriver
+
+    fe_reqs = [Request(p, max_new=mn) for p, mn in zip(prompts, max_news)]
+    fe_adm = AdmissionController()
+
+    async def _stream_workload():
+        async with AsyncEngineDriver(eng, admission=fe_adm) as drv:
+            streams = [await drv.submit(r) for r in fe_reqs]
+
+            async def pull(s):
+                return [ev.token async for ev in s]
+
+            await asyncio.gather(*(pull(s) for s in streams))
+
+    t0 = time.perf_counter()
+    asyncio.run(_stream_workload())
+    dt_fe = time.perf_counter() - t0
+    rows.append(_csv("serving/frontend_stream", dt_fe / n_tok * 1e6,
+                     f"tok_s={n_tok/dt_fe:.1f} "
+                     f"submitted={fe_adm.submitted} shed={fe_adm.shed} "
+                     f"queue_peak={fe_adm.queue_peak} "
+                     + _latency_percentiles(eng, fe_reqs)))
+
     # the prefix-cache benefit, measured explicitly: same prompts through
     # a caching engine whose cache the warmup run populated
     engc = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,

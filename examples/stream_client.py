@@ -1,0 +1,139 @@
+"""Stdlib SSE client for the serving front-end — also the CI smoke probe.
+
+Waits for the server's ``/health`` to come up (the first request triggers
+jit compilation, so allow minutes on CPU), streams one ``POST /generate``
+request token by token, then scrapes ``/metrics`` and ``/health`` and
+asserts the counters moved. Exits non-zero on any failed expectation, so
+CI can run it directly against a backgrounded
+``python -m repro.launch.serve --http``:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke \\
+      --http 127.0.0.1:8311 &
+  PYTHONPATH=src python examples/stream_client.py --port 8311
+
+Pure stdlib (http.client + json): no requests/aiohttp dependency — the
+wire format is plain HTTP/1.1 + Server-Sent Events.
+"""
+
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import sys
+import time
+
+
+def wait_for_health(host: str, port: int, timeout: float) -> dict:
+    deadline = time.monotonic() + timeout
+    last_err = None
+    while time.monotonic() < deadline:
+        try:
+            conn = http.client.HTTPConnection(host, port, timeout=10)
+            conn.request("GET", "/health")
+            resp = conn.getresponse()
+            body = json.loads(resp.read().decode())
+            conn.close()
+            if resp.status == 200 and body.get("status") == "ok":
+                return body
+            last_err = f"status={resp.status} body={body}"
+        except OSError as e:
+            last_err = str(e)
+        time.sleep(0.5)
+    raise SystemExit(f"[stream_client] server never became healthy "
+                     f"within {timeout}s: {last_err}")
+
+
+def stream_generate(host: str, port: int, prompt: list[int], max_new: int,
+                    timeout: float) -> list[int]:
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    body = json.dumps({"prompt": prompt, "max_new": max_new})
+    conn.request("POST", "/generate", body=body,
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    if resp.status != 200:
+        raise SystemExit(f"[stream_client] POST /generate -> {resp.status}: "
+                         f"{resp.read().decode()!r}")
+    tokens: list[int] = []
+    done = None
+    while True:
+        line = resp.readline()          # SSE: incremental, line-delimited
+        if not line:
+            break
+        line = line.decode().strip()
+        if not line.startswith("data: "):
+            continue
+        data = line[len("data: "):]
+        if data == "[DONE]":
+            break
+        event = json.loads(data)
+        if event.get("done"):
+            done = event
+        else:
+            tokens.append(event["token"])
+            print(f"[stream_client] token[{event['index']}] = "
+                  f"{event['token']}", flush=True)
+    conn.close()
+    if done is None or done.get("n_tokens") != len(tokens):
+        raise SystemExit(f"[stream_client] stream ended badly: "
+                         f"done={done} n_streamed={len(tokens)}")
+    return tokens
+
+
+def scrape(host: str, port: int, path: str) -> tuple[int, str]:
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request("GET", path)
+    resp = conn.getresponse()
+    body = resp.read().decode()
+    conn.close()
+    return resp.status, body
+
+
+def metric_value(metrics: str, name: str) -> float:
+    for line in metrics.splitlines():
+        if line.startswith(name + " "):
+            return float(line.split()[1])
+    raise SystemExit(f"[stream_client] metric {name} missing from /metrics")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--timeout", type=float, default=600,
+                    help="seconds to wait for health / first token "
+                    "(first request jit-compiles the step)")
+    args = ap.parse_args()
+
+    health = wait_for_health(args.host, args.port, args.timeout)
+    print(f"[stream_client] healthy: {health}")
+    prompt = [1 + (i % 97) for i in range(args.prompt_len)]
+    tokens = stream_generate(args.host, args.port, prompt, args.max_new,
+                             args.timeout)
+    assert len(tokens) == args.max_new, (len(tokens), args.max_new)
+
+    status, metrics = scrape(args.host, args.port, "/metrics")
+    assert status == 200, status
+    for line in metrics.splitlines():
+        if line.startswith(("repro_engine_tokens_total",
+                            "repro_engine_requests_done_total",
+                            "repro_engine_ttft_seconds_count",
+                            "repro_frontend_requests_submitted_total")):
+            print(f"[stream_client] {line}")
+    assert metric_value(metrics, "repro_engine_tokens_total") \
+        >= args.max_new
+    assert metric_value(metrics, "repro_engine_requests_done_total") >= 1
+    assert metric_value(metrics, "repro_engine_ttft_seconds_count") >= 1
+    assert metric_value(metrics,
+                        "repro_frontend_requests_submitted_total") >= 1
+
+    status, body = scrape(args.host, args.port, "/health")
+    assert status == 200 and json.loads(body)["status"] == "ok", body
+    print(f"[stream_client] OK: streamed {len(tokens)} tokens "
+          f"{tokens}, metrics and health verified")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

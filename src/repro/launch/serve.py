@@ -9,11 +9,22 @@ SSM (per-slot Mamba state), hybrid mamba+attention, encoder-decoder
 (paged self-KV + per-slot cross K/V), and draft-and-verify speculative
 decoding (``--num-speculative-tokens``; docs/speculative.md).
 
+All traffic — the synthetic Poisson bench below and live HTTP alike —
+flows through the async streaming front-end (``repro.serving.frontend``;
+docs/serving-frontend.md): the same admission path, token streams, and
+metrics surface, so bench rows stay comparable with production serving.
+
   PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2_370m --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch whisper_large_v3 --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2_3b --smoke \\
       --num-speculative-tokens 2
+
+Long-lived HTTP server (SSE token streaming + /health + /metrics;
+graceful drain on SIGINT/SIGTERM — stop admitting, finish in-flight):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke \\
+      --http 127.0.0.1:8311 --ttft-slo-ms 5000 --max-queue 64
 
 Tensor-parallel serving (page pools sharded by kv head over the mesh
 "model" axis; docs/multi-host.md) — needs that many devices, e.g. a forced
@@ -26,6 +37,9 @@ host platform for CPU smoke runs:
 from __future__ import annotations
 
 import argparse
+import asyncio
+import signal
+import time
 
 import numpy as np
 
@@ -57,18 +71,28 @@ def parse_mesh(spec: str | None) -> tuple[int, int]:
     return sizes["data"], sizes["model"]
 
 
-def run_engine(cfg, mesh, args):
-    from repro.serving import InferenceEngine, Request
-    from repro.serving.scheduler import SamplingParams
+def build_engine(cfg, mesh, args):
+    from repro.serving import InferenceEngine
     draft_cfg = (get_config(args.speculative_draft, smoke=args.smoke)
                  if args.speculative_draft else None)
-    eng = InferenceEngine(cfg, mesh, max_batch=args.max_batch,
-                          block_size=args.block_size, max_len=args.max_len,
-                          max_num_batched_tokens=args.max_batched_tokens,
-                          enable_prefix_caching=not args.no_prefix_caching,
-                          draft_cfg=draft_cfg,
-                          num_speculative_tokens=args.num_speculative_tokens)
-    rng = np.random.default_rng(args.seed)
+    return InferenceEngine(
+        cfg, mesh, max_batch=args.max_batch,
+        block_size=args.block_size, max_len=args.max_len,
+        max_num_batched_tokens=args.max_batched_tokens,
+        enable_prefix_caching=not args.no_prefix_caching,
+        draft_cfg=draft_cfg,
+        num_speculative_tokens=args.num_speculative_tokens)
+
+
+def build_controller(args):
+    from repro.serving.frontend import AdmissionController
+    slo = args.ttft_slo_ms / 1e3 if args.ttft_slo_ms else None
+    return AdmissionController(ttft_slo_p95_s=slo, max_queue=args.max_queue)
+
+
+def make_requests(cfg, args, rng):
+    from repro.serving import Request
+    from repro.serving.scheduler import SamplingParams
     reqs = []
     for i in range(args.requests):
         # staggered horizons: each request retires on its own max_new
@@ -84,9 +108,39 @@ def run_engine(cfg, mesh, args):
                          ).astype(np.int32),
             max_new=max_new, sampling=sp, eos_id=args.eos_id,
             frames=frames))
+    return reqs
+
+
+async def _drive(eng, controller, reqs, arrivals):
+    """Stream the Poisson workload through the front-end: the same
+    admission path live HTTP traffic takes, with per-request token
+    streams consumed concurrently. Returns {rid: [tokens]}."""
+    from repro.serving.frontend import AsyncEngineDriver
+    async with AsyncEngineDriver(eng, admission=controller) as drv:
+        streams = [await drv.submit(r, arrival_step=t)
+                   for r, t in zip(reqs, arrivals)]
+
+        async def pull(s):
+            return [ev.token async for ev in s]
+
+        outs = await asyncio.gather(*(pull(s) for s in streams))
+        await drv.drain()
+    return {r.rid: np.asarray(t, np.int32) for r, t in zip(reqs, outs)}
+
+
+def run_engine(cfg, mesh, args):
+    eng = build_engine(cfg, mesh, args)
+    controller = build_controller(args)
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(cfg, args, rng)
     arrivals = poisson_arrival_steps(len(reqs), args.rate, rng)
-    outs = eng.run(reqs, arrival_steps=arrivals)
+    t0 = time.time()
+    tok0 = eng.stats["tokens"]
+    outs = asyncio.run(_drive(eng, controller, reqs, arrivals))
+    dt = time.time() - t0
     s = eng.stats
+    s["wall_s"] = round(dt, 3)
+    s["tok_s"] = round((s["tokens"] - tok0) / max(dt, 1e-9), 1)
     print(f"[serve] mesh=data={mesh.shape['data']},model="
           f"{mesh.shape['model']} tp={eng.tp}")
     print(f"[serve] runner={type(eng.runner).__name__} {len(reqs)} requests "
@@ -100,13 +154,53 @@ def run_engine(cfg, mesh, args):
           f"cache_hit_tokens={s['cache_hit_tokens']} "
           f"cow_copies={s['cow_copies']} "
           f"peak_block_util={s['peak_block_utilization']:.2f}")
+    print(f"[serve] frontend: submitted={controller.submitted} "
+          f"shed={controller.shed} completed={controller.completed} "
+          f"queue_peak={controller.queue_peak} "
+          f"cache_hit_rate={eng.cache_hit_rate:.3f} "
+          f"preemption_rate={eng.preemption_rate:.3f} "
+          f"ttft_p95={eng.hist['ttft_steps'].percentile(95):.0f}steps")
     if s["spec_decodes"]:
         print(f"[serve] speculative: k={eng.runner.spec_tokens} "
               f"draft={eng.draft_cfg.name} "
               f"spec_decodes={s['spec_decodes']} "
-              f"mean_accept_len={s['mean_accept_len']:.3f}")
+              f"mean_accept_len={eng.mean_accept_len:.3f}")
     print("[serve] sample output ids:", outs[reqs[0].rid][:8].tolist())
     return outs
+
+
+async def _serve_http(eng, controller, host, port):
+    from repro.serving.frontend import AsyncEngineDriver, FrontendServer
+    drv = AsyncEngineDriver(eng, admission=controller)
+    await drv.start()
+    srv = FrontendServer(drv, host=host, port=port)
+    await srv.start()
+    slo = controller.ttft_slo_p95_s
+    print(f"[serve] http listening on {host}:{srv.port} "
+          f"(POST /generate, GET /health, GET /metrics; "
+          f"ttft_slo_p95={slo if slo is not None else 'off'} "
+          f"max_queue={controller.max_queue})", flush=True)
+    stop = asyncio.Event()
+    loop = asyncio.get_running_loop()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        loop.add_signal_handler(sig, stop.set)
+    await stop.wait()
+    print("[serve] draining: no new admissions, finishing "
+          f"{len(eng.sched.running) + drv.queue_depth} in-flight "
+          "request(s)", flush=True)
+    await drv.drain()
+    await srv.aclose()
+    s = eng.stats
+    print(f"[serve] drained cleanly: requests_done={s['requests_done']} "
+          f"tokens={s['tokens']} shed={controller.shed} "
+          f"steps={s['steps']}", flush=True)
+
+
+def run_http(cfg, mesh, args):
+    host, _, port = args.http.rpartition(":")
+    eng = build_engine(cfg, mesh, args)
+    asyncio.run(_serve_http(eng, build_controller(args),
+                            host or "127.0.0.1", int(port)))
 
 
 def main():
@@ -141,6 +235,18 @@ def main():
                     "needs that many local devices")
     ap.add_argument("--rate", type=float, default=0.5,
                     help="poisson arrivals per decode step")
+    ap.add_argument("--http", default=None, metavar="HOST:PORT",
+                    help="serve forever over HTTP instead of the synthetic "
+                    "Poisson workload: POST /generate (SSE streaming), "
+                    "GET /health, GET /metrics; SIGINT/SIGTERM drains "
+                    "gracefully (docs/serving-frontend.md)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None,
+                    help="TTFT p95 target in ms; admission sheds (429 + "
+                    "Retry-After) when the projection would exceed it "
+                    "(default: no SLO, queue bound only)")
+    ap.add_argument("--max-queue", type=int, default=128,
+                    help="front-end waiting-queue bound; requests past it "
+                    "are shed regardless of the SLO projection")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=None)
@@ -150,7 +256,10 @@ def main():
     from repro.launch.mesh import make_host_mesh
     data, model = parse_mesh(args.mesh)
     mesh = make_host_mesh(data, model)
-    run_engine(cfg, mesh, args)
+    if args.http:
+        run_http(cfg, mesh, args)
+    else:
+        run_engine(cfg, mesh, args)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Continuous-batching serving subsystem (cache kinds + per-family model
 runners + scheduler + engine). See README.md in this directory for the
-architecture."""
+architecture. The request-facing async streaming front-end (driver,
+SLO admission control, HTTP/SSE, /metrics) lives in
+``repro.serving.frontend``."""
 
 from repro.serving.cache import EncoderCache, PagedKVCache, SlotStateCache
 from repro.serving.engine import InferenceEngine

@@ -57,12 +57,15 @@ from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes)
 from repro.serving.runners import make_runner
 from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
                                      StepPlan)
+from repro.serving.stats import Histogram, SECONDS_BUCKETS, STEP_BUCKETS
 from repro.spmd import sharding as shd
 
 __all__ = ["InferenceEngine", "Request", "SamplingParams"]
 
-# oldest per-request latency records are dropped past this, so a
-# long-running serve loop doesn't grow stats["latency"] without bound
+# oldest completed per-request latency records are dropped past this, so
+# a long-running serve loop doesn't grow stats["latency"] without bound;
+# nothing is lost — every retirement is first aggregated into the
+# fixed-size TTFT/e2e histograms (`self.hist`) that /metrics exports
 LATENCY_RECORD_CAP = 4096
 
 
@@ -76,7 +79,8 @@ class InferenceEngine:
                  seed: int = 0, params=None,
                  draft_cfg: ModelConfig | None = None,
                  num_speculative_tokens: int = 0, draft_params=None,
-                 shard_params: bool = False):
+                 shard_params: bool = False,
+                 latency_record_cap: int = LATENCY_RECORD_CAP):
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
         # tensor parallelism over the mesh "model" axis: page pools and
@@ -187,13 +191,26 @@ class InferenceEngine:
         if self.runner.needs_encoder:
             cache_mib += max_batch * encoder_cache_bytes(cfg)
         self.stats = {"steps": 0, "prefill_chunks": 0, "preemptions": 0,
-                      "tokens": 0, "cache_hit_tokens": 0, "cow_copies": 0,
-                      "encodes": 0,
+                      "tokens": 0, "prefill_tokens": 0,
+                      "cache_hit_tokens": 0, "cow_copies": 0,
+                      "encodes": 0, "requests": 0, "requests_done": 0,
                       "spec_decodes": 0, "spec_emitted": 0,
                       "peak_block_utilization": 0.0, "peak_blocks_in_use": 0,
                       "latency": {},
                       "kv_cache_mib": round(cache_mib / 2 ** 20, 3)}
         self.step_count = 0           # virtual clock: one step() = one tick
+        self.latency_record_cap = latency_record_cap
+        # retirement-time latency aggregation: bounded state the metrics
+        # endpoint exports no matter how many requests have flowed through
+        self.hist = {"ttft_seconds": Histogram(SECONDS_BUCKETS),
+                     "e2e_seconds": Histogram(SECONDS_BUCKETS),
+                     "ttft_steps": Histogram(STEP_BUCKETS),
+                     "e2e_steps": Histogram(STEP_BUCKETS)}
+        # streaming hooks for the async front-end (serving/frontend/):
+        # on_token(req, tok) after every appended token, on_finish(req)
+        # after the request has retired and released its cache resources
+        self.on_token = None
+        self.on_finish = None
 
     def _place_params(self, params, cfg: ModelConfig):
         """Place one model's weights on the mesh.
@@ -221,6 +238,32 @@ class InferenceEngine:
         rules = shd.make_rules(cfg, self.pcfg)
         return jax.device_put(
             params, shd.tree_shardings(params, specs, rules, self.mesh))
+
+    # -- derived stats (single code path for bench, serve.py and /metrics) -
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of prefill KV served from the prefix cache instead of
+        recomputed: hits / (hits + prefill tokens actually computed).
+        0.0 before any prefill work (guarded against division by zero)."""
+        hits = self.stats["cache_hit_tokens"]
+        denom = hits + self.stats["prefill_tokens"]
+        return hits / denom if denom else 0.0
+
+    @property
+    def preemption_rate(self) -> float:
+        """Recompute preemptions per arrived request (a request preempted
+        twice counts twice). 0.0 before any arrivals."""
+        n = self.stats["requests"]
+        return self.stats["preemptions"] / n if n else 0.0
+
+    @property
+    def mean_accept_len(self) -> float:
+        """Realized tokens per speculative decode slot-step (1.0 = no
+        draft token ever survived, 1 + k is the cap); 0.0 when
+        speculation is off / no speculative decode has run yet."""
+        n = self.stats["spec_decodes"]
+        return self.stats["spec_emitted"] / n if n else 0.0
 
     # -- jitted bodies -----------------------------------------------------
 
@@ -291,8 +334,24 @@ class InferenceEngine:
     def _note_arrival(self, req: Request) -> None:
         # monotonic: the *_wall fields are only ever differenced, and an
         # NTP step must not produce negative latencies
+        self.stats["requests"] += 1
         self._lat(req.rid).update(arrival_step=self.step_count,
                                   arrival_wall=time.monotonic())
+
+    def _observe_latency(self, rec: dict) -> None:
+        """Fold one completed request's record into the TTFT/e2e
+        histograms — the bounded aggregate that survives record eviction
+        and backs the /metrics endpoint."""
+        if "arrival_step" not in rec:        # driven without _note_arrival
+            return                           # (scheduler-level tests)
+        self.hist["ttft_steps"].observe(
+            rec["first_token_step"] - rec["arrival_step"])
+        self.hist["e2e_steps"].observe(
+            rec["done_step"] - rec["arrival_step"])
+        self.hist["ttft_seconds"].observe(
+            rec["first_token_wall"] - rec["arrival_wall"])
+        self.hist["e2e_seconds"].observe(
+            rec["done_wall"] - rec["arrival_wall"])
 
     def _append_token(self, slot: int, req: Request, tok: int) -> None:
         req.out.append(tok)
@@ -301,19 +360,26 @@ class InferenceEngine:
             self._lat(req.rid).update(first_token_step=self.step_count,
                                       first_token_wall=time.monotonic())
         self.sched.note_progress(req)
+        if self.on_token is not None:
+            self.on_token(req, tok)
         if req.done:
-            self._lat(req.rid).update(done_step=self.step_count,
-                                      done_wall=time.monotonic())
+            rec = self._lat(req.rid)
+            rec.update(done_step=self.step_count,
+                       done_wall=time.monotonic())
+            self._observe_latency(rec)
+            self.stats["requests_done"] += 1
             lat = self.stats["latency"]
-            if len(lat) > LATENCY_RECORD_CAP:
+            if len(lat) > self.latency_record_cap:
                 # evict oldest *completed* records only — an in-flight
                 # request must keep its arrival marks for TTFT reporting
                 for rid in list(lat):
                     if "done_step" in lat[rid]:
                         del lat[rid]
-                        if len(lat) <= LATENCY_RECORD_CAP:
+                        if len(lat) <= self.latency_record_cap:
                             break
             self.sched.retire(slot)
+            if self.on_finish is not None:
+                self.on_finish(req)
 
     def _run_encodes(self, plan: StepPlan) -> None:
         """Admission-time encoder passes: write each new request's cross
@@ -388,6 +454,7 @@ class InferenceEngine:
                 slot, req, n = plan.chunk
                 req.num_computed += n
                 self.stats["prefill_chunks"] += 1
+                self.stats["prefill_tokens"] += n
                 if req.num_computed == req.context_len:
                     self._append_token(slot, req, chunk_tok)
                 else:
@@ -468,8 +535,5 @@ class InferenceEngine:
         self.stats["tok_s"] = round((self.stats["tokens"] - tok0)
                                     / max(dt, 1e-9), 1)
         if self.stats["spec_decodes"]:
-            # realized tokens per speculative decode slot-step: 1.0 means
-            # no draft token ever survived verification, 1 + k is the cap
-            self.stats["mean_accept_len"] = round(
-                self.stats["spec_emitted"] / self.stats["spec_decodes"], 3)
+            self.stats["mean_accept_len"] = round(self.mean_accept_len, 3)
         return {r.rid: np.asarray(r.out, np.int32) for r in requests}

@@ -1,0 +1,20 @@
+"""Async streaming front-end around the continuous-batching engine.
+
+The request-facing subsystem (docs/serving-frontend.md): an async engine
+driver that owns the step loop and streams tokens per request
+(``driver.py``), SLO-aware admission control with backpressure
+(``admission.py``), a stdlib-only HTTP/SSE surface with live
+``/metrics`` + ``/health`` (``http.py``), and Prometheus text rendering
+(``metrics.py``).
+"""
+
+from repro.serving.frontend.admission import (AdmissionController,
+                                              AdmissionDecision)
+from repro.serving.frontend.driver import (AsyncEngineDriver, ShedError,
+                                           TokenEvent, TokenStream)
+from repro.serving.frontend.http import FrontendServer
+from repro.serving.frontend.metrics import render_metrics
+
+__all__ = ["AsyncEngineDriver", "TokenStream", "TokenEvent", "ShedError",
+           "AdmissionController", "AdmissionDecision", "FrontendServer",
+           "render_metrics"]

@@ -1,0 +1,114 @@
+"""Prometheus text-format rendering of the live serving metrics.
+
+One function, :func:`render_metrics`, snapshots the engine's counters,
+the derived rates (cache-hit rate, preemption rate, mean accept length —
+the *same accessors* the bench and serve.py print, so every surface
+reports identical numbers), the retirement-time TTFT/e2e histograms, and
+— when a driver is attached — the front-end queue/shed/drain state. The
+output is the Prometheus text exposition format v0.0.4 (`# HELP` /
+`# TYPE` comments, cumulative `_bucket{le=...}` histogram lines), which
+is what ``GET /metrics`` serves.
+
+Metric catalog: docs/serving-frontend.md.
+"""
+
+from __future__ import annotations
+
+__all__ = ["render_metrics", "CONTENT_TYPE"]
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+# engine.stats key -> (metric name, help text); all monotone counters
+_ENGINE_COUNTERS = (
+    ("tokens", "repro_engine_tokens_total",
+     "Generated tokens appended across all requests"),
+    ("steps", "repro_engine_steps_total",
+     "Jitted budgeted engine steps executed"),
+    ("prefill_chunks", "repro_engine_prefill_chunks_total",
+     "Prefill chunks executed"),
+    ("prefill_tokens", "repro_engine_prefill_tokens_total",
+     "Prompt tokens whose KV was computed (prefix-cache misses)"),
+    ("cache_hit_tokens", "repro_engine_cache_hit_tokens_total",
+     "Prompt tokens whose KV was adopted from the prefix cache"),
+    ("preemptions", "repro_engine_preemptions_total",
+     "Recompute preemptions (victim returned to the waiting queue)"),
+    ("cow_copies", "repro_engine_cow_copies_total",
+     "Copy-on-write block copies performed"),
+    ("encodes", "repro_engine_encodes_total",
+     "Admission-time encoder passes (enc-dec runners)"),
+    ("requests", "repro_engine_requests_total",
+     "Requests that arrived at the engine"),
+    ("requests_done", "repro_engine_requests_done_total",
+     "Requests retired (EOS or max_new)"),
+    ("spec_decodes", "repro_engine_spec_decodes_total",
+     "Speculative decode slot-steps (draft-and-verify)"),
+    ("spec_emitted", "repro_engine_spec_emitted_total",
+     "Tokens emitted by speculative verify steps"),
+)
+
+_HISTOGRAMS = (
+    ("ttft_seconds", "repro_engine_ttft_seconds",
+     "Time to first token, wall seconds (arrival to first sampled token)"),
+    ("e2e_seconds", "repro_engine_e2e_seconds",
+     "End-to-end request latency, wall seconds (arrival to retirement)"),
+    ("ttft_steps", "repro_engine_ttft_steps",
+     "Time to first token in engine steps (deterministic virtual clock)"),
+    ("e2e_steps", "repro_engine_e2e_steps",
+     "End-to-end request latency in engine steps"),
+)
+
+
+def _scalar(out: list[str], name: str, kind: str, help_: str, value):
+    out.append(f"# HELP {name} {help_}")
+    out.append(f"# TYPE {name} {kind}")
+    out.append(f"{name} {format(float(value), 'g')}")
+
+
+def render_metrics(engine, driver=None) -> str:
+    """Render the serving metrics snapshot; ``driver`` (an
+    ``AsyncEngineDriver``) adds the front-end queue/admission section."""
+    out: list[str] = []
+    s = engine.stats
+    for key, name, help_ in _ENGINE_COUNTERS:
+        _scalar(out, name, "counter", help_, s[key])
+    _scalar(out, "repro_engine_cache_hit_rate", "gauge",
+            "Fraction of prefill KV served from the prefix cache",
+            engine.cache_hit_rate)
+    _scalar(out, "repro_engine_preemption_rate", "gauge",
+            "Preemptions per arrived request", engine.preemption_rate)
+    _scalar(out, "repro_engine_mean_accept_len", "gauge",
+            "Mean realized tokens per speculative decode slot-step",
+            engine.mean_accept_len)
+    _scalar(out, "repro_engine_peak_block_utilization", "gauge",
+            "Peak fraction of the KV block pool in use",
+            s["peak_block_utilization"])
+    _scalar(out, "repro_engine_peak_blocks_in_use", "gauge",
+            "Peak KV blocks in use", s["peak_blocks_in_use"])
+    _scalar(out, "repro_engine_kv_cache_mib", "gauge",
+            "Device cache footprint, MiB", s["kv_cache_mib"])
+    _scalar(out, "repro_engine_running", "gauge",
+            "Requests currently occupying a batch slot",
+            len(engine.sched.running))
+    _scalar(out, "repro_engine_waiting", "gauge",
+            "Requests in the scheduler's waiting queue",
+            len(engine.sched.waiting))
+    for key, name, help_ in _HISTOGRAMS:
+        engine.hist[key].render(name, help_, out)
+    if driver is not None:
+        adm = driver.admission
+        _scalar(out, "repro_frontend_queue_depth", "gauge",
+                "Requests admitted by the front-end but not yet running",
+                driver.queue_depth)
+        _scalar(out, "repro_frontend_queue_peak", "gauge",
+                "Peak front-end queue depth", adm.queue_peak)
+        _scalar(out, "repro_frontend_requests_submitted_total", "counter",
+                "Requests accepted into the front-end queue", adm.submitted)
+        _scalar(out, "repro_frontend_requests_shed_total", "counter",
+                "Requests shed by admission control (HTTP 429)", adm.shed)
+        _scalar(out, "repro_frontend_requests_completed_total", "counter",
+                "Front-end requests whose streams closed cleanly",
+                adm.completed)
+        _scalar(out, "repro_frontend_draining", "gauge",
+                "1 while draining (no new admissions), else 0",
+                1.0 if driver.draining else 0.0)
+    return "\n".join(out) + "\n"

@@ -194,6 +194,12 @@ class Scheduler:
         self._join_order: list[int] = []           # slots, oldest first
         self.n_preemptions = 0
         self.cache_hit_tokens = 0
+        # graceful-drain mode: in-flight work finishes, new submissions
+        # are refused (the front-end flips this on shutdown)
+        self.draining = False
+        # front-end hook: called as on_admit(slot, req) whenever a request
+        # moves waiting -> running (including preemption re-admissions)
+        self.on_admit = None
 
     # -- queries ----------------------------------------------------------
 
@@ -221,8 +227,17 @@ class Scheduler:
                 f"exceeds max_len capacity {capacity}")
 
     def add(self, req: Request) -> None:
+        if self.draining:
+            raise RuntimeError(
+                f"scheduler is draining: request {req.rid} refused "
+                "(in-flight work finishes; no new admissions)")
         self.validate(req)
         self.waiting.append(req)
+
+    def drain(self) -> None:
+        """Stop accepting new requests; everything already submitted
+        (waiting or running) still runs to retirement. Idempotent."""
+        self.draining = True
 
     # -- the budgeted step ------------------------------------------------
 
@@ -390,6 +405,8 @@ class Scheduler:
             self.encoder_cache.allocate(req.rid, slot)
             if encodes is not None:
                 encodes.append((slot, req))
+        if self.on_admit is not None:
+            self.on_admit(slot, req)
         return slot, req
 
     # -- progress / bookkeeping -------------------------------------------

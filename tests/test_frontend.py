@@ -1,0 +1,535 @@
+"""Streaming front-end tests: Prometheus histogram semantics, SLO
+admission-control math, and the async driver's equivalence contract —
+requests streamed through ``AsyncEngineDriver`` (staggered submissions,
+prefix-cache hits, preemption victims, speculative k=2) must produce
+byte-identical token streams to ``engine.run()`` on the same workload,
+with matching scheduling stats. Plus queue saturation / shed signals,
+FCFS ordering, graceful drain, and the stdlib HTTP/SSE + /metrics +
+/health surface end to end."""
+
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.serving.frontend import (AdmissionController, AsyncEngineDriver,
+                                    FrontendServer, ShedError,
+                                    render_metrics)
+from repro.serving.frontend.admission import MIN_RETRY_AFTER_S
+from repro.serving.scheduler import Request, SamplingParams
+from repro.serving.stats import Histogram
+
+RNG = np.random.default_rng(7)
+
+# ---------------------------------------------------------------------------
+# Histogram (stats.py) — Prometheus exposition semantics
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_observe_mean_percentile():
+    h = Histogram((1.0, 2.0, 4.0))
+    assert h.mean == 0.0 and h.percentile(95) == 0.0     # empty
+    for v in (0.5, 1.5, 1.5, 3.0, 100.0):                # 100 -> +Inf bucket
+        h.observe(v)
+    assert h.count == 5
+    assert h.mean == pytest.approx((0.5 + 1.5 + 1.5 + 3.0 + 100.0) / 5)
+    assert h.counts == [1, 2, 1, 1]
+    # conservative bucket-upper-bound estimates
+    assert h.percentile(20) == 1.0
+    assert h.percentile(50) == 2.0
+    assert h.percentile(80) == 4.0
+    assert h.percentile(99) == 4.0          # +Inf clamps to last finite
+
+
+def test_histogram_prometheus_render_cumulative():
+    h = Histogram((0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 7.0):
+        h.observe(v)
+    out = []
+    h.render("x_seconds", "help text", out)
+    assert out[0] == "# HELP x_seconds help text"
+    assert out[1] == "# TYPE x_seconds histogram"
+    assert out[2] == 'x_seconds_bucket{le="0.1"} 1'
+    assert out[3] == 'x_seconds_bucket{le="1"} 3'        # cumulative
+    assert out[4] == 'x_seconds_bucket{le="+Inf"} 4'     # == _count
+    assert out[5] == "x_seconds_sum 8.05"
+    assert out[6] == "x_seconds_count 4"
+
+
+def test_histogram_rejects_empty_buckets():
+    with pytest.raises(ValueError):
+        Histogram(())
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController — projection math and shed signals
+# ---------------------------------------------------------------------------
+
+
+def test_admission_cold_start_admits():
+    """Empty TTFT window: the SLO projection is disabled (an estimator
+    with no data must not shed) — only the queue bound applies."""
+    adm = AdmissionController(ttft_slo_p95_s=0.001, max_queue=4)
+    d = adm.decide(queue_depth=3)
+    assert d.admit and d.reason == "" and d.projected_ttft_s == 0.0
+
+
+def test_admission_queue_full_shed():
+    adm = AdmissionController(max_queue=2)
+    assert adm.decide(1).admit
+    d = adm.decide(2)
+    assert not d.admit and d.reason == "queue_full"
+    assert d.retry_after_s >= MIN_RETRY_AFTER_S
+    adm0 = AdmissionController(max_queue=0)
+    assert not adm0.decide(0).admit          # zero queue sheds everything
+
+
+def test_admission_slo_projection_and_retry():
+    adm = AdmissionController(ttft_slo_p95_s=2.5)
+    for _ in range(4):
+        adm.note_ttft(2.0)                   # realized p95 = 2.0
+    for t in (10.0, 11.0, 12.0):             # drain rate: 1 admit / 1.0s
+        adm.note_admit(t)
+    assert adm.ttft_p95() == 2.0
+    assert adm.mean_admit_interval() == pytest.approx(1.0)
+    assert adm.projected_ttft_p95(3) == pytest.approx(5.0)
+    ok = adm.decide(queue_depth=0)           # projected 2.0 <= 2.5
+    assert ok.admit and ok.projected_ttft_s == pytest.approx(2.0)
+    shed = adm.decide(queue_depth=1)         # projected 3.0 > 2.5
+    assert not shed.admit and shed.reason == "ttft_slo"
+    assert shed.projected_ttft_s == pytest.approx(3.0)
+    assert shed.retry_after_s == pytest.approx(0.5)      # projected - target
+    # tiny overshoot still carries a positive retry hint
+    adm2 = AdmissionController(ttft_slo_p95_s=2.0 - 1e-6)
+    adm2.note_ttft(2.0)
+    assert adm2.decide(0).retry_after_s >= MIN_RETRY_AFTER_S
+
+
+def test_admission_counters_and_queue_peak():
+    adm = AdmissionController()
+    adm.note_submitted(queue_depth=0)
+    adm.note_submitted(queue_depth=1)
+    adm.note_submitted(queue_depth=2)
+    adm.note_shed()
+    adm.note_completed()
+    assert (adm.submitted, adm.shed, adm.completed) == (3, 1, 1)
+    assert adm.queue_peak == 3               # depth *after* each submit
+
+
+def test_admission_rejects_negative_queue():
+    with pytest.raises(ValueError):
+        AdmissionController(max_queue=-1)
+
+
+# ---------------------------------------------------------------------------
+# Async driver vs engine.run() — byte-identical streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="module")
+def glm_params(tiny_mesh):
+    import jax.numpy as jnp
+    from repro.models import api
+    cfg = get_config("glm4_9b", smoke=True)
+    with jax.set_mesh(tiny_mesh):
+        params_f32, _ = api.init_model(cfg, jax.random.key(0))
+        params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params_f32)
+    return cfg, params
+
+
+def _engine(cfg, mesh, params, **kw):
+    from repro.serving import InferenceEngine
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("max_len", 96)
+    return InferenceEngine(cfg, mesh, params=params, debug_invariants=True,
+                           **kw)
+
+
+_SCHED_KEYS = ("steps", "tokens", "prefill_chunks", "prefill_tokens",
+               "cache_hit_tokens", "preemptions", "cow_copies",
+               "requests", "requests_done")
+
+
+async def _stream_all(drv, reqs, arrivals):
+    """Submit everything *before* the step thread starts, so the driver
+    sees the same arrival picture engine.run() gets upfront — then the
+    stream outputs AND the scheduling stats must match exactly."""
+    streams = [await drv.submit(r, arrival_step=t)
+               for r, t in zip(reqs, arrivals)]
+    await drv.start()
+
+    async def pull(s):
+        return [ev async for ev in s]
+
+    events = await asyncio.gather(*(pull(s) for s in streams))
+    await drv.drain()
+    return events
+
+
+def test_stream_matches_engine_run(tiny_mesh, glm_params):
+    """Staggered submissions with a full-prompt prefix-cache hit and a
+    temperature request: token streams byte-identical to engine.run(),
+    scheduling stats identical too (same virtual-clock admission)."""
+    cfg, params = glm_params
+    common = RNG.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    prompts = [common.copy(), common.copy(),           # full-prompt hit+COW
+               RNG.integers(0, cfg.vocab_size, 32).astype(np.int32),
+               RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)]
+    temp = SamplingParams(temperature=0.9, top_k=16, seed=3)
+
+    def make():
+        return [Request(p.copy(), max_new=6,
+                        sampling=temp if i == 3 else SamplingParams(),
+                        rid=61000 + i)
+                for i, p in enumerate(prompts)]
+
+    arrivals = [0, 3, 3, 6]
+    twin = _engine(cfg, tiny_mesh, params)
+    want = twin.run(make(), arrival_steps=arrivals)
+
+    eng = _engine(cfg, tiny_mesh, params)
+    drv = AsyncEngineDriver(eng)
+    reqs = make()
+    events = asyncio.run(_stream_all(drv, reqs, arrivals))
+
+    for r, evs in zip(reqs, events):
+        np.testing.assert_array_equal([e.token for e in evs], want[r.rid])
+        assert [e.index for e in evs] == list(range(len(evs)))
+        assert [e.text for e in evs] == [f"{e.token} " for e in evs]
+    assert eng.stats["cache_hit_tokens"] > 0        # the duplicate hit
+    for k in _SCHED_KEYS:
+        assert eng.stats[k] == twin.stats[k], k
+    assert drv.admission.completed == 4 and drv.admission.shed == 0
+
+
+def test_stream_preemption_equivalence(tiny_mesh, glm_params):
+    """A recompute-preemption victim streams byte-identically: preempted
+    tokens were already delivered (the engine replays, never re-emits)."""
+    cfg, params = glm_params
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+
+    def make():
+        return [Request(p.copy(), max_new=20) for p in prompts]
+
+    twin = _engine(cfg, tiny_mesh, params, max_batch=2, num_blocks=8)
+    want = list(twin.run(make()).values())
+    assert twin.stats["preemptions"] >= 1
+
+    eng = _engine(cfg, tiny_mesh, params, max_batch=2, num_blocks=8)
+    drv = AsyncEngineDriver(eng)
+    reqs = make()
+    events = asyncio.run(_stream_all(drv, reqs, [0, 0]))
+    assert eng.stats["preemptions"] >= 1
+    for w, evs in zip(want, events):
+        np.testing.assert_array_equal([e.token for e in evs], w)
+    for k in _SCHED_KEYS:
+        assert eng.stats[k] == twin.stats[k], k
+
+
+def test_stream_speculative_k2_equivalence(tiny_mesh):
+    """Speculative draft-and-verify (k=2, self-draft) behind the driver:
+    streams match engine.run() and the spec counters agree."""
+    import jax.numpy as jnp
+    from repro.models import api
+    from repro.serving import InferenceEngine, SpeculativeRunner
+    cfg = get_config("starcoder2_3b", smoke=True)
+    with jax.set_mesh(tiny_mesh):
+        params_f32, _ = api.init_model(cfg, jax.random.key(0))
+        params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params_f32)
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+
+    def make():
+        return [Request(p.copy(), max_new=8) for p in prompts]
+
+    def spec_engine():
+        return InferenceEngine(cfg, tiny_mesh, max_batch=2, block_size=16,
+                               max_len=96, params=params,
+                               num_speculative_tokens=2, draft_params=params,
+                               debug_invariants=True)
+
+    twin = spec_engine()
+    want = list(twin.run(make(), arrival_steps=[0, 2]).values())
+    eng = spec_engine()
+    assert isinstance(eng.runner, SpeculativeRunner)
+    drv = AsyncEngineDriver(eng)
+    reqs = make()
+    events = asyncio.run(_stream_all(drv, reqs, [0, 2]))
+    for w, evs in zip(want, events):
+        np.testing.assert_array_equal([e.token for e in evs], w)
+    assert eng.stats["spec_decodes"] >= 1
+    assert eng.stats["spec_decodes"] == twin.stats["spec_decodes"]
+    assert eng.stats["spec_emitted"] == twin.stats["spec_emitted"]
+    assert eng.mean_accept_len > 1.0        # self-draft: full acceptance
+
+
+# ---------------------------------------------------------------------------
+# Admission over the driver: saturation, FCFS, SLO shed, graceful drain
+# ---------------------------------------------------------------------------
+
+
+def test_queue_saturation_sheds_with_retry_signal(tiny_mesh, glm_params):
+    cfg, params = glm_params
+    prompts = [RNG.integers(0, cfg.vocab_size, 16).astype(np.int32)
+               for _ in range(3)]
+    eng = _engine(cfg, tiny_mesh, params, max_batch=1)
+    adm = AdmissionController(max_queue=2)
+    drv = AsyncEngineDriver(eng, admission=adm)
+
+    async def go():
+        s0 = await drv.submit(Request(prompts[0], max_new=4))
+        s1 = await drv.submit(Request(prompts[1], max_new=4))
+        with pytest.raises(ShedError) as ei:
+            await drv.submit(Request(prompts[2], max_new=4))
+        assert ei.value.reason == "queue_full"
+        assert ei.value.retry_after_s > 0
+        assert drv.queue_depth == 2          # shed request never queued
+        await drv.start()
+
+        done_order = []
+
+        async def pull(s):
+            toks = [ev.token async for ev in s]
+            done_order.append(s.request.rid)
+            return toks
+
+        outs = await asyncio.gather(pull(s0), pull(s1))
+        await drv.aclose()
+        return (s0, s1), done_order, outs
+
+    (s0, s1), done_order, outs = asyncio.run(go())
+    # max_batch=1: strict FCFS — first submitted finishes (and first-tokens)
+    # first
+    assert done_order == [s0.request.rid, s1.request.rid]
+    assert s0.first_token_wall <= s1.first_token_wall
+    assert all(len(t) == 4 for t in outs)
+    assert (adm.submitted, adm.shed, adm.completed) == (2, 1, 2)
+    assert adm.queue_peak == 2
+    # a TTFT sample per request reached the controller and the histograms
+    assert len(adm._ttft) == 2
+    assert eng.hist["ttft_seconds"].count == 2
+
+
+def test_slo_shed_carries_projection(tiny_mesh, glm_params):
+    """With a hot TTFT window above target, submit sheds with the
+    projected p95 and a retry hint; drain-before-start aborts queued
+    streams and further submits shed as draining."""
+    cfg, params = glm_params
+    eng = _engine(cfg, tiny_mesh, params)
+    adm = AdmissionController(ttft_slo_p95_s=2.5)
+    for _ in range(3):
+        adm.note_ttft(2.0)
+    for t in (5.0, 6.0, 7.0):                # 1.0s per admission
+        adm.note_admit(t)
+    drv = AsyncEngineDriver(eng, admission=adm)
+    prompt = RNG.integers(0, cfg.vocab_size, 16).astype(np.int32)
+
+    async def go():
+        s0 = await drv.submit(Request(prompt.copy(), max_new=4))
+        with pytest.raises(ShedError) as ei:   # depth 1 -> projected 3.0
+            await drv.submit(Request(prompt.copy(), max_new=4))
+        assert ei.value.reason == "ttft_slo"
+        assert ei.value.projected_ttft_s == pytest.approx(3.0)
+        assert ei.value.retry_after_s == pytest.approx(0.5)
+        await drv.drain()                      # never started
+        with pytest.raises(RuntimeError, match="drained before start"):
+            await s0.__anext__()
+        with pytest.raises(ShedError) as ei2:
+            await drv.submit(Request(prompt.copy(), max_new=4))
+        assert ei2.value.reason == "draining"
+
+    asyncio.run(go())
+    assert adm.shed == 1                      # draining sheds don't count
+
+
+def test_graceful_drain_retires_all_admitted(tiny_mesh, glm_params):
+    """drain() immediately after submission: every admitted request still
+    retires with its full output buffered in a closed stream, and the
+    engine remains usable as a batch driver after aclose()."""
+    cfg, params = glm_params
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(3)]
+    eng = _engine(cfg, tiny_mesh, params, max_batch=2)
+    drv = AsyncEngineDriver(eng)
+
+    async def go():
+        await drv.start()
+        streams = [await drv.submit(Request(p, max_new=5)) for p in prompts]
+        await drv.drain()                     # before consuming anything
+        assert drv.queue_depth == 0
+        with pytest.raises(ShedError):
+            await drv.submit(Request(prompts[0], max_new=1))
+        assert eng.sched.draining             # refuses direct adds too
+        outs = []
+        for s in streams:
+            outs.append([ev.token async for ev in s])
+        assert all(s.finished for s in streams)
+        await drv.aclose()
+        return outs
+
+    outs = asyncio.run(go())
+    assert all(len(t) == 5 for t in outs)
+    assert eng.stats["requests_done"] == 3
+    assert drv.admission.completed == 3
+    # aclose() detached the hooks and cleared the drain flag: the same
+    # warm engine serves the batch path again (the bench reuse pattern)
+    assert not eng.sched.draining and eng.on_token is None
+    out = eng.run([Request(prompts[0].copy(), max_new=3)])
+    assert len(next(iter(out.values()))) == 3
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface (stdlib client over asyncio.open_connection)
+# ---------------------------------------------------------------------------
+
+
+async def _http(port, raw: bytes):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(raw)
+    await writer.drain()
+    data = await reader.read()               # Connection: close -> EOF
+    writer.close()
+    await writer.wait_closed()
+    head, _, body = data.partition(b"\r\n\r\n")
+    status = int(head.split(b" ", 2)[1])
+    headers = {k.strip().lower(): v.strip() for k, v in
+               (ln.split(":", 1) for ln in
+                head.decode().split("\r\n")[1:] if ":" in ln)}
+    return status, headers, body
+
+
+def _post(path: str, payload) -> bytes:
+    body = (payload if isinstance(payload, bytes)
+            else json.dumps(payload).encode())
+    return (f"POST {path} HTTP/1.1\r\nHost: t\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n").encode() + body
+
+
+def _get(path: str) -> bytes:
+    return f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode()
+
+
+def _sse_events(body: bytes):
+    return [json.loads(ln[len("data: "):]) for ln in body.decode().split("\n")
+            if ln.startswith("data: ") and ln != "data: [DONE]"]
+
+
+def _assert_prometheus_valid(text: str):
+    """Every sample line parses; histogram buckets are cumulative and the
+    +Inf bucket equals _count."""
+    buckets: dict[str, list[float]] = {}
+    counts: dict[str, float] = {}
+    for ln in text.strip().split("\n"):
+        if ln.startswith("#"):
+            assert ln.startswith(("# HELP ", "# TYPE ")), ln
+            continue
+        name, val = ln.rsplit(" ", 1)
+        v = float(val)                       # every sample parses
+        if "_bucket{" in name:
+            buckets.setdefault(name.split("_bucket{")[0], []).append(v)
+        elif name.endswith("_count"):
+            counts[name[:-len("_count")]] = v
+    assert buckets, "no histograms rendered"
+    for base, cum in buckets.items():
+        assert cum == sorted(cum), f"{base} buckets not cumulative"
+        assert cum[-1] == counts[base], f"{base} +Inf != _count"
+
+
+def test_http_sse_health_metrics(tiny_mesh, glm_params):
+    cfg, params = glm_params
+    prompt = [int(t) for t in
+              RNG.integers(0, cfg.vocab_size, 24)]
+    twin = _engine(cfg, tiny_mesh, params)
+    want = next(iter(twin.run(
+        [Request(np.asarray(prompt, np.int32), max_new=5)]).values()))
+
+    eng = _engine(cfg, tiny_mesh, params)
+    drv = AsyncEngineDriver(eng)
+
+    async def go():
+        async with drv:
+            srv = FrontendServer(drv, port=0)
+            await srv.start()
+            p = srv.port
+            st, hdr, body = await _http(p, _get("/health"))
+            assert st == 200 and json.loads(body)["status"] == "ok"
+
+            st, hdr, body = await _http(
+                p, _post("/generate", {"prompt": prompt, "max_new": 5}))
+            assert st == 200
+            assert hdr["content-type"].startswith("text/event-stream")
+            events = _sse_events(body)
+            toks = [e["token"] for e in events if "token" in e]
+            done = [e for e in events if e.get("done")]
+            assert len(done) == 1 and done[0]["n_tokens"] == 5
+
+            st, _, body = await _http(p, _get("/metrics"))
+            assert st == 200
+            text = body.decode()
+            _assert_prometheus_valid(text)
+            assert "repro_engine_tokens_total 5" in text
+            assert "repro_engine_requests_done_total 1" in text
+            assert "repro_engine_ttft_seconds_count 1" in text
+            assert "repro_frontend_requests_submitted_total 1" in text
+            assert "repro_frontend_requests_shed_total 0" in text
+            assert "repro_frontend_queue_depth 0" in text
+
+            st, _, body = await _http(p, _get("/nope"))
+            assert st == 404
+            st, _, body = await _http(p, _post("/generate", b"not json"))
+            assert st == 400 and b"invalid JSON" in body
+            st, _, body = await _http(
+                p, _post("/generate", {"prompt": []}))
+            assert st == 400 and b"prompt" in body
+            st, _, body = await _http(
+                p, _post("/generate", {"prompt": prompt, "max_new": 0}))
+            assert st == 400
+            await srv.aclose()
+            return toks
+
+    toks = asyncio.run(go())
+    np.testing.assert_array_equal(toks, want)   # greedy: rid-independent
+
+
+def test_http_shed_maps_to_429(tiny_mesh, glm_params):
+    cfg, params = glm_params
+    eng = _engine(cfg, tiny_mesh, params)
+    drv = AsyncEngineDriver(eng, admission=AdmissionController(max_queue=0))
+    prompt = [1] * 8
+
+    async def go():
+        # no driver start: nothing admits, the queue bound sheds instantly
+        srv = FrontendServer(drv, port=0)
+        await srv.start()
+        st, hdr, body = await _http(
+            srv.port, _post("/generate", {"prompt": prompt}))
+        assert st == 429
+        assert int(hdr["retry-after"]) >= 1
+        err = json.loads(body)
+        assert err["reason"] == "queue_full" and err["retry_after_s"] > 0
+        await srv.aclose()
+
+    asyncio.run(go())
+    assert drv.admission.shed == 1
+
+
+def test_render_metrics_without_driver(tiny_mesh, glm_params):
+    """The metrics renderer also works bare (no front-end attached)."""
+    cfg, params = glm_params
+    eng = _engine(cfg, tiny_mesh, params)
+    text = render_metrics(eng)
+    _assert_prometheus_valid(text)
+    assert "repro_engine_cache_hit_rate 0" in text      # div-zero guarded
+    assert "repro_frontend" not in text

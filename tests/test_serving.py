@@ -825,6 +825,45 @@ def test_engine_latency_stats(glm_smoke):
         assert rec["done_step"] - rec["first_token_step"] >= 3
 
 
+def test_engine_latency_retention_bounded(glm_smoke):
+    """Per-request latency records are evicted past the cap, but the
+    retirement-time histograms keep every observation — the serve loop's
+    memory stays O(cap + buckets) over millions of requests."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          params=server.params, latency_record_cap=4,
+                          debug_invariants=True)
+    reqs = [Request(RNG.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                    max_new=2) for _ in range(8)]
+    eng.run(reqs)
+    assert eng.stats["requests_done"] == 8
+    assert len(eng.stats["latency"]) <= 4          # bounded retention
+    for key in ("ttft_steps", "e2e_steps", "ttft_seconds", "e2e_seconds"):
+        assert eng.hist[key].count == 8            # nothing lost
+    # e2e dominates ttft observation-by-observation, so also in the mean
+    assert eng.hist["e2e_steps"].mean >= eng.hist["ttft_steps"].mean
+
+
+def test_engine_rate_accessors(glm_smoke):
+    """cache_hit_rate / preemption_rate / mean_accept_len are div-zero
+    guarded on a fresh engine and land in range after traffic — the one
+    code path /metrics, the bench, and serve.py all report."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    assert eng.cache_hit_rate == 0.0
+    assert eng.preemption_rate == 0.0
+    assert eng.mean_accept_len == 0.0
+    prompt = RNG.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    eng.run([Request(prompt.copy(), max_new=2) for _ in range(2)],
+            arrival_steps=[0, 3])                  # duplicate: prefix hit
+    assert 0.0 < eng.cache_hit_rate < 1.0
+    assert 0.0 <= eng.preemption_rate <= 1.0
+    assert eng.mean_accept_len == 0.0              # no speculation here
+
+
 def test_runner_dispatch_and_vision_rejection(glm_smoke):
     from repro.config import ParallelConfig
     from repro.serving import (EncDecRunner, HybridRunner, InferenceEngine,
