@@ -5,14 +5,38 @@ with sizes scaled to minutes, not the paper's absolute 2016 numbers."""
 
 from __future__ import annotations
 
+import re
 import time
 
 import numpy as np
 
 
+def _parse_derived(derived: str) -> dict:
+    """Parse the human-readable derived string into typed fields for the
+    machine-readable (``--json``) output: ``tok_s=57.1`` becomes a float
+    field, ``ttft_p95=3steps/41ms`` splits into ``ttft_p95_steps`` and
+    ``ttft_p95_ms``."""
+    fields: dict = {}
+    for part in derived.split():
+        key, _, val = part.partition("=")
+        if not val:
+            continue
+        m = re.fullmatch(r"(-?[0-9.]+)steps/(-?[0-9.]+)ms", val)
+        if m:
+            fields[key + "_steps"] = float(m.group(1))
+            fields[key + "_ms"] = float(m.group(2))
+            continue
+        try:
+            fields[key] = float(val)
+        except ValueError:
+            fields[key] = val
+    return fields
+
+
 def _csv(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}")
-    return {"name": name, "us_per_call": us, "derived": derived}
+    return {"name": name, "us_per_call": round(us, 2), "derived": derived,
+            **_parse_derived(derived)}
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +300,131 @@ def bench_serving_throughput(rows):
     dt_tp, n_tp = float(line.split()[1]), int(line.split()[2])
     rows.append(_csv("serving/paged_engine_tp2", dt_tp / n_tp * 1e6,
                      f"tok_s={n_tp/dt_tp:.1f} mesh=model2"))
+
+
+# ---------------------------------------------------------------------------
+# Ragged packed prefill: a bursty multi-prompt workload served with
+# prefill_pack=1 (classic single-chunk admission) vs prefill_pack=4 (several
+# prompts' chunks packed into one flat ragged token batch per step). The
+# packed row must beat the baseline on admitted tokens/s and TTFT p95 —
+# that delta is the tentpole claim of the ragged-prefill kernel work.
+# ---------------------------------------------------------------------------
+
+
+def bench_serving_ragged_prefill(rows):
+    from repro.config import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import InferenceEngine, Request
+
+    cfg = get_config("glm4_9b", smoke=True)
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(7)
+    n_req, prompt_len, max_batch = 16, 24, 8
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_req)]
+    n_tok = n_req * 4
+
+    shared_params = None
+    for pack, row_name in ((1, "serving/ragged_prefill_base"),
+                           (4, "serving/ragged_prefill")):
+        # budget 104 leaves chunk_width 96 after the 8-wide decode batch:
+        # exactly four 24-token prompts per packed step vs one for the
+        # baseline — the burst drains 4x faster through prefill
+        eng = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,
+                              max_len=128, max_num_batched_tokens=104,
+                              enable_prefix_caching=False,
+                              prefill_pack=pack, params=shared_params)
+        shared_params = eng.params          # identical weights both rows
+
+        def mk():
+            return [Request(p, max_new=4) for p in prompts]
+
+        eng.run(mk())                       # compile
+        t0 = time.perf_counter()
+        reqs = mk()
+        eng.run(reqs, arrival_steps=[0] * n_req)     # one burst
+        dt = time.perf_counter() - t0
+        rows.append(_csv(row_name, dt / n_tok * 1e6,
+                         f"tok_s={n_tok/dt:.1f} prefill_pack={pack} "
+                         f"steps={eng.stats['steps']} "
+                         + _latency_percentiles(eng, reqs)))
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention kernel rows: decode and chunked prefill through the
+# dispatch layer with the pages_per_compute_block knob, plus the ragged
+# packed-prefill op (fused KV scatter + attention). On CPU these time the
+# XLA dispatch path (the knob is a no-op there); on TPU the same calls hit
+# the Pallas kernels with multi-page fetch and megacore grid partitioning,
+# so the rows track the kernel campaign wherever the bench runs.
+# ---------------------------------------------------------------------------
+
+
+def bench_paged_kernels(rows):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+
+    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    rng = np.random.default_rng(0)
+    B, H, K, hd, bs, nb = 8, 8, 4, 64, 16, 8
+    num_blocks = B * nb + 1
+    k_pages = jnp.asarray(rng.normal(0, 1, (num_blocks, bs, K, hd)),
+                          jnp.bfloat16)
+    v_pages = jnp.asarray(rng.normal(0, 1, (num_blocks, bs, K, hd)),
+                          jnp.bfloat16)
+    tables = jnp.asarray(
+        1 + np.arange(B * nb, dtype=np.int32).reshape(B, nb))
+    ctx = jnp.asarray(rng.integers(bs, nb * bs + 1, B), jnp.int32)
+
+    def timeit(fn, *args):
+        jfn = jax.jit(fn)
+        out = jax.block_until_ready(jfn(*args))
+        n = 20
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = jfn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n
+
+    q_d = jnp.asarray(rng.normal(0, 1, (B, H, hd)), jnp.bfloat16)
+    for p, name in ((1, "kernels/paged_decode"),
+                    (4, "kernels/paged_decode_mp")):
+        dt = timeit(lambda q, pp=p: kops.paged_attention(
+            q, k_pages, v_pages, tables, ctx,
+            pages_per_compute_block=pp), q_d)
+        rows.append(_csv(name, dt * 1e6,
+                         f"tok_s={B/dt:.0f} pages_per_block={p} "
+                         f"backend={backend}"))
+
+    C = 32
+    q_p = jnp.asarray(rng.normal(0, 1, (B, C, H, hd)), jnp.bfloat16)
+    q_lens = jnp.minimum(ctx, C)
+    dt = timeit(lambda q: kops.paged_prefill_attention(
+        q, k_pages, v_pages, tables, ctx, q_lens,
+        pages_per_compute_block=4), q_p)
+    rows.append(_csv("kernels/paged_prefill_mp", dt * 1e6,
+                     f"tok_s={int(q_lens.sum())/dt:.0f} pages_per_block=4 "
+                     f"backend={backend}"))
+
+    # ragged packed prefill: S=4 sequences' chunks in one flat T=64 batch,
+    # chunk KV scattered and attended in one op (fused on the Pallas path)
+    S, T = 4, 64
+    lens = np.full(S, T // S, np.int32)
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+    ends = (starts + lens).astype(np.int32)
+    row_seq = np.repeat(np.arange(S, dtype=np.int32), lens)
+    r_ctx = jnp.asarray(bs + lens, jnp.int32)     # one context block + chunk
+    r_tables = tables[:S]
+    q_r = jnp.asarray(rng.normal(0, 1, (T, H, hd)), jnp.bfloat16)
+    k_new = jnp.asarray(rng.normal(0, 1, (T, K, hd)), jnp.bfloat16)
+    v_new = jnp.asarray(rng.normal(0, 1, (T, K, hd)), jnp.bfloat16)
+    dt = timeit(lambda q: kops.ragged_prefill_update_attend(
+        q, k_new, v_new, k_pages, v_pages, r_tables, r_ctx,
+        jnp.asarray(starts), jnp.asarray(ends), jnp.asarray(row_seq)), q_r)
+    rows.append(_csv("kernels/ragged_prefill", dt * 1e6,
+                     f"tok_s={T/dt:.0f} packed_seqs={S} "
+                     f"backend={backend}"))
 
 
 # ---------------------------------------------------------------------------

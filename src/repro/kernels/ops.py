@@ -30,6 +30,15 @@ def _use_pallas() -> str | None:
     return None
 
 
+def _pages_per_block(pages_per_compute_block) -> int:
+    """KV pages fetched per paged-kernel grid step. Explicit argument wins;
+    ``REPRO_PAGES_PER_BLOCK`` sets the fleet-wide default (1 = the
+    single-page kernel, bit-for-bit)."""
+    if pages_per_compute_block is not None:
+        return int(pages_per_compute_block)
+    return int(os.environ.get("REPRO_PAGES_PER_BLOCK", "1"))
+
+
 # XLA-path dispatch: dense attention keeps a single bf16 (Sq,Skv) block per
 # head and is the right trade under layer remat up to this many kv positions;
 # beyond it the streaming chunked form bounds memory at O(chunk).
@@ -59,7 +68,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
-                    window=None, cap=None, scale=None):
+                    window=None, cap=None, scale=None,
+                    pages_per_compute_block=None):
     """Decode attention through a block table (serving hot path).
     See kernels/paged_attention.py; the XLA path densifies the gather."""
     mode = _use_pallas()
@@ -67,7 +77,9 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
         from repro.kernels import paged_attention as pa
         return pa.paged_attention(
             q, k_pages, v_pages, block_tables, ctx_lens, window=window,
-            cap=cap, scale=scale, interpret=(mode == "interpret"))
+            cap=cap, scale=scale, interpret=(mode == "interpret"),
+            pages_per_compute_block=_pages_per_block(
+                pages_per_compute_block))
     from repro.kernels.ref import paged_attention_ref
     return paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
                                window=window, cap=cap, scale=scale)
@@ -95,7 +107,8 @@ def paged_attention_partial(q, k_pages, v_pages, block_tables, ctx_lens,
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
-                            q_lens, *, window=None, cap=None, scale=None):
+                            q_lens, *, window=None, cap=None, scale=None,
+                            pages_per_compute_block=None):
     """Chunked-prefill attention through a block table: C queries per
     sequence, causally masked against the paged context. See
     kernels/paged_attention.py; the XLA path densifies the gather and
@@ -107,11 +120,63 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
         return pa.paged_prefill_attention(
             q, k_pages, v_pages, block_tables, ctx_lens, q_lens,
             window=window, cap=cap, scale=scale,
-            interpret=(mode == "interpret"))
+            interpret=(mode == "interpret"),
+            pages_per_compute_block=_pages_per_block(
+                pages_per_compute_block))
     from repro.models.attention import paged_chunk_attention_xla
     return paged_chunk_attention_xla(
         q, k_pages, v_pages, block_tables, ctx_lens, q_lens,
         window=window, cap=cap, scale=scale)
+
+
+def ragged_paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                   ctx_lens, starts, ends, row_seq, *,
+                                   window=None, cap=None, scale=None):
+    """Packed (ragged) chunked-prefill attention through per-sequence
+    block tables: chunks of several sequences ride one flat (T, H, hd)
+    batch, sequence s owning flat rows [starts[s], ends[s]). The chunk's
+    own KV must already be scattered into the pages. See
+    kernels/paged_attention.py; the XLA path gathers the packed rows into
+    the dense (S, T) layout and reuses the single-chunk rounding."""
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import paged_attention as pa
+        return pa.ragged_paged_prefill_attention(
+            q, k_pages, v_pages, block_tables, ctx_lens, starts, ends,
+            window=window, cap=cap, scale=scale,
+            interpret=(mode == "interpret"))
+    from repro.models.attention import ragged_chunk_attention_xla
+    return ragged_chunk_attention_xla(
+        q, k_pages, v_pages, block_tables, ctx_lens, starts, ends, row_seq,
+        window=window, cap=cap, scale=scale)
+
+
+def ragged_prefill_update_attend(q, k_new, v_new, k_pages, v_pages,
+                                 block_tables, ctx_lens, starts, ends,
+                                 row_seq, *, window=None, cap=None,
+                                 scale=None):
+    """Fused packed-prefill KV scatter + attention: returns
+    ``(o, k_pages, v_pages)``. On the Pallas path the scatter rides inside
+    the ragged kernel through aliased page-pool outputs (one launch, no
+    separate scatter pass); the XLA path scatters then attends — same pool
+    bytes, same outputs."""
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels import paged_attention as pa
+        return pa.ragged_paged_prefill_attention(
+            q, k_pages, v_pages, block_tables, ctx_lens, starts, ends,
+            k_new=k_new, v_new=v_new, window=window, cap=cap, scale=scale,
+            interpret=(mode == "interpret"))
+    from repro.models.attention import (ragged_chunk_attention_xla,
+                                        update_paged_cache_ragged)
+    kc = update_paged_cache_ragged(k_pages, k_new[None], block_tables,
+                                   ctx_lens, starts, ends, row_seq)
+    vc = update_paged_cache_ragged(v_pages, v_new[None], block_tables,
+                                   ctx_lens, starts, ends, row_seq)
+    o = ragged_chunk_attention_xla(
+        q, kc, vc, block_tables, ctx_lens, starts, ends, row_seq,
+        window=window, cap=cap, scale=scale)
+    return o, kc, vc
 
 
 def ssd(x, dt, A, B, C, *, chunk, h0=None):

@@ -12,6 +12,16 @@ an (m, l, acc) streaming-softmax state survives across blocks in VMEM
 scratch, exactly like ``flash_attention.py``. The block table and the
 context lengths are *scalar-prefetched* so the BlockSpec index maps can
 gather the right pool row per grid step — the pages are never densified.
+The B*K axis is megacore-partitioned (``dimension_semantics`` marks it
+"parallel"); the block axis stays "arbitrary" because the scratch
+accumulator is carried across it.
+
+``pages_per_compute_block`` batches several KV pages into one grid step:
+the kernel takes P separate (k, v) page operands — pool rows named by a
+block table are not contiguous, so each page needs its own BlockSpec index
+map — concatenates them into a (P*block_size, hd) tile and runs one matmul
+over it, cutting grid steps (and per-step DMA turnarounds) by P. P == 1
+reproduces the single-page kernel bit-for-bit.
 
 GQA uses the repo-wide g-major convention: q head h reads kv head h % K,
 so q is regrouped to (B*K, G, hd) and each program computes all G query
@@ -25,12 +35,18 @@ against the same paged context (C == 1 reproduces the decode kernel
 exactly). The serving engine uses it to stream long prompts in while other
 sequences keep decoding.
 
-Both kernels expose a *partial-softmax return path* for pool-sharded
-(multi-host) serving: with ``block_mask`` a shard attends only the table
-entries whose pages it holds (a shard-local block table — masked entries
-are skipped entirely, never read), and with ``return_lse=True`` it also
-returns each row's log-sum-exp so partials from different shards stitch
-exactly like ``models.attention.decode_attention`` stitches dense
+``ragged_paged_prefill_attention`` packs chunks of *several* sequences into
+one flat (T, H, hd) batch (per-sequence [start, end) row offsets, scalar-
+prefetched) so one jitted step can prefill many short prompts at once, and
+can optionally fuse the chunk's KV scatter into the same kernel via aliased
+page-pool outputs. See the function docstring for the layout contract.
+
+Both fixed-shape kernels expose a *partial-softmax return path* for
+pool-sharded (multi-host) serving: with ``block_mask`` a shard attends only
+the table entries whose pages it holds (a shard-local block table — masked
+entries are skipped entirely, never read), and with ``return_lse=True`` it
+also returns each row's log-sum-exp so partials from different shards
+stitch exactly like ``models.attention.decode_attention`` stitches dense
 flash-decode: ``o = Σ o_i·exp(lse_i - m) / Σ exp(lse_i - m)``. The stitch
 combiner lives in ``models.attention.stitch_paged_partials``; the oracle
 proving the math is ``kernels.ref.paged_shard_attention_ref``. The
@@ -51,16 +67,20 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1.0e30
 
 
-def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, k_ref, v_ref, o_ref,
-                   *rest, scale, cap, window, block_size, num_kv_heads,
-                   with_lse):
+def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, *rest, scale, cap,
+                   window, block_size, num_kv_heads, pages_per_block,
+                   table_width, with_lse):
+    P = pages_per_block
+    k_refs, v_refs = rest[:P], rest[P:2 * P]
+    o_ref = rest[2 * P]
+    tail = rest[2 * P + 1:]
     if with_lse:
-        lse_ref, m_scr, l_scr, acc_scr = rest
+        lse_ref, m_scr, l_scr, acc_scr = tail
     else:
-        m_scr, l_scr, acc_scr = rest
+        m_scr, l_scr, acc_scr = tail
     bk = pl.program_id(0)
     j = pl.program_id(1)
-    nb = pl.num_programs(1)
+    nj = pl.num_programs(1)
     b = bk // num_kv_heads
     ctx = ctx_ref[b]
 
@@ -70,18 +90,29 @@ def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    first_k = j * block_size
-    live = (first_k < ctx) & (mask_ref[b, j] != 0)
-    if window is not None:
-        live &= first_k + block_size - 1 > ctx - 1 - window
+    first_k = j * (P * block_size)
+    # per-page liveness; the step runs if any of its P pages is live
+    lives = []
+    for i in range(P):
+        entry = j * P + i
+        seg_first = first_k + i * block_size
+        li = (seg_first < ctx) & \
+            (mask_ref[b, jnp.minimum(entry, table_width - 1)] != 0)
+        if P > 1:
+            li &= entry < table_width
+        if window is not None:
+            li &= seg_first + block_size - 1 > ctx - 1 - window
+        lives.append(li)
+    live = functools.reduce(lambda a, c: a | c, lives)
 
     @pl.when(live)
     def _compute():
         q = q_ref[...].astype(jnp.float32)              # (G, hd)
-        k = k_ref[...].astype(jnp.float32)              # (block_size, hd)
+        k = jnp.concatenate(
+            [r[...] for r in k_refs], axis=0).astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale  # (G, block_size)
+            preferred_element_type=jnp.float32) * scale  # (G, P*block_size)
         if cap is not None:
             s = cap * jnp.tanh(s / cap)
         k_pos = first_k + jax.lax.broadcasted_iota(
@@ -89,6 +120,12 @@ def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, k_ref, v_ref, o_ref,
         mask = k_pos < ctx
         if window is not None:
             mask &= k_pos > ctx - 1 - window
+        if P > 1:
+            # columns of dead pages (past the table, masked out, or wholly
+            # past ctx) carry redirected/garbage KV — mask them out
+            col_ok = jnp.concatenate(
+                [jnp.broadcast_to(li, (block_size,)) for li in lives])
+            mask &= col_ok[None, :]
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
@@ -96,12 +133,13 @@ def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, k_ref, v_ref, o_ref,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         m_scr[...] = m_new
-        v = v_ref[...].astype(jnp.float32)              # (block_size, hd)
+        v = jnp.concatenate(
+            [r[...] for r in v_refs], axis=0).astype(jnp.float32)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
-    @pl.when(j == nb - 1)
+    @pl.when(j == nj - 1)
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-37)
         o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
@@ -117,15 +155,42 @@ def _head_major(o, B, K, G):
     return o.transpose(*perm).reshape(B, G * K, *tail)
 
 
+def _page_specs(nb, P, K, block_size, hd, n_extra_scalars):
+    """P (k, v) BlockSpecs, each fetching table entry j*P + i.
+
+    Entries past the table width (last grid step when P does not divide
+    nb) and block-masked entries redirect the fetch to pool row 0 so a
+    shard neither reads nor DMAs pages it does not hold; the kernel's
+    per-page liveness masks their columns.
+    """
+    def mk(i):
+        def page_index(bk, j, bt_ref, ctx_ref, *extra):
+            mask_ref = extra[n_extra_scalars]
+            b = bk // K
+            entry = jnp.minimum(j * P + i, nb - 1)
+            ok = (j * P + i < nb) & (mask_ref[b, entry] != 0)
+            return (jnp.where(ok, bt_ref[b, entry], 0), 0, bk % K, 0)
+        return page_index
+
+    return [pl.BlockSpec((None, block_size, None, hd), mk(i))
+            for i in range(P)]
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                     window=None, cap=None, scale=None, interpret=False,
-                    block_mask=None, return_lse=False):
+                    block_mask=None, return_lse=False,
+                    pages_per_compute_block=1):
     """q: (B, H, hd) one decode token per sequence.
     k_pages/v_pages: (num_blocks, block_size, K, hd).
     block_tables: (B, max_blocks_per_seq) int32 pool-row ids (padding rows
     are ignored past ctx). ctx_lens: (B,) int32 — tokens visible per
     sequence, 0 for an inactive slot (output row is zeros).
     Returns (B, H, hd) in q.dtype.
+
+    ``pages_per_compute_block`` fetches that many KV pages per grid step
+    (one matmul over the concatenated tile); 1 reproduces the single-page
+    kernel bit-for-bit, larger values cut the grid (and DMA turnarounds)
+    by the same factor at identical math up to fp reduction order.
 
     ``block_mask`` (B, max_blocks_per_seq) selects the table entries this
     shard holds pages for (None = all): masked entries are skipped, never
@@ -141,6 +206,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     _, block_size, K, _ = k_pages.shape
     G = H // K
     nb = block_tables.shape[1]
+    P = max(1, min(int(pages_per_compute_block), nb))
     scale = hd ** -0.5 if scale is None else scale
     if block_mask is None:
         block_mask = jnp.ones((B, nb), jnp.int32)
@@ -148,17 +214,10 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     # g-major regroup: (B, H, hd) -> (B, G, K, hd) -> (B*K, G, hd)
     qg = q.reshape(B, G, K, hd).transpose(0, 2, 1, 3).reshape(B * K, G, hd)
 
-    def page_index(bk, j, bt_ref, ctx_ref, mask_ref):
-        # masked entries redirect the fetch to pool row 0 (never used —
-        # the kernel's `live` guard skips their compute): a shard neither
-        # reads nor DMAs pages it does not hold
-        b = bk // K
-        return (jnp.where(mask_ref[b, j] != 0, bt_ref[b, j], 0),
-                0, bk % K, 0)
-
     kernel = functools.partial(
         _decode_kernel, scale=scale, cap=cap, window=window,
-        block_size=block_size, num_kv_heads=K, with_lse=return_lse)
+        block_size=block_size, num_kv_heads=K, pages_per_block=P,
+        table_width=nb, with_lse=return_lse)
 
     out_specs = pl.BlockSpec((None, G, hd), lambda bk, j, *_: (bk, 0, 0))
     if return_lse:
@@ -172,13 +231,14 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     else:
         out_shape = jax.ShapeDtypeStruct((B * K, G, hd), q.dtype)
 
+    page_specs = _page_specs(nb, P, K, block_size, hd, n_extra_scalars=0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(B * K, nb),
+        grid=(B * K, pl.cdiv(nb, P)),
         in_specs=[
             pl.BlockSpec((None, G, hd), lambda bk, j, *_: (bk, 0, 0)),
-            pl.BlockSpec((None, block_size, None, hd), page_index),
-            pl.BlockSpec((None, block_size, None, hd), page_index),
+            *page_specs,
+            *page_specs,
         ],
         out_specs=out_specs,
         scratch_shapes=[
@@ -193,8 +253,11 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
-      block_mask.astype(jnp.int32), qg, k_pages, v_pages)
+      block_mask.astype(jnp.int32), qg,
+      *([k_pages] * P), *([v_pages] * P))
 
     if return_lse:
         o, lse = o
@@ -203,9 +266,9 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     return _head_major(o, B, K, G)
 
 
-def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, k_ref, v_ref,
-                  o_ref, *rest, scale, cap, window, block_size,
-                  num_kv_heads, num_groups, with_lse):
+def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, *rest, scale,
+                  cap, window, block_size, num_kv_heads, num_groups,
+                  pages_per_block, table_width, with_lse):
     """Multi-query sibling of ``_decode_kernel`` for chunked prefill.
 
     One program owns all C chunk queries of one (sequence, kv-head) pair;
@@ -215,13 +278,17 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, k_ref, v_ref,
     the streaming softmax (p zeroed where masked, not exp(0)) keeps their
     (l, acc) at zero so they finalize to zeros.
     """
+    P = pages_per_block
+    k_refs, v_refs = rest[:P], rest[P:2 * P]
+    o_ref = rest[2 * P]
+    tail = rest[2 * P + 1:]
     if with_lse:
-        lse_ref, m_scr, l_scr, acc_scr = rest
+        lse_ref, m_scr, l_scr, acc_scr = tail
     else:
-        m_scr, l_scr, acc_scr = rest
+        m_scr, l_scr, acc_scr = tail
     bk = pl.program_id(0)
     j = pl.program_id(1)
-    nb = pl.num_programs(1)
+    nj = pl.num_programs(1)
     b = bk // num_kv_heads
     ctx = ctx_ref[b]                 # visible tokens incl. the whole chunk
     qlen = qlen_ref[b]
@@ -234,20 +301,30 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, k_ref, v_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    first_k = j * block_size
-    live = (first_k < ctx) & (mask_ref[b, j] != 0)
-    if window is not None:
-        # earliest in-window key over the chunk: qstart - window + 1
-        live &= first_k + block_size - 1 > qstart - window
+    first_k = j * (P * block_size)
+    lives = []
+    for i in range(P):
+        entry = j * P + i
+        seg_first = first_k + i * block_size
+        li = (seg_first < ctx) & \
+            (mask_ref[b, jnp.minimum(entry, table_width - 1)] != 0)
+        if P > 1:
+            li &= entry < table_width
+        if window is not None:
+            # earliest in-window key over the chunk: qstart - window + 1
+            li &= seg_first + block_size - 1 > qstart - window
+        lives.append(li)
+    live = functools.reduce(lambda a, c: a | c, lives)
 
     @pl.when(live)
     def _compute():
         C = q_ref.shape[0]
         q = q_ref[...].astype(jnp.float32).reshape(C * G, -1)  # (C*G, hd)
-        k = k_ref[...].astype(jnp.float32)              # (block_size, hd)
+        k = jnp.concatenate(
+            [r[...] for r in k_refs], axis=0).astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale  # (C*G, block_size)
+            preferred_element_type=jnp.float32) * scale  # (C*G, P*bs)
         if cap is not None:
             s = cap * jnp.tanh(s / cap)
         k_pos = first_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -256,6 +333,10 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, k_ref, v_ref,
         mask = (k_pos <= q_pos) & (row < qlen)
         if window is not None:
             mask &= k_pos > q_pos - window
+        if P > 1:
+            col_ok = jnp.concatenate(
+                [jnp.broadcast_to(li, (block_size,)) for li in lives])
+            mask &= col_ok[None, :]
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
@@ -265,12 +346,13 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, k_ref, v_ref,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         m_scr[...] = m_new
-        v = v_ref[...].astype(jnp.float32)              # (block_size, hd)
+        v = jnp.concatenate(
+            [r[...] for r in v_refs], axis=0).astype(jnp.float32)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
-    @pl.when(j == nb - 1)
+    @pl.when(j == nj - 1)
     def _finalize():
         C = o_ref.shape[0]
         l = jnp.maximum(l_scr[...], 1e-37)
@@ -283,7 +365,7 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, k_ref, v_ref,
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                             q_lens, *, window=None, cap=None, scale=None,
                             interpret=False, block_mask=None,
-                            return_lse=False):
+                            return_lse=False, pages_per_compute_block=1):
     """Chunked-prefill attention against a paged KV cache.
 
     q: (B, C, H, hd) — C chunk queries per sequence; row i sits at absolute
@@ -292,14 +374,14 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     pages). q_lens: (B,) valid rows; padding rows produce zeros, as does a
     wholly inactive sequence (q_len == 0). Returns (B, C, H, hd) in q.dtype.
 
-    ``block_mask`` / ``return_lse`` are the shard-local-table and
-    partial-softmax options described on :func:`paged_attention`; the lse
-    output is (B, C, H) fp32.
+    ``pages_per_compute_block`` / ``block_mask`` / ``return_lse`` are as on
+    :func:`paged_attention`; the lse output is (B, C, H) fp32.
     """
     B, C, H, hd = q.shape
     _, block_size, K, _ = k_pages.shape
     G = H // K
     nb = block_tables.shape[1]
+    P = max(1, min(int(pages_per_compute_block), nb))
     scale = hd ** -0.5 if scale is None else scale
     if block_mask is None:
         block_mask = jnp.ones((B, nb), jnp.int32)
@@ -308,15 +390,10 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     qg = q.reshape(B, C, G, K, hd).transpose(0, 3, 1, 2, 4) \
         .reshape(B * K, C, G, hd)
 
-    def page_index(bk, j, bt_ref, ctx_ref, qlen_ref, mask_ref):
-        b = bk // K                    # masked -> row 0; see paged_attention
-        return (jnp.where(mask_ref[b, j] != 0, bt_ref[b, j], 0),
-                0, bk % K, 0)
-
     kernel = functools.partial(
         _chunk_kernel, scale=scale, cap=cap, window=window,
         block_size=block_size, num_kv_heads=K, num_groups=G,
-        with_lse=return_lse)
+        pages_per_block=P, table_width=nb, with_lse=return_lse)
 
     out_specs = pl.BlockSpec((None, C, G, hd),
                              lambda bk, j, *_: (bk, 0, 0, 0))
@@ -330,14 +407,15 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     else:
         out_shape = jax.ShapeDtypeStruct((B * K, C, G, hd), q.dtype)
 
+    page_specs = _page_specs(nb, P, K, block_size, hd, n_extra_scalars=1)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
-        grid=(B * K, nb),
+        grid=(B * K, pl.cdiv(nb, P)),
         in_specs=[
             pl.BlockSpec((None, C, G, hd),
                          lambda bk, j, *_: (bk, 0, 0, 0)),
-            pl.BlockSpec((None, block_size, None, hd), page_index),
-            pl.BlockSpec((None, block_size, None, hd), page_index),
+            *page_specs,
+            *page_specs,
         ],
         out_specs=out_specs,
         scratch_shapes=[
@@ -352,9 +430,11 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
       q_lens.astype(jnp.int32), block_mask.astype(jnp.int32),
-      qg, k_pages, v_pages)
+      qg, *([k_pages] * P), *([v_pages] * P))
 
     def head_major(x):
         # (B*K, C, G, t) -> (B, K, C, G, t) -> (B, C, G, K, t) -> (B, C, H, t)
@@ -366,3 +446,224 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
         o, lse = o
         return head_major(o), head_major(lse)[..., 0]
     return head_major(o)
+
+
+def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, k_ref, v_ref,
+                   *rest, scale, cap, window, block_size, num_kv_heads,
+                   num_groups, with_write):
+    """Packed multi-sequence prefill over one flat (T, G, hd) query batch.
+
+    Grid (K, S, nb): program (k, s, j) attends *all* T flat rows against
+    kv block j of packed sequence s, masking rows outside [start_s, end_s)
+    — each row's (m, l, acc) state only ever advances while its owning
+    sequence is being swept, so the streaming softmax per row sees exactly
+    that sequence's keys. The output tile is indexed by k alone and stays
+    VMEM-resident across (s, j); each sequence's finalize merges only its
+    own rows (read-modify-write), rows owned by nobody stay zero.
+
+    With ``with_write`` the chunk's own KV (flat, same row layout as q)
+    rides along and each page fetched is *merged* — chunk rows whose
+    absolute position lands in this page replace the stale pool rows via a
+    (block_size, T) one-hot matmul — before the attention reads it, then
+    written back through aliased page-pool outputs: the scatter that
+    ``update_paged_cache_ragged`` does as a separate XLA pass is fused
+    into the same kernel launch.
+    """
+    if with_write:
+        kc_ref, vc_ref, o_ref, ko_ref, vo_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    s_id = pl.program_id(1)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    start = start_ref[s_id]
+    end = end_ref[s_id]
+    ctx = ctx_ref[s_id]
+    qlen = end - start
+    qstart = ctx - qlen              # absolute position of flat row `start`
+    G = num_groups
+    T = q_ref.shape[0]
+
+    @pl.when((s_id == 0) & (j == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j == 0)
+    def _init_scratch():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    first_k = j * block_size
+    active = start < end
+    live = (first_k < ctx) & active
+    if window is not None:
+        live &= first_k + block_size - 1 > qstart - window
+
+    if with_write:
+        # fused chunk-KV scatter: merge this sequence's chunk rows whose
+        # absolute position falls in this page, write the page back
+        # (unchanged when no row lands here — dead/redirected pages too)
+        p_col = first_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_size, 1), 0)                  # (bs, 1)
+        in_chunk = (p_col >= qstart) & (p_col < ctx) & active
+        t_col = start + (p_col - qstart)                    # flat row per col
+        t_row = jax.lax.broadcasted_iota(
+            jnp.int32, (block_size, T), 1)
+        sel = ((t_col == t_row) & in_chunk).astype(jnp.float32)
+        k_blk = jnp.where(
+            in_chunk,
+            jax.lax.dot_general(
+                sel, kc_ref[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(ko_ref.dtype),
+            k_ref[...])
+        v_blk = jnp.where(
+            in_chunk,
+            jax.lax.dot_general(
+                sel, vc_ref[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(vo_ref.dtype),
+            v_ref[...])
+        ko_ref[...] = k_blk
+        vo_ref[...] = v_blk
+    else:
+        k_blk = k_ref[...]
+        v_blk = v_ref[...]
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32).reshape(T * G, -1)  # (T*G, hd)
+        k = k_blk.astype(jnp.float32)                   # (block_size, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (T*G, block_size)
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        k_pos = first_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        q_pos = qstart + (row - start)
+        mask = (row >= start) & (row < end) & (k_pos <= q_pos)
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        # masked-row guard as in _chunk_kernel: rows outside this
+        # sequence must not accumulate
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_blk.astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((j == nj - 1) & active)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        res = (acc_scr[...] / l).astype(o_ref.dtype).reshape(T, G, -1)
+        row = jax.lax.broadcasted_iota(jnp.int32, (T, 1, 1), 0)
+        mine = (row >= start) & (row < end)
+        o_ref[...] = jnp.where(mine, res, o_ref[...])
+
+
+def ragged_paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                   ctx_lens, starts, ends, *, k_new=None,
+                                   v_new=None, window=None, cap=None,
+                                   scale=None, interpret=False):
+    """Packed (ragged) chunked-prefill attention against a paged KV cache.
+
+    q: (T, H, hd) — chunks of up to S sequences packed back to back into
+    one flat token batch. Sequence s owns flat rows [starts[s], ends[s]);
+    its row i sits at absolute position ``ctx_lens[s] - (ends[s] -
+    starts[s]) + i`` and attends causally to that sequence's paged context
+    (block_tables: (S, max_blocks_per_seq); ctx_lens counts the chunk
+    itself). ``starts[s] == ends[s]`` marks an unused pack slot; flat rows
+    owned by no sequence produce zeros. Returns (T, H, hd) in q.dtype.
+
+    With ``k_new``/``v_new`` ((T, K, hd), same flat row layout as q) the
+    chunk's KV scatter is *fused*: the kernel merges chunk rows into each
+    page it fetches before attending and writes the pages back in place
+    (aliased outputs), returning ``(o, k_pages, v_pages)``. Without them
+    the pages must already contain the chunk KV and only ``o`` returns.
+    """
+    T, H, hd = q.shape
+    _, block_size, K, _ = k_pages.shape
+    G = H // K
+    S = starts.shape[0]
+    nb = block_tables.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    with_write = k_new is not None
+    if with_write and v_new is None:
+        raise ValueError("k_new and v_new must be given together")
+
+    # g-major regroup: (T, H, hd) -> (T, G, K, hd) -> (K, T, G, hd)
+    qg = q.reshape(T, G, K, hd).transpose(2, 0, 1, 3)
+
+    def page_index(k, s, j, bt_ref, ctx_ref, *extra):
+        # entries wholly past the context redirect to pool row 0 (never
+        # attended: the liveness guard skips them)
+        return (jnp.where(j * block_size < ctx_ref[s], bt_ref[s, j], 0),
+                0, k, 0)
+
+    def page_index_(k, s, j, starts_ref, ends_ref, ctx_ref, bt_ref):
+        return page_index(k, s, j, bt_ref, ctx_ref)
+
+    kernel = functools.partial(
+        _ragged_kernel, scale=scale, cap=cap, window=window,
+        block_size=block_size, num_kv_heads=K, num_groups=G,
+        with_write=with_write)
+
+    q_spec = pl.BlockSpec((None, T, G, hd), lambda k, s, j, *_: (k, 0, 0, 0))
+    page_spec = pl.BlockSpec((None, block_size, None, hd), page_index_)
+    in_specs = [q_spec, page_spec, page_spec]
+    out_specs = [pl.BlockSpec((None, T, G, hd),
+                              lambda k, s, j, *_: (k, 0, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((K, T, G, hd), q.dtype)]
+    operands = [qg, k_pages, v_pages]
+    aliases = {}
+    if with_write:
+        new_spec = pl.BlockSpec((T, None, hd), lambda k, s, j, *_: (0, k, 0))
+        in_specs += [new_spec, new_spec]
+        operands += [k_new, v_new]
+        out_specs += [page_spec, page_spec]
+        out_shape += [jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                      jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)]
+        # flattened operand order: 4 prefetched scalars, q, k_pages,
+        # v_pages, k_new, v_new -> pages alias the page outputs in place
+        aliases = {5: 1, 6: 2}
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(K, S, nb),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs) if with_write else out_specs[0],
+        scratch_shapes=[
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=tuple(out_shape) if with_write else out_shape[0],
+        interpret=interpret,
+        input_output_aliases=aliases,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+    )(starts.astype(jnp.int32), ends.astype(jnp.int32),
+      ctx_lens.astype(jnp.int32), block_tables.astype(jnp.int32),
+      *operands)
+
+    def flat_head_major(o):
+        # (K, T, G, hd) -> (T, G, K, hd) -> (T, H, hd)
+        return o.transpose(1, 2, 0, 3).reshape(T, H, hd)
+
+    if with_write:
+        o, kc, vc = out
+        return flat_head_major(o), kc, vc
+    return flat_head_major(out)

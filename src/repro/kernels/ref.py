@@ -196,6 +196,59 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
     return o.reshape(B, C, H, hd).astype(q.dtype)
 
 
+def ragged_paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
+                                       ctx_lens, starts, ends, row_seq, *,
+                                       window=None, cap=None, scale=None):
+    """Packed (ragged) multi-sequence chunked-prefill oracle.
+
+    q: (T, H, hd) — chunks of up to S sequences packed into one flat token
+    batch; sequence s owns flat rows [starts[s], ends[s]) and row_seq maps
+    each flat row to its owner. Flat row t (owned by s) is the query at
+    absolute position ``ctx_lens[s] - (ends[s] - starts[s]) + (t -
+    starts[s])`` and attends causally to sequence s's keys gathered through
+    block_tables[s] (the chunk's own KV assumed already scattered). Rows
+    owned by no sequence (t outside every [start, end)) produce zeros.
+    S == 1 with starts = [0] reduces to ``paged_prefill_attention_ref``
+    with B == 1.
+    """
+    T, H, hd = q.shape
+    _, bs, K, _ = k_pages.shape
+    G = H // K
+    S = starts.shape[0]
+    scale = hd ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(S, -1, K, hd)       # (S, E, K, hd)
+    v = v_pages[block_tables].reshape(S, -1, K, hd)
+    E = k.shape[1]
+    qg = q.reshape(T, G, K, hd)
+    logits = jnp.einsum("tgkh,sekh->tgkse", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    t = jnp.arange(T)
+    own = (t[:, None] >= starts[None]) & (t[:, None] < ends[None]) \
+        & (row_seq[:, None] == jnp.arange(S)[None])                  # (T, S)
+    q_pos = (ctx_lens - (ends - starts))[row_seq] + (t - starts[row_seq])
+    k_pos = jnp.arange(E)
+    ok = own[:, :, None] & (k_pos[None, None] <= q_pos[:, None, None])
+    if window is not None:
+        ok &= k_pos[None, None] > q_pos[:, None, None] - window
+    ok = ok[:, None, None]                                # (T, 1, 1, S, E)
+    logits = jnp.where(ok, logits, -1e30)
+    # one softmax over the flattened (sequence, key) axes: exactly one
+    # sequence is unmasked per row, so this is that sequence's softmax
+    flat = logits.reshape(T, G, K, S * E)
+    okf = ok.reshape(T, 1, 1, S * E)
+    mx = flat.max(axis=-1)
+    p = jnp.exp(flat - mx[..., None])
+    p = jnp.where(okf, p, 0.0)            # unowned rows -> all zero
+    sm = jnp.maximum(p.sum(axis=-1), 1e-37)
+    p = (p / sm[..., None]).astype(v.dtype)   # normalize-then-cast; see
+    o = jnp.einsum("tgkf,fkh->tgkh",          # paged_attention_ref
+                   p, v.reshape(S * E, K, hd),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(T, H, hd).astype(q.dtype)
+
+
 def ssd_ref(x, dt, A, B, C, h0=None):
     """Exact SSD recurrence, step by step (lax.scan over time).
 

@@ -81,7 +81,8 @@ def build_engine(cfg, mesh, args):
         max_num_batched_tokens=args.max_batched_tokens,
         enable_prefix_caching=not args.no_prefix_caching,
         draft_cfg=draft_cfg,
-        num_speculative_tokens=args.num_speculative_tokens)
+        num_speculative_tokens=args.num_speculative_tokens,
+        prefill_pack=args.prefill_pack)
 
 
 def build_controller(args):
@@ -142,7 +143,8 @@ def run_engine(cfg, mesh, args):
     s["wall_s"] = round(dt, 3)
     s["tok_s"] = round((s["tokens"] - tok0) / max(dt, 1e-9), 1)
     print(f"[serve] mesh=data={mesh.shape['data']},model="
-          f"{mesh.shape['model']} tp={eng.tp}")
+          f"{mesh.shape['model']} tp={eng.tp} "
+          f"prefill_pack={eng.prefill_pack}")
     print(f"[serve] runner={type(eng.runner).__name__} {len(reqs)} requests "
           f"(poisson rate={args.rate}/step, arrivals={arrivals}), "
           f"{s['tokens']} tokens in {s['wall_s']:.2f}s "
@@ -220,6 +222,10 @@ def main():
                     "prefill chunk (default: max_batch + 2*block_size)")
     ap.add_argument("--no-prefix-caching", action="store_true",
                     help="disable cross-request KV block sharing")
+    ap.add_argument("--prefill-pack", type=int, default=1,
+                    help="max prefill chunks packed into one step's flat "
+                    "ragged token batch (1 = classic single-chunk; >1 "
+                    "needs a packed-prefill-capable runner)")
     ap.add_argument("--speculative-draft", default=None,
                     help="draft-model arch for speculative decoding "
                     "(defaults to --arch, i.e. a fresh-init self-draft, "

@@ -344,6 +344,33 @@ def update_paged_cache_chunk(pages, new, block_tables, q_start, q_lens):
             new.reshape(B * C, *new.shape[2:]).astype(pages.dtype)))
 
 
+def update_paged_cache_ragged(pages, new, block_tables, ctx_lens, starts,
+                              ends, row_seq):
+    """Scatter a packed (ragged) multi-sequence chunk of KV into pages.
+
+    pages: (num_blocks, block_size, K, hd); new: (1, T, K, hd) — chunks of
+    up to S sequences packed back to back; sequence s owns flat rows
+    [starts[s], ends[s]) and row_seq maps each flat row to its owner. Flat
+    row t lands at absolute position ``ctx_lens[s] - (ends[s] - starts[s])
+    + (t - starts[s])`` in sequence s's block table. Rows owned by nobody
+    are routed to the reserved trash block 0, exactly like the padding
+    rows of :func:`update_paged_cache_chunk` — same values, same
+    destination rows, so the pool contents match the single-chunk path
+    bit for bit.
+    """
+    bs = pages.shape[1]
+    T = new.shape[1]
+    nb = block_tables.shape[1]
+    t = jnp.arange(T, dtype=jnp.int32)
+    q_start = (ctx_lens - (ends - starts))[row_seq]           # (T,)
+    valid = (t >= starts[row_seq]) & (t < ends[row_seq])
+    pos = jnp.where(valid, q_start + (t - starts[row_seq]), 0)
+    idx = jnp.clip(pos // bs, 0, nb - 1)
+    blk = jnp.where(valid, block_tables[row_seq, idx], 0)
+    return _constrain_pool(
+        pages.at[blk, pos % bs].set(new[0].astype(pages.dtype)))
+
+
 def replicate_over_model(x):
     """Gather ``x`` to replicated when the mesh has a nontrivial "model"
     axis (no-op otherwise). The serving TP invariant hangs on this: state
@@ -530,6 +557,105 @@ def paged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
     p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     o = jnp.einsum("bgkqs,bskh->bqgkh", p, v)
     return o.reshape(B, C, H, hd).astype(q.dtype)
+
+
+def ragged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
+                               starts, ends, row_seq, *, window=None,
+                               cap=None, scale=None):
+    """Pure-XLA packed (ragged) chunked-prefill path.
+
+    q: (T, H, hd) flat packed rows (layout contract on
+    ``kernels.ref.ragged_paged_prefill_attention_ref``). Gathers each
+    packed sequence's rows into the dense (S, T, H, hd) layout, runs
+    ``paged_chunk_attention_xla`` — the *same function, same op order* the
+    single-chunk engine path uses, just with S batch rows instead of 1 —
+    and scatters the rows back flat. The gather/scatter are exact copies,
+    so per-row outputs match the single-chunk path bit for bit; rows owned
+    by no sequence come back zero.
+    """
+    T = q.shape[0]
+    t = jnp.arange(T, dtype=jnp.int32)
+    q_lens = ends - starts
+    gidx = jnp.clip(starts[:, None] + t[None], 0, T - 1)      # (S, T)
+    od = paged_chunk_attention_xla(
+        q[gidx], k_pages, v_pages, block_tables, ctx_lens, q_lens,
+        window=window, cap=cap, scale=scale)                  # (S, T, H, hd)
+    off = jnp.clip(t - starts[row_seq], 0, T - 1)
+    o = od[row_seq, off]                                      # (T, H, hd)
+    valid = (t >= starts[row_seq]) & (t < ends[row_seq])
+    return jnp.where(valid[:, None, None], o, 0.0).astype(q.dtype)
+
+
+def ragged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                           starts, ends, row_seq, *, window=None, cap=None,
+                           scale=None):
+    """Packed (ragged) chunked-prefill attention via block tables: chunks
+    of up to S sequences ride one flat (1, T, H, hd) token batch, each row
+    attending causally to its owner's paged context (the chunk's KV
+    already scattered in). Sharded over kv heads exactly like
+    :func:`paged_chunk_attention` when the mesh allows."""
+    from repro.kernels import ops as kops
+    _, T, H, hd = q.shape
+    K = k_pages.shape[2]
+    scale = hd ** -0.5 if scale is None else scale
+    tp, mesh = _paged_tp(K)
+    if tp == 1:
+        o = kops.ragged_paged_prefill_attention(
+            q[0], k_pages, v_pages, block_tables, ctx_lens, starts, ends,
+            row_seq, window=window, cap=cap, scale=scale)
+        return o[None].astype(q.dtype)
+    G = H // K
+    qg = q[0].reshape(T, G, K, hd)            # g-major; see dense_attention
+
+    def body(qg, kp, vp, bt, ctx, st, en, rs):
+        K_l = kp.shape[2]
+        o = kops.ragged_paged_prefill_attention(
+            qg.reshape(T, G * K_l, hd), kp, vp, bt, ctx, st, en, rs,
+            window=window, cap=cap, scale=scale)
+        return o.reshape(T, G, K_l, hd)
+
+    o = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, "model", None),
+                  P(None, None, "model", None),
+                  P(None, None, "model", None), P(None, None), P(None),
+                  P(None), P(None), P(None)),
+        out_specs=P(None, None, "model", None),
+    )(qg, k_pages, v_pages, block_tables, ctx_lens, starts, ends, row_seq)
+    return replicate_over_model(o).reshape(1, T, H, hd).astype(q.dtype)
+
+
+def ragged_chunk_update_attend(q, k_new, v_new, k_pages, v_pages,
+                               block_tables, ctx_lens, starts, ends,
+                               row_seq, *, window=None, cap=None,
+                               scale=None):
+    """Scatter a packed chunk's KV into the pages and attend, fused when
+    the backend allows.
+
+    q: (1, T, H, hd); k_new/v_new: (1, T, K, hd) — same flat row layout.
+    Returns ``(o, k_pages, v_pages)``. On the single-shard Pallas path the
+    scatter rides inside the ragged kernel (aliased page outputs); the XLA
+    path and the kv-head-sharded mesh path run
+    :func:`update_paged_cache_ragged` then the attend — same pool bytes,
+    same outputs.
+    """
+    from repro.kernels import ops as kops
+    K = k_pages.shape[2]
+    tp, _ = _paged_tp(K)
+    if tp == 1:
+        o, kc, vc = kops.ragged_prefill_update_attend(
+            q[0], k_new[0], v_new[0], k_pages, v_pages, block_tables,
+            ctx_lens, starts, ends, row_seq, window=window, cap=cap,
+            scale=scale)
+        return o[None].astype(q.dtype), kc, vc
+    kc = update_paged_cache_ragged(k_pages, k_new, block_tables, ctx_lens,
+                                   starts, ends, row_seq)
+    vc = update_paged_cache_ragged(v_pages, v_new, block_tables, ctx_lens,
+                                   starts, ends, row_seq)
+    o = ragged_chunk_attention(q, kc, vc, block_tables, ctx_lens, starts,
+                               ends, row_seq, window=window, cap=cap,
+                               scale=scale)
+    return o, kc, vc
 
 
 def attention_scale(cfg: ModelConfig) -> float:

@@ -35,8 +35,9 @@ from repro.models.attention import (attention_scale, decode_attention,
                                     init_attention, out_proj,
                                     paged_chunk_attention,
                                     paged_decode_attention, project_kv,
-                                    project_q, sharded_attention,
-                                    update_cache, update_paged_cache,
+                                    project_q, ragged_chunk_update_attend,
+                                    sharded_attention, update_cache,
+                                    update_paged_cache,
                                     update_paged_cache_chunk)
 from repro.models.embedding import (decode_logits, decode_logits_argmax,
                                     embed, head_table, init_embedding,
@@ -207,6 +208,26 @@ def _attn_chunk_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
     return x + y, {"k": kc, "v": vc}
 
 
+def _attn_ragged_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
+    """Packed (ragged) chunked-prefill attention against a block-paged KV
+    cache: chunks of several sequences ride one flat (1, T, d) row batch.
+    The KV scatter and the attention run as one fused op on the Pallas
+    path; row-wise projections/MLP are shared across the pack."""
+    window = cfg.sliding_window if kind == "local" else None
+    h = apply_norm(bp["norm"], x, cfg)
+    q = project_q(bp["attn"], h, cfg, ctx["cos_sin"])
+    k, v = project_kv(bp["attn"], h, cfg, ctx["cos_sin"])
+    y, kc, vc = ragged_chunk_update_attend(
+        q, k, v, cache["k"], cache["v"], ctx["block_tables"],
+        ctx["ctx_lens"], ctx["starts"], ctx["ends"], ctx["row_seq"],
+        window=window, cap=cfg.attn_logit_softcap,
+        scale=attention_scale(cfg))
+    y = out_proj(bp["attn"], y, x.dtype)
+    if cfg.post_block_norm:
+        y = apply_norm(bp["post_norm"], y, cfg)
+    return x + y, {"k": kc, "v": vc}
+
+
 def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):
     """Returns (x, new_cache, aux)."""
     zero = jnp.zeros((), jnp.float32)
@@ -221,8 +242,16 @@ def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):
             y, st = ssm_mod.mamba_chunk(bp["mamba"], h, cfg, cache,
                                         ctx["q_lens"])
             return x + y, st, zero
+        if mode == "ragged_paged":
+            raise NotImplementedError(
+                "packed prefill needs per-row chunk state; SSM blocks are "
+                "gated out by ModelRunner.supports_packed_prefill")
         y, st = ssm_mod.mamba_block(bp["mamba"], h, cfg)
         return x + y, (st if mode == "prefill" else None), zero
+    if mode == "ragged_paged":
+        x, c = _attn_ragged_paged(bp, x, cfg, ctx, cache, kind)
+        x, aux = _mlp_part(bp, x, cfg, ctx)
+        return x, c, aux
     if mode == "chunk_paged":
         x, c = _attn_chunk_paged(bp, x, cfg, ctx, cache, kind)
         x, aux = _mlp_part(bp, x, cfg, ctx)
@@ -294,7 +323,7 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
 
     def body(carry, xs):
         x, aux = carry
-        if mode in ("decode", "decode_paged", "chunk_paged"):
+        if mode in ("decode", "decode_paged", "chunk_paged", "ragged_paged"):
             bslices, cslices = xs
         else:
             bslices, cslices = xs, None
@@ -331,7 +360,7 @@ def _scan_periods(params, x, cfg: ModelConfig, ctx, mode: str,
         body = jax.checkpoint(body, policy=policy, prevent_cse=False)
 
     xs = ((params["blocks"], cache)
-          if mode in ("decode", "decode_paged", "chunk_paged")
+          if mode in ("decode", "decode_paged", "chunk_paged", "ragged_paged")
           else params["blocks"])
     (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
     return x, aux, caches
@@ -434,6 +463,46 @@ def prefill_chunk_paged(params, cache, batch, cfg: ModelConfig,
         return logits.reshape(B, C, -1), new_cache
     last = jnp.clip(batch["q_lens"] - 1, 0, C - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B,1,d)
+    logits = decode_logits(x_last, ht, cfg)
+    return logits, new_cache
+
+
+def prefill_chunk_ragged(params, cache, batch, cfg: ModelConfig,
+                         pcfg: ParallelConfig):
+    """Packed (ragged) prompt prefill: chunks of up to S sequences ride one
+    flat token batch against the block-paged KV cache.
+
+    batch: tokens (1, T) chunks packed back to back (right-padded),
+    positions (1, T) each row's absolute position, starts/ends (S,) flat
+    row ranges per packed sequence (start == end marks an unused pack
+    slot), row_seq (T,) each row's owning pack slot, block_tables (S, nb),
+    ctx_lens (S,) visible tokens including each chunk.
+    Returns (logits (S, V_pad) fp32 at each sequence's last packed row,
+    new_cache). Row-wise work (embedding, norms, projections, MLP) runs
+    once over the flat batch; only the attention is per-sequence. S == 1
+    is the single-chunk path in a different layout — the engine keeps
+    outputs byte-identical across the two (tests pin it).
+    """
+    tokens = batch["tokens"]
+    _, T = tokens.shape
+    assert cfg.rope_sections is None, "packed prefill: no M-RoPE frontends"
+    assert cfg.ssm is None and not cfg.shared_attn_period, \
+        "packed prefill is attention-only (see supports_packed_prefill)"
+    x = embed(params["embed"]["table"], tokens, cfg)
+    cos_sin = (rope_cos_sin(batch["positions"], cfg.head_dim, cfg.rope_theta,
+                            cfg.rope_sections) if cfg.num_heads else None)
+    ctx = {"cos_sin": cos_sin, "pos": None,
+           "starts": batch["starts"], "ends": batch["ends"],
+           "row_seq": batch["row_seq"],
+           "block_tables": batch["block_tables"],
+           "ctx_lens": batch["ctx_lens"],
+           "moe_f2d": bool(pcfg and pcfg.expert_ff_2d)}
+    x, _, new_cache = _scan_periods(params, x, cfg, ctx, "ragged_paged",
+                                    ParallelConfig(remat="none"), cache)
+    x = apply_norm(params["final_norm"], x, cfg)
+    ht = head_table(params["embed"], cfg)
+    last = jnp.clip(batch["ends"] - 1, 0, T - 1)                   # (S,)
+    x_last = jnp.take(x[0], last, axis=0)[:, None]                 # (S,1,d)
     logits = decode_logits(x_last, ht, cfg)
     return logits, new_cache
 

@@ -69,6 +69,39 @@ __all__ = ["InferenceEngine", "Request", "SamplingParams"]
 LATENCY_RECORD_CAP = 4096
 
 
+def pack_ragged(rows: list[np.ndarray], width: int,
+                max_seqs: int) -> tuple[np.ndarray, np.ndarray,
+                                        np.ndarray, np.ndarray]:
+    """Pack variable-length rows back-to-back into the flat ragged-batch
+    layout: ``(tok (width,), seq (width,), starts (S,), ends (S,))`` with
+    row i owning flat positions ``[starts[i], ends[i])`` and ``seq``
+    holding the owner id per flat position (pad positions keep owner 0 —
+    they fall outside every ``[start, end)`` range, so ownership masks
+    reject them)."""
+    assert len(rows) <= max_seqs
+    tok = np.zeros(width, np.int32)
+    seq = np.zeros(width, np.int32)
+    starts = np.zeros(max_seqs, np.int32)
+    ends = np.zeros(max_seqs, np.int32)
+    off = 0
+    for i, r in enumerate(rows):
+        n = len(r)
+        assert off + n <= width
+        tok[off:off + n] = r
+        seq[off:off + n] = i
+        starts[i] = off
+        ends[i] = off + n
+        off += n
+    return tok, seq, starts, ends
+
+
+def unpack_ragged(tok: np.ndarray, starts: np.ndarray, ends: np.ndarray,
+                  n_rows: int) -> list[np.ndarray]:
+    """Inverse of :func:`pack_ragged` for the first ``n_rows`` rows."""
+    return [np.asarray(tok[starts[i]:ends[i]]).copy()
+            for i in range(n_rows)]
+
+
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, mesh, pcfg: ParallelConfig = None,
                  *, max_batch: int = 8, block_size: int = 16,
@@ -80,7 +113,8 @@ class InferenceEngine:
                  draft_cfg: ModelConfig | None = None,
                  num_speculative_tokens: int = 0, draft_params=None,
                  shard_params: bool = False,
-                 latency_record_cap: int = LATENCY_RECORD_CAP):
+                 latency_record_cap: int = LATENCY_RECORD_CAP,
+                 prefill_pack: int = 1):
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
         # tensor parallelism over the mesh "model" axis: page pools and
@@ -133,6 +167,12 @@ class InferenceEngine:
         # prefix — only the paged transformer kind qualifies
         enable_prefix_caching = (enable_prefix_caching
                                  and self.runner.supports_prefix_caching)
+        # ragged packed prefill: several prompts' chunks share one flat
+        # token batch per step. Only runners with a ragged prefill path
+        # can consume multi-chunk plans; everyone else stays single-chunk.
+        if not self.runner.supports_packed_prefill:
+            prefill_pack = 1
+        self.prefill_pack = max(1, prefill_pack)
         self.sched = Scheduler(self.bm, max_batch, self.max_blocks_per_seq,
                                max_num_batched_tokens, self.chunk_width,
                                enable_prefix_caching=enable_prefix_caching,
@@ -141,7 +181,8 @@ class InferenceEngine:
                                encoder_cache=self.encoder_cache,
                                spec_tokens=spec,
                                max_context=-(-max_len // block_size)
-                               * block_size)
+                               * block_size,
+                               prefill_pack=self.prefill_pack)
         self.max_batch = max_batch
         self.debug_invariants = debug_invariants
 
@@ -192,6 +233,7 @@ class InferenceEngine:
             cache_mib += max_batch * encoder_cache_bytes(cfg)
         self.stats = {"steps": 0, "prefill_chunks": 0, "preemptions": 0,
                       "tokens": 0, "prefill_tokens": 0,
+                      "quantum_dropped_tokens": 0,
                       "cache_hit_tokens": 0, "cow_copies": 0,
                       "encodes": 0, "requests": 0, "requests_done": 0,
                       "spec_decodes": 0, "spec_emitted": 0,
@@ -284,20 +326,35 @@ class InferenceEngine:
 
     def _build_arrays(self, plan: StepPlan) -> dict:
         B, C, nbmax = self.max_batch, self.chunk_width, self.max_blocks_per_seq
+        S = self.prefill_pack
         a = {"d_tok": np.zeros(B, np.int32),
              "d_pos": np.zeros(B, np.int32),
              "d_tables": np.zeros((B, nbmax), np.int32),
              "d_active": np.zeros(B, bool),
-             "temps": np.zeros(B + 1, np.float32),
-             "top_ks": np.zeros(B + 1, np.int32),
-             "seeds": np.zeros(B + 1, np.int32),
-             "rids": np.zeros(B + 1, np.int32),
-             "counters": np.zeros(B + 1, np.int32),
-             "c_tok": np.zeros((1, C), np.int32),
-             "c_start": np.zeros(1, np.int32),
-             "c_len": np.zeros(1, np.int32),
-             "c_slot": np.zeros(1, np.int32),
-             "c_table": np.full((1, nbmax), TRASH_BLOCK, np.int32)}
+             "temps": np.zeros(B + S, np.float32),
+             "top_ks": np.zeros(B + S, np.int32),
+             "seeds": np.zeros(B + S, np.int32),
+             "rids": np.zeros(B + S, np.int32),
+             "counters": np.zeros(B + S, np.int32)}
+        if S == 1:
+            a.update({"c_tok": np.zeros((1, C), np.int32),
+                      "c_start": np.zeros(1, np.int32),
+                      "c_len": np.zeros(1, np.int32),
+                      "c_slot": np.zeros(1, np.int32),
+                      "c_table": np.full((1, nbmax), TRASH_BLOCK, np.int32)})
+        else:
+            # flat ragged layout: chunk ci owns rows [c_starts[ci],
+            # c_ends[ci]) of the (1, C) token batch; pad rows are owned by
+            # nobody (row_seq 0 but outside sequence 0's range) so their
+            # KV lands in the trash block and their logits are discarded
+            a.update({"c_tok": np.zeros((1, C), np.int32),
+                      "c_pos": np.zeros((1, C), np.int32),
+                      "c_seq": np.zeros(C, np.int32),
+                      "c_starts": np.zeros(S, np.int32),
+                      "c_ends": np.zeros(S, np.int32),
+                      "c_ctx": np.zeros(S, np.int32),
+                      "c_tables": np.full((S, nbmax), TRASH_BLOCK,
+                                          np.int32)})
 
         def samp(i, req):
             a["temps"][i] = req.sampling.temperature
@@ -315,17 +372,36 @@ class InferenceEngine:
                 a["d_tables"][slot, :len(row)] = row
             samp(slot, req)
 
-        if plan.chunk is not None:
-            slot, req, n = plan.chunk
-            toks = req.prefill_tokens()
-            a["c_tok"][0, :n] = toks[req.num_computed:req.num_computed + n]
-            a["c_start"][0] = req.num_computed
-            a["c_len"][0] = n
-            a["c_slot"][0] = slot
-            if self.bm is not None:
-                row = self.bm.table(req.rid)
-                a["c_table"][0, :len(row)] = row
-            samp(B, req)
+        if S == 1:
+            if plan.chunk is not None:
+                slot, req, n = plan.chunk
+                toks = req.prefill_tokens()
+                a["c_tok"][0, :n] = \
+                    toks[req.num_computed:req.num_computed + n]
+                a["c_start"][0] = req.num_computed
+                a["c_len"][0] = n
+                a["c_slot"][0] = slot
+                if self.bm is not None:
+                    row = self.bm.table(req.rid)
+                    a["c_table"][0, :len(row)] = row
+                samp(B, req)
+        elif plan.chunks:
+            tok_rows, pos_rows = [], []
+            for ci, (slot, req, n) in enumerate(plan.chunks):
+                toks = req.prefill_tokens()
+                tok_rows.append(
+                    toks[req.num_computed:req.num_computed + n])
+                pos_rows.append(np.arange(req.num_computed,
+                                          req.num_computed + n, dtype=np.int32))
+                a["c_ctx"][ci] = req.num_computed + n
+                if self.bm is not None:
+                    row = self.bm.table(req.rid)
+                    a["c_tables"][ci, :len(row)] = row
+                samp(B + ci, req)
+            tok, seq, starts, ends = pack_ragged(tok_rows, C, S)
+            pos, _, _, _ = pack_ragged(pos_rows, C, S)
+            a["c_tok"][0], a["c_pos"][0] = tok, pos
+            a["c_seq"], a["c_starts"], a["c_ends"] = seq, starts, ends
         return {k: jnp.asarray(v) for k, v in a.items()}
 
     def _lat(self, rid: int) -> dict:
@@ -401,6 +477,8 @@ class InferenceEngine:
             plan = self.sched.schedule()
             self.stats["preemptions"] = self.sched.n_preemptions
             self.stats["cache_hit_tokens"] = self.sched.cache_hit_tokens
+            self.stats["quantum_dropped_tokens"] = \
+                self.sched.quantum_dropped_tokens
             if self.bm is not None:
                 st = self.bm.stats()
                 self.stats["peak_block_utilization"] = max(
@@ -428,7 +506,7 @@ class InferenceEngine:
             if self.runner.spec_tokens or self.draft_cfg is not None:
                 toks, n_acc, c_tok = nxt
                 toks, n_acc = np.asarray(toks), np.asarray(n_acc)
-                chunk_tok = int(np.asarray(c_tok)[0])
+                chunk_toks = np.asarray(c_tok)
                 for slot, req in plan.decodes:
                     self.stats["spec_decodes"] += 1
                     # accepted draft prefix + the corrected / bonus token,
@@ -446,17 +524,16 @@ class InferenceEngine:
                         self.bm.truncate(req.rid, req.context_len)
             else:
                 nxt = np.asarray(nxt)
-                chunk_tok = int(nxt[self.max_batch])
+                chunk_toks = nxt[self.max_batch:]
                 for slot, req in plan.decodes:
                     req.num_computed += 1
                     self._append_token(slot, req, int(nxt[slot]))
-            if plan.chunk is not None:
-                slot, req, n = plan.chunk
+            for ci, (slot, req, n) in enumerate(plan.chunks):
                 req.num_computed += n
                 self.stats["prefill_chunks"] += 1
                 self.stats["prefill_tokens"] += n
                 if req.num_computed == req.context_len:
-                    self._append_token(slot, req, chunk_tok)
+                    self._append_token(slot, req, int(chunk_toks[ci]))
                 else:
                     self.sched.note_progress(req)
             self.stats["steps"] += 1
@@ -481,8 +558,7 @@ class InferenceEngine:
             assert len(t) <= self.max_blocks_per_seq, (req.rid, len(t))
             assert len(t) * bs >= req.num_computed, \
                 f"request {req.rid}: table does not cover computed KV"
-        if plan.chunk is not None:
-            _, req, n = plan.chunk
+        for _, req, n in plan.chunks:
             t = self.bm.table(req.rid)
             assert len(t) * bs >= req.num_computed + n
             # COW guarantee: the chunk writes only exclusively-owned blocks

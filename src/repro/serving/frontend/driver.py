@@ -163,6 +163,9 @@ class AsyncEngineDriver:
         self._draining = False
         self._stopped = False
         self.error: BaseException | None = None
+        # SSE streams whose client disconnected mid-stream (the request
+        # still runs to retirement; remaining tokens are dropped)
+        self.dropped_streams = 0
 
     # -- lifecycle ----------------------------------------------------------
 

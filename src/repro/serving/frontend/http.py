@@ -221,14 +221,20 @@ class FrontendServer:
             None, extra=(("Cache-Control", "no-store"),)))
         await writer.drain()
         n = 0
-        async for ev in stream:
-            n += 1
-            payload = json.dumps({"index": ev.index, "token": ev.token,
-                                  "text": ev.text})
-            writer.write(f"data: {payload}\n\n".encode())
-            await writer.drain()              # stream, don't batch
-        writer.write(
-            ("data: " + json.dumps({"done": True, "rid": req.rid,
-                                    "n_tokens": n}) + "\n\n"
-             + "data: [DONE]\n\n").encode())
-        await writer.drain()
+        try:
+            async for ev in stream:
+                n += 1
+                payload = json.dumps({"index": ev.index, "token": ev.token,
+                                      "text": ev.text})
+                writer.write(f"data: {payload}\n\n".encode())
+                await writer.drain()          # stream, don't batch
+            writer.write(
+                ("data: " + json.dumps({"done": True, "rid": req.rid,
+                                        "n_tokens": n}) + "\n\n"
+                 + "data: [DONE]\n\n").encode())
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            # client went away mid-stream: the request still runs to
+            # retirement (tokens are dropped); count it for operators
+            self.driver.dropped_streams += 1
+            raise

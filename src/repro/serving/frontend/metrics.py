@@ -28,6 +28,9 @@ _ENGINE_COUNTERS = (
      "Prefill chunks executed"),
     ("prefill_tokens", "repro_engine_prefill_tokens_total",
      "Prompt tokens whose KV was computed (prefix-cache misses)"),
+    ("quantum_dropped_tokens", "repro_engine_quantum_dropped_tokens_total",
+     "Prefill budget tokens lost to chunk-quantum rounding on a step's "
+     "final chunk"),
     ("cache_hit_tokens", "repro_engine_cache_hit_tokens_total",
      "Prompt tokens whose KV was adopted from the prefix cache"),
     ("preemptions", "repro_engine_preemptions_total",
@@ -108,6 +111,10 @@ def render_metrics(engine, driver=None) -> str:
         _scalar(out, "repro_frontend_requests_completed_total", "counter",
                 "Front-end requests whose streams closed cleanly",
                 adm.completed)
+        _scalar(out, "repro_frontend_dropped_streams_total", "counter",
+                "SSE streams whose client disconnected mid-stream "
+                "(request still runs to retirement)",
+                driver.dropped_streams)
         _scalar(out, "repro_frontend_draining", "gauge",
                 "1 while draining (no new admissions), else 0",
                 1.0 if driver.draining else 0.0)

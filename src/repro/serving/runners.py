@@ -89,6 +89,11 @@ class ModelRunner:
     needs_slots: bool = False         # constant-size per-slot SSM state
     needs_encoder: bool = False       # read-only per-slot cross K/V
     supports_prefix_caching: bool = False
+    # can consume multi-chunk (ragged packed-prefill) plans: several
+    # prompts' chunks ride one flat token batch per step. SSM/enc-dec
+    # runners stay single-chunk (recurrent state and cross-KV slot rows
+    # are sliced per chunk sequence, which the flat layout doesn't carry).
+    supports_packed_prefill: bool = False
     chunk_quantum: int = 1            # chunk lengths must be multiples
                                       # (except a prompt's final chunk)
     spec_tokens: int = 0              # draft tokens per slot per step
@@ -113,7 +118,11 @@ class ModelRunner:
 
     def _sample(self, logits_d, logits_c, a, has_chunk):
         if not has_chunk:
-            logits_c = jnp.zeros_like(logits_d[:1])
+            # sampling rows B.. are sized for the engine's prefill_pack
+            # (1 for classic single-chunk, S for the ragged packed path)
+            n_extra = a["temps"].shape[0] - logits_d.shape[0]
+            logits_c = jnp.zeros((n_extra,) + logits_d.shape[1:],
+                                 logits_d.dtype)
         logits = jnp.concatenate([logits_d, logits_c], axis=0)
         return sample_tokens(logits, a["temps"], a["top_ks"], a["seeds"],
                              a["rids"], a["counters"])
@@ -123,6 +132,16 @@ class ModelRunner:
         return {"tokens": a["c_tok"], "q_start": a["c_start"],
                 "q_lens": a["c_len"], "block_tables": a["c_table"],
                 "ctx_lens": a["c_start"] + a["c_len"]}
+
+    @staticmethod
+    def _ragged_batch(a):
+        """Packed multi-chunk prefill batch (``prefill_pack > 1``): one
+        flat (1, C) token row carrying several sequences' chunks, each
+        owning flat positions [starts[s], ends[s])."""
+        return {"tokens": a["c_tok"], "positions": a["c_pos"],
+                "starts": a["c_starts"], "ends": a["c_ends"],
+                "row_seq": a["c_seq"], "block_tables": a["c_tables"],
+                "ctx_lens": a["c_ctx"]}
 
     @staticmethod
     def _decode_batch(a):
@@ -137,19 +156,26 @@ class TransformerRunner(ModelRunner):
 
     needs_blocks = True
     supports_prefix_caching = True
-
-    def init_cache(self, num_blocks, block_size, max_batch):
-        return init_paged_cache(self.cfg, num_blocks, block_size)
+    supports_packed_prefill = True
 
     def step(self, params, cache, a, *, has_chunk):
         if has_chunk:
-            logits_c, cache = transformer.prefill_chunk_paged(
-                params, cache, self._chunk_batch(a), self.cfg, self.pcfg)
+            if "c_starts" in a:
+                logits_c, cache = transformer.prefill_chunk_ragged(
+                    params, cache, self._ragged_batch(a), self.cfg,
+                    self.pcfg)
+            else:
+                logits_c, cache = transformer.prefill_chunk_paged(
+                    params, cache, self._chunk_batch(a), self.cfg,
+                    self.pcfg)
         else:
             logits_c = None
         logits_d, cache = transformer.decode_step_paged(
             params, cache, self._decode_batch(a), self.cfg, self.pcfg)
         return self._sample(logits_d, logits_c, a, has_chunk), cache
+
+    def init_cache(self, num_blocks, block_size, max_batch):
+        return init_paged_cache(self.cfg, num_blocks, block_size)
 
 
 class SSMRunner(ModelRunner):
@@ -278,6 +304,7 @@ class SpeculativeRunner(ModelRunner):
 
     needs_blocks = True
     supports_prefix_caching = True
+    supports_packed_prefill = True
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig,
                  draft_cfg: ModelConfig, spec_tokens: int):
@@ -302,11 +329,20 @@ class SpeculativeRunner(ModelRunner):
         tgt, dft = cache["tgt"], cache["dft"]
         logits_c = None
         if has_chunk:
-            cb = self._chunk_batch(a)
-            logits_c, tgt = transformer.prefill_chunk_paged(
-                params["tgt"], tgt, cb, self.cfg, self.pcfg)
-            _, dft = transformer.prefill_chunk_paged(
-                params["dft"], dft, cb, self.draft_cfg, self.pcfg)
+            if "c_starts" in a:
+                # packed ragged chunks run through both models (draft KV
+                # must mirror the target's positions exactly)
+                rb = self._ragged_batch(a)
+                logits_c, tgt = transformer.prefill_chunk_ragged(
+                    params["tgt"], tgt, rb, self.cfg, self.pcfg)
+                _, dft = transformer.prefill_chunk_ragged(
+                    params["dft"], dft, rb, self.draft_cfg, self.pcfg)
+            else:
+                cb = self._chunk_batch(a)
+                logits_c, tgt = transformer.prefill_chunk_paged(
+                    params["tgt"], tgt, cb, self.cfg, self.pcfg)
+                _, dft = transformer.prefill_chunk_paged(
+                    params["dft"], dft, cb, self.draft_cfg, self.pcfg)
         temps, top_ks = a["temps"][:B], a["top_ks"][:B]
         seeds, rids, cnts = a["seeds"][:B], a["rids"][:B], a["counters"][:B]
         # -- draft phase: k proposals, k+1 KV writes (the last write backs

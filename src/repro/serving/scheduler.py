@@ -126,7 +126,10 @@ class Request:
 class StepPlan:
     """One step's worth of work, within the token budget."""
     decodes: list[tuple[int, Request]]            # slot -> 1 token each
-    chunk: tuple[int, Request, int] | None        # (slot, req, n_tokens)
+    # prefill chunks funded by the leftover budget, each (slot, req,
+    # n_tokens); more than one only with ``prefill_pack > 1`` (the packed
+    # ragged-prefill path runs them in a single flat token batch)
+    chunks: list[tuple[int, Request, int]]
     copies: list[tuple[int, int]]                 # device page copies (COW)
     admitted: int = 0                             # waiting -> running joins
     # freshly admitted enc-dec requests needing an encode pass this step
@@ -136,9 +139,15 @@ class StepPlan:
     spec_tokens: int = 0
 
     @property
+    def chunk(self) -> tuple[int, Request, int] | None:
+        """The single prefill chunk, for the unpacked (``prefill_pack=1``)
+        path where at most one exists per step."""
+        return self.chunks[0] if self.chunks else None
+
+    @property
     def scheduled_tokens(self) -> int:
         return (len(self.decodes) * (1 + self.spec_tokens)
-                + (self.chunk[2] if self.chunk else 0))
+                + sum(c[2] for c in self.chunks))
 
 
 class Scheduler:
@@ -153,7 +162,14 @@ class Scheduler:
 
     ``chunk_quantum`` quantizes non-final prefill chunks down to a
     multiple (SSM runners: the SSD inner chunk size, so a chunked prefill
-    re-groups the scan exactly like a monolithic one).
+    re-groups the scan exactly like a monolithic one). Quantization
+    rounding only ever drops tokens from the *last* chunk of a step —
+    earlier chunks' remainders roll into the next chunk's budget — and the
+    dropped count is tracked in ``quantum_dropped_tokens``.
+
+    ``prefill_pack`` caps how many prefill chunks one step may carry
+    (ragged packed prefill); 1 reproduces the classic single-chunk plans
+    exactly.
     """
 
     def __init__(self, bm: BlockManager | None, max_batch: int,
@@ -161,7 +177,7 @@ class Scheduler:
                  chunk_width: int, *, enable_prefix_caching: bool = True,
                  chunk_quantum: int = 1, slot_cache=None,
                  encoder_cache=None, spec_tokens: int = 0,
-                 max_context: int | None = None):
+                 max_context: int | None = None, prefill_pack: int = 1):
         if max_num_batched_tokens <= max_batch * (1 + spec_tokens):
             raise ValueError(
                 f"max_num_batched_tokens={max_num_batched_tokens} must "
@@ -189,11 +205,17 @@ class Scheduler:
                             else max_blocks_per_seq
                             * (bm.block_size if bm is not None else 0))
         self.enable_prefix_caching = enable_prefix_caching and bm is not None
+        if prefill_pack < 1:
+            raise ValueError(f"prefill_pack={prefill_pack} must be >= 1")
+        self.prefill_pack = prefill_pack
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}      # slot -> request
         self._join_order: list[int] = []           # slots, oldest first
         self.n_preemptions = 0
         self.cache_hit_tokens = 0
+        # prefill tokens lost to chunk_quantum rounding on a step's final
+        # chunk (earlier chunks' remainders roll into the next chunk)
+        self.quantum_dropped_tokens = 0
         # graceful-drain mode: in-flight work finishes, new submissions
         # are refused (the front-end flips this on shutdown)
         self.draining = False
@@ -244,8 +266,11 @@ class Scheduler:
     def schedule(self) -> StepPlan:
         """Build one step's plan: decode capacity first (preempting the
         newest requests when the pool runs dry), then spend the leftover
-        budget on one prefill chunk — continuing the in-flight prefill or
-        admitting the next waiting request (with prefix-cache sharing)."""
+        budget on up to ``prefill_pack`` prefill chunks — continuing
+        in-flight prefills and admitting waiting requests (with
+        prefix-cache sharing). All chunks of a step share one leftover
+        budget and one ``chunk_width`` allowance, so packing never starves
+        decodes harder than the single-chunk policy."""
         copies: list[tuple[int, int]] = []
         encodes: list[tuple[int, Request]] = []
         self._ensure_decode_capacity()
@@ -254,19 +279,23 @@ class Scheduler:
         budget_left = self.max_num_batched_tokens \
             - len(decodes) * (1 + self.spec_tokens)
 
-        chunk = None
+        chunks: list[tuple[int, Request, int]] = []
         admitted = 0
-        pre = next(((s, r) for s, r in sorted(self.running.items())
-                    if not r.decode_ready), None)
-        while (pre is None and budget_left > 0 and self.waiting
-               and len(self.running) < self.max_batch):
+        pres = [(s, r) for s, r in sorted(self.running.items())
+                if not r.decode_ready]
+        while (len(pres) < self.prefill_pack and budget_left > 0
+               and self.waiting and len(self.running) < self.max_batch):
             slot, req = self._admit_one(copies, encodes)
             admitted += 1
             if not req.decode_ready:
-                pre = (slot, req)       # else: full cache hit minus one —
+                pres.append((slot, req))
+                                        # else: full cache hit minus one —
                                         # it joins the decode batch next step
-        if pre is not None and budget_left > 0:
-            slot, req = pre
+        width_left = self.chunk_width
+        pending_q_loss = 0
+        for slot, req in pres:
+            if budget_left <= 0 or width_left <= 0:
+                break
             remaining = req.context_len - req.num_computed
             if self.spec_tokens and req.out:
                 # speculative preemption-recompute stops one token short:
@@ -276,13 +305,20 @@ class Scheduler:
                 # run (a preemption only ever lands on a window boundary)
                 # and temperature streams replay identically
                 remaining -= 1
-            n = min(budget_left, self.chunk_width, remaining)
-            n = self._quantize(n, remaining)
+            want = min(budget_left, width_left, remaining)
+            n = self._quantize(want, remaining)
+            # remainder below one quantum: rolls into the next chunk's
+            # budget (we only deduct n below); for the step's last chunk
+            # there is no next chunk — it is accounted, not silently lost
+            pending_q_loss = want - n
             if n > 0:
                 n = self._quantize(self._fit_chunk(req, n), remaining)
             if n > 0:
-                chunk = (slot, req, n)
-        return StepPlan(decodes=decodes, chunk=chunk, copies=copies,
+                chunks.append((slot, req, n))
+                budget_left -= n
+                width_left -= n
+        self.quantum_dropped_tokens += pending_q_loss
+        return StepPlan(decodes=decodes, chunks=chunks, copies=copies,
                         admitted=admitted, encodes=encodes,
                         spec_tokens=self.spec_tokens)
 
