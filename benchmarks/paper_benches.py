@@ -351,6 +351,106 @@ def bench_serving_ragged_prefill(rows):
 
 
 # ---------------------------------------------------------------------------
+# KV tiering: quantized int8 pages at a matched device-pool byte budget
+# (the int8 pool holds ~2x the blocks, so the same bytes serve deeper
+# contexts), and swap-vs-recompute preemption under the scheduler cost
+# model (policy "always" vs "never" on the same small pool; outputs must
+# be byte-identical either way — swapped KV is an exact copy and
+# recompute follows the repo rounding convention).
+# ---------------------------------------------------------------------------
+
+
+def bench_serving_kv_tiering(rows):
+    from repro.config import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import InferenceEngine, Request
+    from repro.serving.kv_cache import block_bytes
+
+    cfg = get_config("glm4_9b", smoke=True)
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(11)
+    n_req, prompt_len, max_batch = 12, 32, 4
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_req)]
+    max_news = [4 + 4 * (i % 4) for i in range(n_req)]
+    n_tok = sum(max_news)
+
+    def mk():
+        return [Request(p, max_new=mn) for p, mn in zip(prompts, max_news)]
+
+    # -- matched pool bytes: bf16 vs int8 ---------------------------------
+    # Both engines get the same device-pool byte budget (40 bf16 blocks'
+    # worth). The int8 pool's K/V payload is exactly half the bytes per
+    # row (2*head_dim -> head_dim), so payload capacity is 2.0x; the fp32
+    # per-row scale sidecar carried alongside costs 4/(head_dim+4) of the
+    # quantized block, which is what separates the realized block-count
+    # ratio from the payload ratio.
+    bb = {d: block_bytes(cfg, 16, kv_dtype=d) for d in ("bf16", "int8")}
+    pool_bytes = 40 * bb["bf16"]
+    hd = cfg.head_dim
+    shared_params = None
+    n_blocks = {}
+    for dtype, row_name in (("bf16", "serving/kv_bf16_base"),
+                            ("int8", "serving/kv_int8")):
+        n_blocks[dtype] = pool_bytes // bb[dtype]
+        eng = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,
+                              max_len=128, num_blocks=n_blocks[dtype],
+                              kv_dtype=dtype, params=shared_params)
+        shared_params = eng.params          # identical weights both rows
+        eng.run(mk())                       # compile
+        t0 = time.perf_counter()
+        eng.run(mk())
+        dt = time.perf_counter() - t0
+        derived = (f"tok_s={n_tok/dt:.1f} num_blocks={n_blocks[dtype]} "
+                   f"kv_cache_mib={eng.stats['kv_cache_mib']:.3f}")
+        if dtype == "int8":
+            derived += (
+                f" capacity_ratio={n_blocks['int8']/n_blocks['bf16']:.2f}"
+                f" payload_ratio={2*hd/hd:.1f}"
+                f" scale_overhead={4/(hd+4):.3f}")
+        rows.append(_csv(row_name, dt / n_tok * 1e6, derived))
+
+    # -- swap vs recompute preemption -------------------------------------
+    # A pool too small for the full working set forces preemptions; the
+    # "never" row resolves every victim by releasing blocks and
+    # recomputing the prefix, the "always" row by swapping pages to the
+    # pinned host tier and copying them back on re-admission. Greedy
+    # outputs are asserted byte-identical across the two policies.
+    swap_max_news = [8 + 8 * (i % 3) for i in range(n_req)]
+    n_swap_tok = sum(swap_max_news)
+
+    def mk_swap():
+        return [Request(p, max_new=mn)
+                for p, mn in zip(prompts, swap_max_news)]
+
+    swap_bytes = 32 * bb["bf16"]
+    outs = {}
+    for policy, row_name in (("never", "serving/swap_recompute_base"),
+                             ("always", "serving/swap_vs_recompute")):
+        eng = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,
+                              max_len=128, num_blocks=10,
+                              swap_space_bytes=swap_bytes,
+                              swap_policy=policy, params=shared_params)
+        eng.run(mk_swap())                  # compile
+        t0 = time.perf_counter()
+        reqs = mk_swap()
+        out = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        outs[policy] = [out[r.rid] for r in reqs]
+        rows.append(_csv(
+            row_name, dt / n_swap_tok * 1e6,
+            f"tok_s={n_swap_tok/dt:.1f} policy={policy} "
+            f"preemptions={eng.stats['preemptions']} "
+            f"swap_preemptions={eng.stats['swap_preemptions']} "
+            f"swap_ins={eng.stats['swap_ins']} "
+            f"swapped_out_blocks={eng.stats['swapped_out_blocks']} "
+            f"swapped_in_blocks={eng.stats['swapped_in_blocks']} "
+            + _latency_percentiles(eng, reqs)))
+    for a, b in zip(outs["never"], outs["always"]):
+        assert np.array_equal(a, b), "swap vs recompute outputs diverged"
+
+
+# ---------------------------------------------------------------------------
 # Paged-attention kernel rows: decode and chunked prefill through the
 # dispatch layer with the pages_per_compute_block knob, plus the ragged
 # packed-prefill op (fused KV scatter + attention). On CPU these time the

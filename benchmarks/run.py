@@ -34,6 +34,7 @@ def main() -> None:
         pb.bench_table1_step_time,
         pb.bench_serving_throughput,
         pb.bench_serving_ragged_prefill,
+        pb.bench_serving_kv_tiering,
         pb.bench_paged_kernels,
         pb.bench_fig6_null_step,
         pb.bench_fig7_scaling,

@@ -69,9 +69,11 @@ def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
 
 def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                     window=None, cap=None, scale=None,
-                    pages_per_compute_block=None):
+                    pages_per_compute_block=None, k_scale=None, v_scale=None):
     """Decode attention through a block table (serving hot path).
-    See kernels/paged_attention.py; the XLA path densifies the gather."""
+    See kernels/paged_attention.py; the XLA path densifies the gather.
+    ``k_scale``/``v_scale`` are the per-row fp32 scale pools of a
+    quantized page pool (dequant fused into the kernel)."""
     mode = _use_pallas()
     if mode is not None:
         from repro.kernels import paged_attention as pa
@@ -79,15 +81,17 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
             q, k_pages, v_pages, block_tables, ctx_lens, window=window,
             cap=cap, scale=scale, interpret=(mode == "interpret"),
             pages_per_compute_block=_pages_per_block(
-                pages_per_compute_block))
+                pages_per_compute_block),
+            k_scale=k_scale, v_scale=v_scale)
     from repro.kernels.ref import paged_attention_ref
     return paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
-                               window=window, cap=cap, scale=scale)
+                               window=window, cap=cap, scale=scale,
+                               k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_attention_partial(q, k_pages, v_pages, block_tables, ctx_lens,
                             block_mask, *, window=None, cap=None,
-                            scale=None):
+                            scale=None, k_scale=None, v_scale=None):
     """Partial-softmax paged decode over a shard-local block table:
     attends only table entries selected by ``block_mask`` and returns
     ``(o, lse)`` for the cross-shard LSE stitch
@@ -99,16 +103,19 @@ def paged_attention_partial(q, k_pages, v_pages, block_tables, ctx_lens,
         return pa.paged_attention(     # fp32 (o, lse) partials
             q, k_pages, v_pages, block_tables, ctx_lens, window=window,
             cap=cap, scale=scale, block_mask=block_mask, return_lse=True,
-            interpret=(mode == "interpret"))
+            interpret=(mode == "interpret"),
+            k_scale=k_scale, v_scale=v_scale)
     from repro.kernels.ref import paged_attention_partial_ref
     return paged_attention_partial_ref(
         q, k_pages, v_pages, block_tables, ctx_lens, block_mask,
-        window=window, cap=cap, scale=scale)
+        window=window, cap=cap, scale=scale,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                             q_lens, *, window=None, cap=None, scale=None,
-                            pages_per_compute_block=None):
+                            pages_per_compute_block=None, k_scale=None,
+                            v_scale=None):
     """Chunked-prefill attention through a block table: C queries per
     sequence, causally masked against the paged context. See
     kernels/paged_attention.py; the XLA path densifies the gather and
@@ -122,16 +129,20 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
             window=window, cap=cap, scale=scale,
             interpret=(mode == "interpret"),
             pages_per_compute_block=_pages_per_block(
-                pages_per_compute_block))
+                pages_per_compute_block),
+            k_scale=k_scale, v_scale=v_scale)
     from repro.models.attention import paged_chunk_attention_xla
     return paged_chunk_attention_xla(
         q, k_pages, v_pages, block_tables, ctx_lens, q_lens,
-        window=window, cap=cap, scale=scale)
+        window=window, cap=cap, scale=scale,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def ragged_paged_prefill_attention(q, k_pages, v_pages, block_tables,
                                    ctx_lens, starts, ends, row_seq, *,
-                                   window=None, cap=None, scale=None):
+                                   window=None, cap=None, scale=None,
+                                   pages_per_compute_block=None,
+                                   k_scale=None, v_scale=None):
     """Packed (ragged) chunked-prefill attention through per-sequence
     block tables: chunks of several sequences ride one flat (T, H, hd)
     batch, sequence s owning flat rows [starts[s], ends[s]). The chunk's
@@ -144,29 +155,40 @@ def ragged_paged_prefill_attention(q, k_pages, v_pages, block_tables,
         return pa.ragged_paged_prefill_attention(
             q, k_pages, v_pages, block_tables, ctx_lens, starts, ends,
             window=window, cap=cap, scale=scale,
-            interpret=(mode == "interpret"))
+            interpret=(mode == "interpret"),
+            pages_per_compute_block=_pages_per_block(
+                pages_per_compute_block),
+            k_scale=k_scale, v_scale=v_scale)
     from repro.models.attention import ragged_chunk_attention_xla
     return ragged_chunk_attention_xla(
         q, k_pages, v_pages, block_tables, ctx_lens, starts, ends, row_seq,
-        window=window, cap=cap, scale=scale)
+        window=window, cap=cap, scale=scale,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def ragged_prefill_update_attend(q, k_new, v_new, k_pages, v_pages,
                                  block_tables, ctx_lens, starts, ends,
                                  row_seq, *, window=None, cap=None,
-                                 scale=None):
+                                 scale=None, k_scale=None, v_scale=None):
     """Fused packed-prefill KV scatter + attention: returns
     ``(o, k_pages, v_pages)``. On the Pallas path the scatter rides inside
     the ragged kernel through aliased page-pool outputs (one launch, no
     separate scatter pass); the XLA path scatters then attends — same pool
-    bytes, same outputs."""
+    bytes, same outputs.
+
+    Quantized pools: ``k_new``/``v_new`` must arrive *already quantized*
+    to the pool dtype and ``k_scale``/``v_scale`` must already contain the
+    chunk's scattered scale rows (``models.attention`` does both before
+    calling) — the kernel reads scale pages for the dequant and only
+    aliases the value pools."""
     mode = _use_pallas()
     if mode is not None:
         from repro.kernels import paged_attention as pa
         return pa.ragged_paged_prefill_attention(
             q, k_pages, v_pages, block_tables, ctx_lens, starts, ends,
             k_new=k_new, v_new=v_new, window=window, cap=cap, scale=scale,
-            interpret=(mode == "interpret"))
+            interpret=(mode == "interpret"),
+            k_scale=k_scale, v_scale=v_scale)
     from repro.models.attention import (ragged_chunk_attention_xla,
                                         update_paged_cache_ragged)
     kc = update_paged_cache_ragged(k_pages, k_new[None], block_tables,
@@ -175,7 +197,8 @@ def ragged_prefill_update_attend(q, k_new, v_new, k_pages, v_pages,
                                    ctx_lens, starts, ends, row_seq)
     o = ragged_chunk_attention_xla(
         q, kc, vc, block_tables, ctx_lens, starts, ends, row_seq,
-        window=window, cap=cap, scale=scale)
+        window=window, cap=cap, scale=scale,
+        k_scale=k_scale, v_scale=v_scale)
     return o, kc, vc
 
 

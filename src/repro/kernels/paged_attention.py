@@ -67,13 +67,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1.0e30
 
 
+def _dequant_tile(x, s):
+    """Fused per-row dequant of a gathered page tile: (bs, hd) narrow x
+    (bs, 1) fp32 scale -> bf16 -> fp32. The bf16 round-trip matches
+    ``quant.dequantize_kv`` exactly, so kernels and oracles attend
+    bit-identical operands."""
+    return (x.astype(jnp.float32) * s).astype(jnp.bfloat16) \
+        .astype(jnp.float32)
+
+
 def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, *rest, scale, cap,
                    window, block_size, num_kv_heads, pages_per_block,
-                   table_width, with_lse):
+                   table_width, with_lse, with_scales):
     P = pages_per_block
     k_refs, v_refs = rest[:P], rest[P:2 * P]
-    o_ref = rest[2 * P]
-    tail = rest[2 * P + 1:]
+    rest = rest[2 * P:]
+    ks_refs = vs_refs = None
+    if with_scales:
+        ks_refs, vs_refs = rest[:P], rest[P:2 * P]
+        rest = rest[2 * P:]
+    o_ref = rest[0]
+    tail = rest[1:]
     if with_lse:
         lse_ref, m_scr, l_scr, acc_scr = tail
     else:
@@ -108,8 +122,13 @@ def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, *rest, scale, cap,
     @pl.when(live)
     def _compute():
         q = q_ref[...].astype(jnp.float32)              # (G, hd)
-        k = jnp.concatenate(
-            [r[...] for r in k_refs], axis=0).astype(jnp.float32)
+        if with_scales:
+            k = jnp.concatenate(
+                [_dequant_tile(r[...], sr[...])
+                 for r, sr in zip(k_refs, ks_refs)], axis=0)
+        else:
+            k = jnp.concatenate(
+                [r[...] for r in k_refs], axis=0).astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (G, P*block_size)
@@ -133,8 +152,13 @@ def _decode_kernel(bt_ref, ctx_ref, mask_ref, q_ref, *rest, scale, cap,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         m_scr[...] = m_new
-        v = jnp.concatenate(
-            [r[...] for r in v_refs], axis=0).astype(jnp.float32)
+        if with_scales:
+            v = jnp.concatenate(
+                [_dequant_tile(r[...], sr[...])
+                 for r, sr in zip(v_refs, vs_refs)], axis=0)
+        else:
+            v = jnp.concatenate(
+                [r[...] for r in v_refs], axis=0).astype(jnp.float32)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -179,7 +203,8 @@ def _page_specs(nb, P, K, block_size, hd, n_extra_scalars):
 def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                     window=None, cap=None, scale=None, interpret=False,
                     block_mask=None, return_lse=False,
-                    pages_per_compute_block=1):
+                    pages_per_compute_block=1,
+                    k_scale=None, v_scale=None):
     """q: (B, H, hd) one decode token per sequence.
     k_pages/v_pages: (num_blocks, block_size, K, hd).
     block_tables: (B, max_blocks_per_seq) int32 pool-row ids (padding rows
@@ -201,6 +226,11 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     ``models.attention.stitch_paged_partials`` (rounding o to q.dtype
     before the stitch would make the result shard-count-dependent). Rows
     that attended nothing return lse <= NEG_INF (zero stitch weight).
+
+    ``k_scale``/``v_scale`` ((num_blocks, block_size, K, 1) fp32) mark a
+    quantized pool: each fetched page tile is dequantized in-VMEM (the
+    ``quant.dequantize_kv`` bf16 round-trip) before the matmuls — the
+    pool itself is never widened.
     """
     B, H, hd = q.shape
     _, block_size, K, _ = k_pages.shape
@@ -208,6 +238,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     nb = block_tables.shape[1]
     P = max(1, min(int(pages_per_compute_block), nb))
     scale = hd ** -0.5 if scale is None else scale
+    with_scales = k_scale is not None
     if block_mask is None:
         block_mask = jnp.ones((B, nb), jnp.int32)
 
@@ -217,7 +248,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     kernel = functools.partial(
         _decode_kernel, scale=scale, cap=cap, window=window,
         block_size=block_size, num_kv_heads=K, pages_per_block=P,
-        table_width=nb, with_lse=return_lse)
+        table_width=nb, with_lse=return_lse, with_scales=with_scales)
 
     out_specs = pl.BlockSpec((None, G, hd), lambda bk, j, *_: (bk, 0, 0))
     if return_lse:
@@ -232,6 +263,11 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
         out_shape = jax.ShapeDtypeStruct((B * K, G, hd), q.dtype)
 
     page_specs = _page_specs(nb, P, K, block_size, hd, n_extra_scalars=0)
+    scale_specs, scale_operands = [], []
+    if with_scales:
+        scale_specs = 2 * _page_specs(nb, P, K, block_size, 1,
+                                      n_extra_scalars=0)
+        scale_operands = [k_scale] * P + [v_scale] * P
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B * K, pl.cdiv(nb, P)),
@@ -239,6 +275,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
             pl.BlockSpec((None, G, hd), lambda bk, j, *_: (bk, 0, 0)),
             *page_specs,
             *page_specs,
+            *scale_specs,
         ],
         out_specs=out_specs,
         scratch_shapes=[
@@ -257,7 +294,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
             dimension_semantics=("parallel", "arbitrary")),
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
       block_mask.astype(jnp.int32), qg,
-      *([k_pages] * P), *([v_pages] * P))
+      *([k_pages] * P), *([v_pages] * P), *scale_operands)
 
     if return_lse:
         o, lse = o
@@ -268,7 +305,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
 
 def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, *rest, scale,
                   cap, window, block_size, num_kv_heads, num_groups,
-                  pages_per_block, table_width, with_lse):
+                  pages_per_block, table_width, with_lse, with_scales):
     """Multi-query sibling of ``_decode_kernel`` for chunked prefill.
 
     One program owns all C chunk queries of one (sequence, kv-head) pair;
@@ -280,8 +317,13 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, *rest, scale,
     """
     P = pages_per_block
     k_refs, v_refs = rest[:P], rest[P:2 * P]
-    o_ref = rest[2 * P]
-    tail = rest[2 * P + 1:]
+    rest = rest[2 * P:]
+    ks_refs = vs_refs = None
+    if with_scales:
+        ks_refs, vs_refs = rest[:P], rest[P:2 * P]
+        rest = rest[2 * P:]
+    o_ref = rest[0]
+    tail = rest[1:]
     if with_lse:
         lse_ref, m_scr, l_scr, acc_scr = tail
     else:
@@ -320,8 +362,13 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, *rest, scale,
     def _compute():
         C = q_ref.shape[0]
         q = q_ref[...].astype(jnp.float32).reshape(C * G, -1)  # (C*G, hd)
-        k = jnp.concatenate(
-            [r[...] for r in k_refs], axis=0).astype(jnp.float32)
+        if with_scales:
+            k = jnp.concatenate(
+                [_dequant_tile(r[...], sr[...])
+                 for r, sr in zip(k_refs, ks_refs)], axis=0)
+        else:
+            k = jnp.concatenate(
+                [r[...] for r in k_refs], axis=0).astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (C*G, P*bs)
@@ -346,8 +393,13 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, *rest, scale,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         m_scr[...] = m_new
-        v = jnp.concatenate(
-            [r[...] for r in v_refs], axis=0).astype(jnp.float32)
+        if with_scales:
+            v = jnp.concatenate(
+                [_dequant_tile(r[...], sr[...])
+                 for r, sr in zip(v_refs, vs_refs)], axis=0)
+        else:
+            v = jnp.concatenate(
+                [r[...] for r in v_refs], axis=0).astype(jnp.float32)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -365,7 +417,8 @@ def _chunk_kernel(bt_ref, ctx_ref, qlen_ref, mask_ref, q_ref, *rest, scale,
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                             q_lens, *, window=None, cap=None, scale=None,
                             interpret=False, block_mask=None,
-                            return_lse=False, pages_per_compute_block=1):
+                            return_lse=False, pages_per_compute_block=1,
+                            k_scale=None, v_scale=None):
     """Chunked-prefill attention against a paged KV cache.
 
     q: (B, C, H, hd) — C chunk queries per sequence; row i sits at absolute
@@ -374,8 +427,9 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     pages). q_lens: (B,) valid rows; padding rows produce zeros, as does a
     wholly inactive sequence (q_len == 0). Returns (B, C, H, hd) in q.dtype.
 
-    ``pages_per_compute_block`` / ``block_mask`` / ``return_lse`` are as on
-    :func:`paged_attention`; the lse output is (B, C, H) fp32.
+    ``pages_per_compute_block`` / ``block_mask`` / ``return_lse`` /
+    ``k_scale``/``v_scale`` are as on :func:`paged_attention`; the lse
+    output is (B, C, H) fp32.
     """
     B, C, H, hd = q.shape
     _, block_size, K, _ = k_pages.shape
@@ -383,6 +437,7 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     nb = block_tables.shape[1]
     P = max(1, min(int(pages_per_compute_block), nb))
     scale = hd ** -0.5 if scale is None else scale
+    with_scales = k_scale is not None
     if block_mask is None:
         block_mask = jnp.ones((B, nb), jnp.int32)
 
@@ -393,7 +448,8 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     kernel = functools.partial(
         _chunk_kernel, scale=scale, cap=cap, window=window,
         block_size=block_size, num_kv_heads=K, num_groups=G,
-        pages_per_block=P, table_width=nb, with_lse=return_lse)
+        pages_per_block=P, table_width=nb, with_lse=return_lse,
+        with_scales=with_scales)
 
     out_specs = pl.BlockSpec((None, C, G, hd),
                              lambda bk, j, *_: (bk, 0, 0, 0))
@@ -408,6 +464,11 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
         out_shape = jax.ShapeDtypeStruct((B * K, C, G, hd), q.dtype)
 
     page_specs = _page_specs(nb, P, K, block_size, hd, n_extra_scalars=1)
+    scale_specs, scale_operands = [], []
+    if with_scales:
+        scale_specs = 2 * _page_specs(nb, P, K, block_size, 1,
+                                      n_extra_scalars=1)
+        scale_operands = [k_scale] * P + [v_scale] * P
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B * K, pl.cdiv(nb, P)),
@@ -416,6 +477,7 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                          lambda bk, j, *_: (bk, 0, 0, 0)),
             *page_specs,
             *page_specs,
+            *scale_specs,
         ],
         out_specs=out_specs,
         scratch_shapes=[
@@ -434,7 +496,7 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
             dimension_semantics=("parallel", "arbitrary")),
     )(block_tables.astype(jnp.int32), ctx_lens.astype(jnp.int32),
       q_lens.astype(jnp.int32), block_mask.astype(jnp.int32),
-      qg, *([k_pages] * P), *([v_pages] * P))
+      qg, *([k_pages] * P), *([v_pages] * P), *scale_operands)
 
     def head_major(x):
         # (B*K, C, G, t) -> (B, K, C, G, t) -> (B, C, G, K, t) -> (B, C, H, t)
@@ -448,29 +510,49 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     return head_major(o)
 
 
-def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, k_ref, v_ref,
-                   *rest, scale, cap, window, block_size, num_kv_heads,
-                   num_groups, with_write):
+def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, *rest,
+                   scale, cap, window, block_size, num_kv_heads,
+                   num_groups, pages_per_block, table_width, with_write,
+                   with_scales):
     """Packed multi-sequence prefill over one flat (T, G, hd) query batch.
 
-    Grid (K, S, nb): program (k, s, j) attends *all* T flat rows against
-    kv block j of packed sequence s, masking rows outside [start_s, end_s)
-    — each row's (m, l, acc) state only ever advances while its owning
-    sequence is being swept, so the streaming softmax per row sees exactly
-    that sequence's keys. The output tile is indexed by k alone and stays
-    VMEM-resident across (s, j); each sequence's finalize merges only its
-    own rows (read-modify-write), rows owned by nobody stay zero.
+    Grid (K, S, cdiv(nb, P)): program (k, s, j) attends *all* T flat rows
+    against kv pages [j*P, (j+1)*P) of packed sequence s, masking rows
+    outside [start_s, end_s) — each row's (m, l, acc) state only ever
+    advances while its owning sequence is being swept, so the streaming
+    softmax per row sees exactly that sequence's keys. The output tile is
+    indexed by k alone and stays VMEM-resident across (s, j); each
+    sequence's finalize merges only its own rows (read-modify-write),
+    rows owned by nobody stay zero.
 
-    With ``with_write`` the chunk's own KV (flat, same row layout as q)
-    rides along and each page fetched is *merged* — chunk rows whose
-    absolute position lands in this page replace the stale pool rows via a
-    (block_size, T) one-hot matmul — before the attention reads it, then
-    written back through aliased page-pool outputs: the scatter that
-    ``update_paged_cache_ragged`` does as a separate XLA pass is fused
-    into the same kernel launch.
+    With ``with_write`` (P == 1 only — the aliased page outputs must be
+    written exactly once per grid step) the chunk's own KV (flat, same
+    row layout as q) rides along and each page fetched is *merged* —
+    chunk rows whose absolute position lands in this page replace the
+    stale pool rows via a (block_size, T) one-hot matmul — before the
+    attention reads it, then written back through aliased page-pool
+    outputs: the scatter that ``update_paged_cache_ragged`` does as a
+    separate XLA pass is fused into the same kernel launch.
+
+    With ``with_scales`` the pools are quantized: fetched page tiles
+    dequantize in-VMEM through the per-row scale pages before attending.
+    Combined with ``with_write`` the chunk KV arrives *already quantized*
+    (and its scale rows already scattered into the scale pool, which the
+    kernel's scale-page fetch then sees) — the one-hot merge shuffles
+    narrow integer codes exactly (values ≤ qmax are exact in fp32).
     """
+    P = pages_per_block
+    k_refs, v_refs = rest[:P], rest[P:2 * P]
+    rest = rest[2 * P:]
     if with_write:
-        kc_ref, vc_ref, o_ref, ko_ref, vo_ref, m_scr, l_scr, acc_scr = rest
+        kc_ref, vc_ref = rest[:2]
+        rest = rest[2:]
+    ks_refs = vs_refs = None
+    if with_scales:
+        ks_refs, vs_refs = rest[:P], rest[P:2 * P]
+        rest = rest[2 * P:]
+    if with_write:
+        o_ref, ko_ref, vo_ref, m_scr, l_scr, acc_scr = rest
     else:
         o_ref, m_scr, l_scr, acc_scr = rest
     s_id = pl.program_id(1)
@@ -494,11 +576,20 @@ def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, k_ref, v_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    first_k = j * block_size
+    first_k = j * (P * block_size)
     active = start < end
-    live = (first_k < ctx) & active
-    if window is not None:
-        live &= first_k + block_size - 1 > qstart - window
+    # per-page liveness; the step runs if any of its P pages is live
+    lives = []
+    for i in range(P):
+        entry = j * P + i
+        seg_first = first_k + i * block_size
+        li = (seg_first < ctx) & active
+        if P > 1:
+            li &= entry < table_width
+        if window is not None:
+            li &= seg_first + block_size - 1 > qstart - window
+        lives.append(li)
+    live = functools.reduce(lambda a, c: a | c, lives)
 
     if with_write:
         # fused chunk-KV scatter: merge this sequence's chunk rows whose
@@ -517,27 +608,41 @@ def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, k_ref, v_ref,
                 sel, kc_ref[...].astype(jnp.float32),
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32).astype(ko_ref.dtype),
-            k_ref[...])
+            k_refs[0][...])
         v_blk = jnp.where(
             in_chunk,
             jax.lax.dot_general(
                 sel, vc_ref[...].astype(jnp.float32),
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32).astype(vo_ref.dtype),
-            v_ref[...])
+            v_refs[0][...])
         ko_ref[...] = k_blk
         vo_ref[...] = v_blk
+        if with_scales:
+            k_att = _dequant_tile(k_blk, ks_refs[0][...])
+            v_att = _dequant_tile(v_blk, vs_refs[0][...])
+        else:
+            k_att = k_blk.astype(jnp.float32)
+            v_att = v_blk.astype(jnp.float32)
+    elif with_scales:
+        k_att = jnp.concatenate(
+            [_dequant_tile(r[...], sr[...])
+             for r, sr in zip(k_refs, ks_refs)], axis=0)
+        v_att = jnp.concatenate(
+            [_dequant_tile(r[...], sr[...])
+             for r, sr in zip(v_refs, vs_refs)], axis=0)
     else:
-        k_blk = k_ref[...]
-        v_blk = v_ref[...]
+        k_att = jnp.concatenate(
+            [r[...] for r in k_refs], axis=0).astype(jnp.float32)
+        v_att = jnp.concatenate(
+            [r[...] for r in v_refs], axis=0).astype(jnp.float32)
 
     @pl.when(live)
     def _compute():
         q = q_ref[...].astype(jnp.float32).reshape(T * G, -1)  # (T*G, hd)
-        k = k_blk.astype(jnp.float32)                   # (block_size, hd)
         s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale  # (T*G, block_size)
+            q, k_att, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (T*G, P*bs)
         if cap is not None:
             s = cap * jnp.tanh(s / cap)
         k_pos = first_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -546,6 +651,12 @@ def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, k_ref, v_ref,
         mask = (row >= start) & (row < end) & (k_pos <= q_pos)
         if window is not None:
             mask &= k_pos > q_pos - window
+        if P > 1:
+            # columns of dead pages (past the table or wholly past ctx)
+            # carry redirected/garbage KV — mask them out
+            col_ok = jnp.concatenate(
+                [jnp.broadcast_to(li, (block_size,)) for li in lives])
+            mask &= col_ok[None, :]
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
@@ -555,9 +666,8 @@ def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, k_ref, v_ref,
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
         m_scr[...] = m_new
-        v = v_blk.astype(jnp.float32)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
+            p, v_att, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
     @pl.when((j == nj - 1) & active)
@@ -572,7 +682,9 @@ def _ragged_kernel(start_ref, end_ref, ctx_ref, bt_ref, q_ref, k_ref, v_ref,
 def ragged_paged_prefill_attention(q, k_pages, v_pages, block_tables,
                                    ctx_lens, starts, ends, *, k_new=None,
                                    v_new=None, window=None, cap=None,
-                                   scale=None, interpret=False):
+                                   scale=None, interpret=False,
+                                   pages_per_compute_block=1,
+                                   k_scale=None, v_scale=None):
     """Packed (ragged) chunked-prefill attention against a paged KV cache.
 
     q: (T, H, hd) — chunks of up to S sequences packed back to back into
@@ -588,6 +700,15 @@ def ragged_paged_prefill_attention(q, k_pages, v_pages, block_tables,
     page it fetches before attending and writes the pages back in place
     (aliased outputs), returning ``(o, k_pages, v_pages)``. Without them
     the pages must already contain the chunk KV and only ``o`` returns.
+
+    ``pages_per_compute_block`` batches P pages per grid step on the
+    *non-fused* path only — the fused write pins P == 1 because each
+    aliased page output must be produced exactly once per grid step, and
+    revisiting an output block across a wider step would clobber pages
+    the merge did not fetch. ``k_scale``/``v_scale`` mark quantized
+    pools as on :func:`paged_attention`; with the fused write the chunk
+    KV must arrive already quantized with its scale rows already
+    scattered into the scale pools (``models.attention`` does both).
     """
     T, H, hd = q.shape
     _, block_size, K, _ = k_pages.shape
@@ -598,46 +719,56 @@ def ragged_paged_prefill_attention(q, k_pages, v_pages, block_tables,
     with_write = k_new is not None
     if with_write and v_new is None:
         raise ValueError("k_new and v_new must be given together")
+    with_scales = k_scale is not None
+    # fused write pins P=1: an aliased page output must be written exactly
+    # once, by the single grid step that fetched that page
+    P = 1 if with_write else max(1, min(int(pages_per_compute_block), nb))
 
     # g-major regroup: (T, H, hd) -> (T, G, K, hd) -> (K, T, G, hd)
     qg = q.reshape(T, G, K, hd).transpose(2, 0, 1, 3)
 
-    def page_index(k, s, j, bt_ref, ctx_ref, *extra):
-        # entries wholly past the context redirect to pool row 0 (never
-        # attended: the liveness guard skips them)
-        return (jnp.where(j * block_size < ctx_ref[s], bt_ref[s, j], 0),
-                0, k, 0)
-
-    def page_index_(k, s, j, starts_ref, ends_ref, ctx_ref, bt_ref):
-        return page_index(k, s, j, bt_ref, ctx_ref)
+    def mk_page_spec(i, hd_):
+        def idx(k, s, j, starts_ref, ends_ref, ctx_ref, bt_ref):
+            # entries past the table width or wholly past the context
+            # redirect to pool row 0 (never attended: liveness skips them)
+            entry = jnp.minimum(j * P + i, nb - 1)
+            ok = (j * P + i < nb) & (entry * block_size < ctx_ref[s])
+            return (jnp.where(ok, bt_ref[s, entry], 0), 0, k, 0)
+        return pl.BlockSpec((None, block_size, None, hd_), idx)
 
     kernel = functools.partial(
         _ragged_kernel, scale=scale, cap=cap, window=window,
         block_size=block_size, num_kv_heads=K, num_groups=G,
-        with_write=with_write)
+        pages_per_block=P, table_width=nb, with_write=with_write,
+        with_scales=with_scales)
 
     q_spec = pl.BlockSpec((None, T, G, hd), lambda k, s, j, *_: (k, 0, 0, 0))
-    page_spec = pl.BlockSpec((None, block_size, None, hd), page_index_)
-    in_specs = [q_spec, page_spec, page_spec]
+    page_specs = [mk_page_spec(i, hd) for i in range(P)]
+    in_specs = [q_spec, *page_specs, *page_specs]
+    operands = [qg, *([k_pages] * P), *([v_pages] * P)]
     out_specs = [pl.BlockSpec((None, T, G, hd),
                               lambda k, s, j, *_: (k, 0, 0, 0))]
     out_shape = [jax.ShapeDtypeStruct((K, T, G, hd), q.dtype)]
-    operands = [qg, k_pages, v_pages]
     aliases = {}
     if with_write:
         new_spec = pl.BlockSpec((T, None, hd), lambda k, s, j, *_: (0, k, 0))
         in_specs += [new_spec, new_spec]
         operands += [k_new, v_new]
-        out_specs += [page_spec, page_spec]
+        out_specs += [page_specs[0], page_specs[0]]
         out_shape += [jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
                       jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)]
         # flattened operand order: 4 prefetched scalars, q, k_pages,
-        # v_pages, k_new, v_new -> pages alias the page outputs in place
+        # v_pages, k_new, v_new[, k_scale, v_scale] -> pages alias the
+        # page outputs in place
         aliases = {5: 1, 6: 2}
+    if with_scales:
+        scale_page_specs = [mk_page_spec(i, 1) for i in range(P)]
+        in_specs += [*scale_page_specs, *scale_page_specs]
+        operands += [*([k_scale] * P), *([v_scale] * P)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
-        grid=(K, S, nb),
+        grid=(K, S, pl.cdiv(nb, P)),
         in_specs=in_specs,
         out_specs=tuple(out_specs) if with_write else out_specs[0],
         scratch_shapes=[

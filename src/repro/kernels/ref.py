@@ -7,6 +7,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import quant
+
+
+def _gather_pages(pages, scale, block_tables):
+    """Densify a page pool through the block table; a quantized pool
+    (per-row scale supplied) dequantizes right after the gather — the
+    bf16 round-trip in ``quant.dequantize_kv`` is the same one the
+    kernels apply in-tile, so both paths attend identical operands."""
+    g = pages[block_tables]
+    if scale is not None:
+        g = quant.dequantize_kv(g, scale[block_tables])
+    return g
+
 
 def attention_ref(q, k, v, *, causal=True, window=None, cap=None, scale=None,
                   q_offset=0):
@@ -35,20 +48,23 @@ def attention_ref(q, k, v, *, causal=True, window=None, cap=None, scale=None,
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
-                        window=None, cap=None, scale=None):
+                        window=None, cap=None, scale=None,
+                        k_scale=None, v_scale=None):
     """Paged decode attention oracle: densify the block-table gather, then
     the exact masked-softmax math of ``models.attention._decode_attn_local``.
 
     q: (B, H, hd); pages: (num_blocks, block_size, K, hd);
     block_tables: (B, nb) int32; ctx_lens: (B,) int32 (0 => zero output).
+    k_scale/v_scale: optional (num_blocks, block_size, K, 1) fp32 per-row
+    scales for a quantized pool (dequantized after the gather).
     """
     B, H, hd = q.shape
     _, bs, K, _ = k_pages.shape
     G = H // K
     scale = hd ** -0.5 if scale is None else scale
     # densify: (B, nb, bs, K, hd) -> (B, S, K, hd), S = nb * bs
-    k = k_pages[block_tables].reshape(B, -1, K, hd)
-    v = v_pages[block_tables].reshape(B, -1, K, hd)
+    k = _gather_pages(k_pages, k_scale, block_tables).reshape(B, -1, K, hd)
+    v = _gather_pages(v_pages, v_scale, block_tables).reshape(B, -1, K, hd)
     S = k.shape[1]
     qg = q.reshape(B, G, K, hd)
     logits = jnp.einsum("bgkh,bskh->bgks", qg, k,
@@ -75,7 +91,7 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
 
 def paged_attention_partial_ref(q, k_pages, v_pages, block_tables, ctx_lens,
                                 block_mask, *, window=None, cap=None,
-                                scale=None):
+                                scale=None, k_scale=None, v_scale=None):
     """Partial-softmax paged decode oracle for pool-sharded serving.
 
     Identical math to :func:`paged_attention_ref` except keys are *also*
@@ -91,8 +107,8 @@ def paged_attention_partial_ref(q, k_pages, v_pages, block_tables, ctx_lens,
     _, bs, K, _ = k_pages.shape
     G = H // K
     scale = hd ** -0.5 if scale is None else scale
-    k = k_pages[block_tables].reshape(B, -1, K, hd)
-    v = v_pages[block_tables].reshape(B, -1, K, hd)
+    k = _gather_pages(k_pages, k_scale, block_tables).reshape(B, -1, K, hd)
+    v = _gather_pages(v_pages, v_scale, block_tables).reshape(B, -1, K, hd)
     S = k.shape[1]
     qg = q.reshape(B, G, K, hd)
     logits = jnp.einsum("bgkh,bskh->bgks", qg, k,
@@ -119,7 +135,7 @@ def paged_attention_partial_ref(q, k_pages, v_pages, block_tables, ctx_lens,
 
 def paged_shard_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
                               n_shards, *, window=None, cap=None,
-                              scale=None):
+                              scale=None, k_scale=None, v_scale=None):
     """LSE-stitch oracle for pool-sharded paged decode attention.
 
     Simulates ``n_shards`` shards that each hold a disjoint subset of a
@@ -144,7 +160,8 @@ def paged_shard_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
         mask = jnp.broadcast_to(entry % n_shards == s, (B, nb))
         o, lse = paged_attention_partial_ref(
             q, k_pages, v_pages, block_tables, ctx_lens, mask,
-            window=window, cap=cap, scale=scale)
+            window=window, cap=cap, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
         os.append(o)
         lses.append(lse)
     os, lses = jnp.stack(os), jnp.stack(lses)         # (S, B, H, [hd])
@@ -156,7 +173,8 @@ def paged_shard_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
 
 
 def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
-                                q_lens, *, window=None, cap=None, scale=None):
+                                q_lens, *, window=None, cap=None, scale=None,
+                                k_scale=None, v_scale=None):
     """Multi-query (chunked-prefill) paged attention oracle.
 
     q: (B, C, H, hd) — row i of sequence b is the query at absolute
@@ -170,8 +188,8 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
     _, bs, K, _ = k_pages.shape
     G = H // K
     scale = hd ** -0.5 if scale is None else scale
-    k = k_pages[block_tables].reshape(B, -1, K, hd)
-    v = v_pages[block_tables].reshape(B, -1, K, hd)
+    k = _gather_pages(k_pages, k_scale, block_tables).reshape(B, -1, K, hd)
+    v = _gather_pages(v_pages, v_scale, block_tables).reshape(B, -1, K, hd)
     S = k.shape[1]
     qg = q.reshape(B, C, G, K, hd)
     logits = jnp.einsum("bcgkh,bskh->bcgks", qg, k,
@@ -198,7 +216,8 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens,
 
 def ragged_paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
                                        ctx_lens, starts, ends, row_seq, *,
-                                       window=None, cap=None, scale=None):
+                                       window=None, cap=None, scale=None,
+                                       k_scale=None, v_scale=None):
     """Packed (ragged) multi-sequence chunked-prefill oracle.
 
     q: (T, H, hd) — chunks of up to S sequences packed into one flat token
@@ -216,8 +235,9 @@ def ragged_paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
     G = H // K
     S = starts.shape[0]
     scale = hd ** -0.5 if scale is None else scale
-    k = k_pages[block_tables].reshape(S, -1, K, hd)       # (S, E, K, hd)
-    v = v_pages[block_tables].reshape(S, -1, K, hd)
+    k = _gather_pages(k_pages, k_scale,
+                      block_tables).reshape(S, -1, K, hd)  # (S, E, K, hd)
+    v = _gather_pages(v_pages, v_scale, block_tables).reshape(S, -1, K, hd)
     E = k.shape[1]
     qg = q.reshape(T, G, K, hd)
     logits = jnp.einsum("tgkh,sekh->tgkse", qg, k,

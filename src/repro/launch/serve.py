@@ -78,11 +78,14 @@ def build_engine(cfg, mesh, args):
     return InferenceEngine(
         cfg, mesh, max_batch=args.max_batch,
         block_size=args.block_size, max_len=args.max_len,
+        num_blocks=args.num_blocks,
         max_num_batched_tokens=args.max_batched_tokens,
         enable_prefix_caching=not args.no_prefix_caching,
         draft_cfg=draft_cfg,
         num_speculative_tokens=args.num_speculative_tokens,
-        prefill_pack=args.prefill_pack)
+        prefill_pack=args.prefill_pack, kv_dtype=args.kv_dtype,
+        swap_space_bytes=args.swap_space_bytes,
+        swap_policy=args.swap_policy)
 
 
 def build_controller(args):
@@ -145,6 +148,14 @@ def run_engine(cfg, mesh, args):
     print(f"[serve] mesh=data={mesh.shape['data']},model="
           f"{mesh.shape['model']} tp={eng.tp} "
           f"prefill_pack={eng.prefill_pack}")
+    print(f"[serve] kv_dtype={eng.kv_dtype} "
+          f"kv_cache_mib={s['kv_cache_mib']} "
+          f"swap_space_mib={s['swap_space_mib']} "
+          f"swap_preemptions={s['swap_preemptions']} "
+          f"swap_ins={s['swap_ins']} "
+          f"swapped_out_blocks={s['swapped_out_blocks']} "
+          f"swapped_in_blocks={s['swapped_in_blocks']} "
+          f"aborts={s['aborts']}")
     print(f"[serve] runner={type(eng.runner).__name__} {len(reqs)} requests "
           f"(poisson rate={args.rate}/step, arrivals={arrivals}), "
           f"{s['tokens']} tokens in {s['wall_s']:.2f}s "
@@ -217,11 +228,30 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: sized for "
+                         "max_batch x max_len); set low to exercise "
+                         "preemption / swap under memory pressure")
     ap.add_argument("--max-batched-tokens", type=int, default=None,
                     help="per-step token budget across decodes + one "
                     "prefill chunk (default: max_batch + 2*block_size)")
     ap.add_argument("--no-prefix-caching", action="store_true",
                     help="disable cross-request KV block sharing")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "int8", "fp8"),
+                    help="KV page-pool storage dtype; int8/fp8 store "
+                    "per-row fp32 scales alongside and the kernels "
+                    "dequantize fused into attention (docs/kv-cache.md)")
+    ap.add_argument("--swap-space-bytes", type=int, default=0,
+                    help="pinned host memory for swap-preemption, bytes "
+                    "(0 = recompute-only preemption). Preemption victims "
+                    "move KV to the host tier and back instead of "
+                    "recomputing when the cost model prefers it")
+    ap.add_argument("--swap-policy", default="auto",
+                    choices=("auto", "always", "never"),
+                    help="swap-vs-recompute choice per preemption victim: "
+                    "auto = measured-bandwidth cost model, always/never "
+                    "force one side (bench + tests)")
     ap.add_argument("--prefill-pack", type=int, default=1,
                     help="max prefill chunks packed into one step's flat "
                     "ragged token batch (1 = classic single-chunk; >1 "

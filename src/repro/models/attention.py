@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.models import modules as m
+from repro.models import quant
 from repro.models.layers import apply_rope, rms_norm_fp32, softcap
 
 NEG_INF = -1.0e30
@@ -404,7 +405,8 @@ def _paged_tp(num_kv_heads: int):
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
-                           window=None, cap=None, scale=None):
+                           window=None, cap=None, scale=None,
+                           k_scale=None, v_scale=None):
     """Decode attention via block tables. q: (B,1,H,hd) -> (B,1,H,hd).
 
     On a mesh with a "model" axis that divides the kv-head count this runs
@@ -413,7 +415,8 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     of each local kv head — attention per head is complete on its shard,
     no cross-shard stitch), and only the host-replicated block table and
     context lengths are shared. Computation moves to where the KV lives —
-    the paper's §4.2 argument, applied to the serving pools.
+    the paper's §4.2 argument, applied to the serving pools. Quantized
+    pools pass their fp32 scale pools (same kv-head sharding, hd dim 1).
     """
     from repro.kernels import ops as kops
     B, _, H, hd = q.shape
@@ -423,29 +426,34 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
     if tp == 1:
         o = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
                                  ctx_lens, window=window, cap=cap,
-                                 scale=scale)
+                                 scale=scale, k_scale=k_scale,
+                                 v_scale=v_scale)
         return o[:, None].astype(q.dtype)
     G = H // K
     qg = q[:, 0].reshape(B, G, K, hd)         # g-major; see dense_attention
 
-    def body(qg, kp, vp, bt, ctx):
+    def body(qg, kp, vp, bt, ctx, *scales):
         K_l = kp.shape[2]
+        ks, vs = scales if scales else (None, None)
         o = kops.paged_attention(qg.reshape(B, G * K_l, hd), kp, vp, bt,
-                                 ctx, window=window, cap=cap, scale=scale)
+                                 ctx, window=window, cap=cap, scale=scale,
+                                 k_scale=ks, v_scale=vs)
         return o.reshape(B, G, K_l, hd)
 
+    extra = (k_scale, v_scale) if k_scale is not None else ()
+    kv_spec = P(None, None, "model", None)    # rank-4, kv heads at axis 2
     o = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(None, None, "model", None),
-                  P(None, None, "model", None),
-                  P(None, None, "model", None), P(None, None), P(None)),
+        in_specs=(kv_spec, kv_spec, kv_spec, P(None, None), P(None),
+                  *([kv_spec] * len(extra))),
         out_specs=P(None, None, "model", None),
-    )(qg, k_pages, v_pages, block_tables, ctx_lens)
+    )(qg, k_pages, v_pages, block_tables, ctx_lens, *extra)
     return replicate_over_model(o).reshape(B, 1, H, hd).astype(q.dtype)
 
 
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
-                          q_lens, *, window=None, cap=None, scale=None):
+                          q_lens, *, window=None, cap=None, scale=None,
+                          k_scale=None, v_scale=None):
     """Chunked-prefill attention via block tables: the C queries of one
     prompt chunk attend causally to the paged context (prior chunks' KV
     read through the table; this chunk's KV already scattered in).
@@ -459,26 +467,29 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     if tp == 1:
         o = kops.paged_prefill_attention(q, k_pages, v_pages, block_tables,
                                          ctx_lens, q_lens, window=window,
-                                         cap=cap, scale=scale)
+                                         cap=cap, scale=scale,
+                                         k_scale=k_scale, v_scale=v_scale)
         return o.astype(q.dtype)
     G = H // K
     qg = q.reshape(B, C, G, K, hd)            # g-major; see dense_attention
 
-    def body(qg, kp, vp, bt, ctx, qlen):
+    def body(qg, kp, vp, bt, ctx, qlen, *scales):
         K_l = kp.shape[2]                     # (nb, bs, K_l, hd)
+        ks, vs = scales if scales else (None, None)
         o = kops.paged_prefill_attention(
             qg.reshape(B, C, G * K_l, hd), kp, vp, bt, ctx, qlen,
-            window=window, cap=cap, scale=scale)
+            window=window, cap=cap, scale=scale, k_scale=ks, v_scale=vs)
         return o.reshape(B, C, G, K_l, hd)
 
+    extra = (k_scale, v_scale) if k_scale is not None else ()
+    kv_spec = P(None, None, "model", None)
     o = jax.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None, None, "model", None),
-                  P(None, None, "model", None),
-                  P(None, None, "model", None), P(None, None), P(None),
-                  P(None)),
+                  kv_spec, kv_spec, P(None, None), P(None),
+                  P(None), *([kv_spec] * len(extra))),
         out_specs=P(None, None, None, "model", None),
-    )(qg, k_pages, v_pages, block_tables, ctx_lens, q_lens)
+    )(qg, k_pages, v_pages, block_tables, ctx_lens, q_lens, *extra)
     return replicate_over_model(o).reshape(B, C, H, hd).astype(q.dtype)
 
 
@@ -525,7 +536,8 @@ def paged_shard_attention(q, k_pages, v_pages, block_tables, ctx_lens,
 
 
 def paged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
-                              q_lens, *, window=None, cap=None, scale=None):
+                              q_lens, *, window=None, cap=None, scale=None,
+                              k_scale=None, v_scale=None):
     """Pure-XLA chunked-prefill path: densify the block-table gather, then
     ``dense_attention``'s exact op sequence (fp32 logits, *normalized*
     softmax cast to bf16, then p @ v) with per-sequence query offsets.
@@ -535,7 +547,9 @@ def paged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
     padded keys contribute exact fp32 zeros, so only the probability
     rounding order could diverge — this keeps it the same. Padding rows
     (i >= q_lens) emit garbage; their KV went to the trash block and the
-    engine discards their logits.
+    engine discards their logits. Quantized pools dequantize right after
+    the gather (same ``quant.dequantize_kv`` round-trip the kernels use,
+    so attention operands are bit-identical across paths).
     """
     B, C, H, hd = q.shape
     _, bs, K, _ = k_pages.shape
@@ -543,6 +557,9 @@ def paged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
     scale = hd ** -0.5 if scale is None else scale
     k = k_pages[block_tables].reshape(B, -1, K, hd)
     v = v_pages[block_tables].reshape(B, -1, K, hd)
+    if k_scale is not None:
+        k = quant.dequantize_kv(k, k_scale[block_tables].reshape(B, -1, K, 1))
+        v = quant.dequantize_kv(v, v_scale[block_tables].reshape(B, -1, K, 1))
     S = k.shape[1]
     qg = q.reshape(B, C, G, K, hd)
     logits = jnp.einsum("bqgkh,bskh->bgkqs", qg, k,
@@ -561,7 +578,8 @@ def paged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
 
 def ragged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
                                starts, ends, row_seq, *, window=None,
-                               cap=None, scale=None):
+                               cap=None, scale=None, k_scale=None,
+                               v_scale=None):
     """Pure-XLA packed (ragged) chunked-prefill path.
 
     q: (T, H, hd) flat packed rows (layout contract on
@@ -579,7 +597,8 @@ def ragged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
     gidx = jnp.clip(starts[:, None] + t[None], 0, T - 1)      # (S, T)
     od = paged_chunk_attention_xla(
         q[gidx], k_pages, v_pages, block_tables, ctx_lens, q_lens,
-        window=window, cap=cap, scale=scale)                  # (S, T, H, hd)
+        window=window, cap=cap, scale=scale, k_scale=k_scale,
+        v_scale=v_scale)                                      # (S, T, H, hd)
     off = jnp.clip(t - starts[row_seq], 0, T - 1)
     o = od[row_seq, off]                                      # (T, H, hd)
     valid = (t >= starts[row_seq]) & (t < ends[row_seq])
@@ -588,7 +607,7 @@ def ragged_chunk_attention_xla(q, k_pages, v_pages, block_tables, ctx_lens,
 
 def ragged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
                            starts, ends, row_seq, *, window=None, cap=None,
-                           scale=None):
+                           scale=None, k_scale=None, v_scale=None):
     """Packed (ragged) chunked-prefill attention via block tables: chunks
     of up to S sequences ride one flat (1, T, H, hd) token batch, each row
     attending causally to its owner's paged context (the chunk's KV
@@ -602,33 +621,36 @@ def ragged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens,
     if tp == 1:
         o = kops.ragged_paged_prefill_attention(
             q[0], k_pages, v_pages, block_tables, ctx_lens, starts, ends,
-            row_seq, window=window, cap=cap, scale=scale)
+            row_seq, window=window, cap=cap, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
         return o[None].astype(q.dtype)
     G = H // K
     qg = q[0].reshape(T, G, K, hd)            # g-major; see dense_attention
 
-    def body(qg, kp, vp, bt, ctx, st, en, rs):
+    def body(qg, kp, vp, bt, ctx, st, en, rs, *scales):
         K_l = kp.shape[2]
+        ks, vs = scales if scales else (None, None)
         o = kops.ragged_paged_prefill_attention(
             qg.reshape(T, G * K_l, hd), kp, vp, bt, ctx, st, en, rs,
-            window=window, cap=cap, scale=scale)
+            window=window, cap=cap, scale=scale, k_scale=ks, v_scale=vs)
         return o.reshape(T, G, K_l, hd)
 
+    extra = (k_scale, v_scale) if k_scale is not None else ()
+    kv_spec = P(None, None, "model", None)
     o = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(P(None, None, "model", None),
-                  P(None, None, "model", None),
-                  P(None, None, "model", None), P(None, None), P(None),
-                  P(None), P(None), P(None)),
+        in_specs=(kv_spec, kv_spec, kv_spec, P(None, None), P(None),
+                  P(None), P(None), P(None), *([kv_spec] * len(extra))),
         out_specs=P(None, None, "model", None),
-    )(qg, k_pages, v_pages, block_tables, ctx_lens, starts, ends, row_seq)
+    )(qg, k_pages, v_pages, block_tables, ctx_lens, starts, ends, row_seq,
+      *extra)
     return replicate_over_model(o).reshape(1, T, H, hd).astype(q.dtype)
 
 
 def ragged_chunk_update_attend(q, k_new, v_new, k_pages, v_pages,
                                block_tables, ctx_lens, starts, ends,
                                row_seq, *, window=None, cap=None,
-                               scale=None):
+                               scale=None, k_scale=None, v_scale=None):
     """Scatter a packed chunk's KV into the pages and attend, fused when
     the backend allows.
 
@@ -638,10 +660,39 @@ def ragged_chunk_update_attend(q, k_new, v_new, k_pages, v_pages,
     path and the kv-head-sharded mesh path run
     :func:`update_paged_cache_ragged` then the attend — same pool bytes,
     same outputs.
+
+    Quantized pools (``k_scale``/``v_scale`` given): the chunk's bf16 KV
+    is quantized here — chunk-sized, so no bf16 copy of the *pool* ever
+    materializes — and its scale rows are scattered into the scale pools
+    *before* the fused kernel launches (the kernel reads scale pages for
+    the dequant). Returns ``(o, k_pages, v_pages, k_scale, v_scale)``.
     """
     from repro.kernels import ops as kops
     K = k_pages.shape[2]
     tp, _ = _paged_tp(K)
+    if k_scale is not None:
+        kvd = quant.kv_dtype_name(k_pages.dtype)
+        kq, ksr = quant.quantize_kv(k_new, kvd)      # (1,T,K,hd),(1,T,K,1)
+        vq, vsr = quant.quantize_kv(v_new, kvd)
+        ks = update_paged_cache_ragged(k_scale, ksr, block_tables, ctx_lens,
+                                       starts, ends, row_seq)
+        vs = update_paged_cache_ragged(v_scale, vsr, block_tables, ctx_lens,
+                                       starts, ends, row_seq)
+        if tp == 1:
+            o, kc, vc = kops.ragged_prefill_update_attend(
+                q[0], kq[0], vq[0], k_pages, v_pages, block_tables,
+                ctx_lens, starts, ends, row_seq, window=window, cap=cap,
+                scale=scale, k_scale=ks, v_scale=vs)
+            return o[None].astype(q.dtype), kc, vc, ks, vs
+        kc = update_paged_cache_ragged(k_pages, kq, block_tables, ctx_lens,
+                                       starts, ends, row_seq)
+        vc = update_paged_cache_ragged(v_pages, vq, block_tables, ctx_lens,
+                                       starts, ends, row_seq)
+        o = ragged_chunk_attention(q, kc, vc, block_tables, ctx_lens,
+                                   starts, ends, row_seq, window=window,
+                                   cap=cap, scale=scale, k_scale=ks,
+                                   v_scale=vs)
+        return o, kc, vc, ks, vs
     if tp == 1:
         o, kc, vc = kops.ragged_prefill_update_attend(
             q[0], k_new[0], v_new[0], k_pages, v_pages, block_tables,

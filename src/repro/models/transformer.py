@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, ParallelConfig
 from repro.models import modules as m
 from repro.models import moe as moe_mod
+from repro.models import quant
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_scale, decode_attention,
                                     init_attention, out_proj,
@@ -168,21 +169,37 @@ def _attn_decode(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
 
 def _attn_decode_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
     """One-token attention against a block-paged KV cache (serving engine).
-    cache: {"k","v"} page pools (num_blocks, block_size, K, hd)."""
+    cache: {"k","v"} page pools (num_blocks, block_size, K, hd), plus
+    {"k_scale","v_scale"} fp32 per-row scale pools when quantized — the
+    new row quantizes before the scatter (no bf16 pool copy) and the
+    dequant is fused into the attention kernel."""
     window = cfg.sliding_window if kind == "local" else None
     h = apply_norm(bp["norm"], x, cfg)
     q = project_q(bp["attn"], h, cfg, ctx["cos_sin"])
     k, v = project_kv(bp["attn"], h, cfg, ctx["cos_sin"])
+    if "k_scale" in cache:
+        kvd = quant.kv_dtype_name(cache["k"].dtype)
+        k, ksr = quant.quantize_kv(k, kvd)
+        v, vsr = quant.quantize_kv(v, kvd)
+        ksc = update_paged_cache(cache["k_scale"], ksr,
+                                 ctx["block_tables"], ctx["pos"])
+        vsc = update_paged_cache(cache["v_scale"], vsr,
+                                 ctx["block_tables"], ctx["pos"])
+        scales = {"k_scale": ksc, "v_scale": vsc}
+    else:
+        ksc = vsc = None
+        scales = {}
     kc = update_paged_cache(cache["k"], k, ctx["block_tables"], ctx["pos"])
     vc = update_paged_cache(cache["v"], v, ctx["block_tables"], ctx["pos"])
     y = paged_decode_attention(q, kc, vc, ctx["block_tables"],
                                ctx["ctx_lens"], window=window,
                                cap=cfg.attn_logit_softcap,
-                               scale=attention_scale(cfg))
+                               scale=attention_scale(cfg),
+                               k_scale=ksc, v_scale=vsc)
     y = out_proj(bp["attn"], y, x.dtype)
     if cfg.post_block_norm:
         y = apply_norm(bp["post_norm"], y, cfg)
-    return x + y, {"k": kc, "v": vc}
+    return x + y, {"k": kc, "v": vc, **scales}
 
 
 def _attn_chunk_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
@@ -194,6 +211,20 @@ def _attn_chunk_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
     h = apply_norm(bp["norm"], x, cfg)
     q = project_q(bp["attn"], h, cfg, ctx["cos_sin"])
     k, v = project_kv(bp["attn"], h, cfg, ctx["cos_sin"])
+    if "k_scale" in cache:
+        kvd = quant.kv_dtype_name(cache["k"].dtype)
+        k, ksr = quant.quantize_kv(k, kvd)
+        v, vsr = quant.quantize_kv(v, kvd)
+        ksc = update_paged_cache_chunk(cache["k_scale"], ksr,
+                                       ctx["block_tables"], ctx["q_start"],
+                                       ctx["q_lens"])
+        vsc = update_paged_cache_chunk(cache["v_scale"], vsr,
+                                       ctx["block_tables"], ctx["q_start"],
+                                       ctx["q_lens"])
+        scales = {"k_scale": ksc, "v_scale": vsc}
+    else:
+        ksc = vsc = None
+        scales = {}
     kc = update_paged_cache_chunk(cache["k"], k, ctx["block_tables"],
                                   ctx["q_start"], ctx["q_lens"])
     vc = update_paged_cache_chunk(cache["v"], v, ctx["block_tables"],
@@ -201,11 +232,12 @@ def _attn_chunk_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
     y = paged_chunk_attention(q, kc, vc, ctx["block_tables"],
                               ctx["ctx_lens"], ctx["q_lens"], window=window,
                               cap=cfg.attn_logit_softcap,
-                              scale=attention_scale(cfg))
+                              scale=attention_scale(cfg),
+                              k_scale=ksc, v_scale=vsc)
     y = out_proj(bp["attn"], y, x.dtype)
     if cfg.post_block_norm:
         y = apply_norm(bp["post_norm"], y, cfg)
-    return x + y, {"k": kc, "v": vc}
+    return x + y, {"k": kc, "v": vc, **scales}
 
 
 def _attn_ragged_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
@@ -217,15 +249,25 @@ def _attn_ragged_paged(bp, x, cfg: ModelConfig, ctx, cache, kind: str):
     h = apply_norm(bp["norm"], x, cfg)
     q = project_q(bp["attn"], h, cfg, ctx["cos_sin"])
     k, v = project_kv(bp["attn"], h, cfg, ctx["cos_sin"])
-    y, kc, vc = ragged_chunk_update_attend(
-        q, k, v, cache["k"], cache["v"], ctx["block_tables"],
-        ctx["ctx_lens"], ctx["starts"], ctx["ends"], ctx["row_seq"],
-        window=window, cap=cfg.attn_logit_softcap,
-        scale=attention_scale(cfg))
+    if "k_scale" in cache:
+        y, kc, vc, ksc, vsc = ragged_chunk_update_attend(
+            q, k, v, cache["k"], cache["v"], ctx["block_tables"],
+            ctx["ctx_lens"], ctx["starts"], ctx["ends"], ctx["row_seq"],
+            window=window, cap=cfg.attn_logit_softcap,
+            scale=attention_scale(cfg), k_scale=cache["k_scale"],
+            v_scale=cache["v_scale"])
+        new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+    else:
+        y, kc, vc = ragged_chunk_update_attend(
+            q, k, v, cache["k"], cache["v"], ctx["block_tables"],
+            ctx["ctx_lens"], ctx["starts"], ctx["ends"], ctx["row_seq"],
+            window=window, cap=cfg.attn_logit_softcap,
+            scale=attention_scale(cfg))
+        new_cache = {"k": kc, "v": vc}
     y = out_proj(bp["attn"], y, x.dtype)
     if cfg.post_block_norm:
         y = apply_norm(bp["post_norm"], y, cfg)
-    return x + y, {"k": kc, "v": vc}
+    return x + y, new_cache
 
 
 def _block_apply(kind, bp, x, cfg, ctx, mode, cache=None):

@@ -50,13 +50,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ParallelConfig
-from repro.models import api
+from repro.models import api, quant
 from repro.serving.cache import (EncoderCache, SlotStateCache,
                                  encoder_cache_bytes, slot_state_bytes)
 from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes)
 from repro.serving.runners import make_runner
 from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
-                                     StepPlan)
+                                     StepPlan, SwapCostModel)
 from repro.serving.stats import Histogram, SECONDS_BUCKETS, STEP_BUCKETS
 from repro.spmd import sharding as shd
 
@@ -114,7 +114,8 @@ class InferenceEngine:
                  num_speculative_tokens: int = 0, draft_params=None,
                  shard_params: bool = False,
                  latency_record_cap: int = LATENCY_RECORD_CAP,
-                 prefill_pack: int = 1):
+                 prefill_pack: int = 1, kv_dtype: str = "bf16",
+                 swap_space_bytes: int = 0, swap_policy: str = "auto"):
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
         # tensor parallelism over the mesh "model" axis: page pools and
@@ -157,7 +158,36 @@ class InferenceEngine:
         # a huge budget must not widen the compiled buffer past it
         self.chunk_width = min(
             max_num_batched_tokens - max_batch * (1 + spec), max_len)
-        self.bm = (BlockManager(num_blocks, block_size)
+        if kv_dtype not in quant.KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} not in {sorted(quant.KV_DTYPES)}")
+        self.kv_dtype = kv_dtype
+        # host-swap tier: pinned host memory for preempted requests' KV,
+        # sized in device block units so the BlockManager can account it.
+        # Only pure paged runners qualify — slot-state (SSM/hybrid) and
+        # encoder caches have no per-block representation to move.
+        self._dev_block_bytes = 0
+        if self.runner.needs_blocks:
+            self._dev_block_bytes = block_bytes(cfg, block_size,
+                                                kv_dtype=kv_dtype)
+            if draft_cfg is not None:
+                self._dev_block_bytes += block_bytes(draft_cfg, block_size,
+                                                     kv_dtype=kv_dtype)
+        swap_capable = (self.runner.needs_blocks
+                        and not self.runner.needs_slots
+                        and not self.runner.needs_encoder)
+        if swap_space_bytes and not swap_capable:
+            raise ValueError(
+                "swap_space_bytes requires a pure paged-KV runner (slot "
+                "state and encoder caches have no block-swap form)")
+        num_host_blocks = (swap_space_bytes // self._dev_block_bytes
+                           if swap_space_bytes and self._dev_block_bytes
+                           else 0)
+        self._swap_cost = (SwapCostModel(block_bytes=self._dev_block_bytes,
+                                         policy=swap_policy)
+                           if num_host_blocks > 0 else None)
+        self.bm = (BlockManager(num_blocks, block_size,
+                                num_host_blocks=num_host_blocks)
                    if self.runner.needs_blocks else None)
         self.slot_cache = (SlotStateCache(max_batch)
                            if self.runner.needs_slots else None)
@@ -182,7 +212,8 @@ class InferenceEngine:
                                spec_tokens=spec,
                                max_context=-(-max_len // block_size)
                                * block_size,
-                               prefill_pack=self.prefill_pack)
+                               prefill_pack=self.prefill_pack,
+                               swap_cost=self._swap_cost)
         self.max_batch = max_batch
         self.debug_invariants = debug_invariants
 
@@ -204,7 +235,8 @@ class InferenceEngine:
                 params = self._place_params(params, cfg)
             self.params = params
             self.cache = self.runner.init_cache(num_blocks, block_size,
-                                                max_batch)
+                                                max_batch,
+                                                kv_dtype=kv_dtype)
             if self.tp > 1:
                 self.cache = jax.device_put(
                     self.cache, shd.serving_cache_shardings(self.cache,
@@ -222,11 +254,30 @@ class InferenceEngine:
             self._copy_block = jax.jit(self._copy_block_fn,
                                        donate_argnums=(0,))
 
+        # host pool: one pinned numpy array per paged cache leaf, block-
+        # slot-major, aligned with jax.tree.leaves order (deterministic).
+        # Scale leaves ride along automatically — they share the pools'
+        # rank-5 num_blocks axis.
+        self._host_pool: list[np.ndarray] = []
+        self._host_block_nbytes = 0
+        if num_host_blocks > 0:
+            for p in jax.tree.leaves(self.cache):
+                if p.ndim >= 2 and p.shape[1] == num_blocks:
+                    shape = (num_host_blocks, p.shape[0]) + p.shape[2:]
+                    self._host_pool.append(np.zeros(shape, p.dtype))
+                    self._host_block_nbytes += int(
+                        np.prod(shape[1:])) * p.dtype.itemsize
+            self._swap_gather = jax.jit(self._swap_gather_fn)
+            self._swap_scatter = jax.jit(self._swap_scatter_fn,
+                                         donate_argnums=(0,))
+
         cache_mib = 0.0
         if self.runner.needs_blocks:
-            cache_mib += num_blocks * block_bytes(cfg, block_size)
+            cache_mib += num_blocks * block_bytes(cfg, block_size,
+                                                  kv_dtype=kv_dtype)
         if draft_cfg is not None:
-            cache_mib += num_blocks * block_bytes(draft_cfg, block_size)
+            cache_mib += num_blocks * block_bytes(draft_cfg, block_size,
+                                                  kv_dtype=kv_dtype)
         if self.runner.needs_slots:
             cache_mib += max_batch * slot_state_bytes(cfg)
         if self.runner.needs_encoder:
@@ -239,7 +290,15 @@ class InferenceEngine:
                       "spec_decodes": 0, "spec_emitted": 0,
                       "peak_block_utilization": 0.0, "peak_blocks_in_use": 0,
                       "latency": {},
-                      "kv_cache_mib": round(cache_mib / 2 ** 20, 3)}
+                      "kv_cache_mib": round(cache_mib / 2 ** 20, 3),
+                      "kv_dtype": kv_dtype, "aborts": 0,
+                      "swap_preemptions": 0, "swap_ins": 0,
+                      "host_hit_blocks": 0,
+                      "swapped_out_blocks": 0, "swapped_in_blocks": 0,
+                      "swapped_out_bytes": 0, "swapped_in_bytes": 0,
+                      "swap_space_mib": round(
+                          num_host_blocks * self._dev_block_bytes
+                          / 2 ** 20, 3)}
         self.step_count = 0           # virtual clock: one step() = one tick
         self.latency_record_cap = latency_record_cap
         # retirement-time latency aggregation: bounded state the metrics
@@ -321,6 +380,74 @@ class InferenceEngine:
             return p
 
         return jax.tree.map(leaf, cache)
+
+    def _swap_gather_fn(self, cache, idx):
+        """Pull ``idx`` block rows out of every paged leaf, block-major —
+        the device half of a d2h swap-out. Issued on *pre-step* pool
+        content and materialized to the host pool later (overlapping the
+        jitted step), which is safe because the handle pins the pre-
+        donation buffers regardless of what rewrites the pool after."""
+        nb = self.bm.num_blocks
+        return [jnp.moveaxis(p[:, idx], 1, 0)
+                for p in jax.tree.leaves(cache)
+                if p.ndim >= 2 and p.shape[1] == nb]
+
+    def _swap_scatter_fn(self, cache, idx, vals):
+        """Write host rows back into ``idx`` block slots of every paged
+        leaf (h2d swap-in). Pad entries target the trash block."""
+        nb = self.bm.num_blocks
+        it = iter(vals)
+
+        def leaf(p):
+            if p.ndim >= 2 and p.shape[1] == nb:
+                return p.at[:, idx].set(jnp.moveaxis(next(it), 0, 1))
+            return p
+
+        return jax.tree.map(leaf, cache)
+
+    @staticmethod
+    def _pad_pow2(n: int) -> int:
+        """Swap batch sizes round up to a power of two so the jitted
+        gather/scatter compile O(log) variants, not one per count."""
+        return 1 << max(0, n - 1).bit_length()
+
+    def _issue_swap_out(self, pairs):
+        """Dispatch the d2h gather for this step's swap-outs. Returns the
+        (handle, pairs) token to drain later — after the step for overlap,
+        or immediately when this step's swap-ins reuse the slots."""
+        m = self._pad_pow2(len(pairs))
+        idx = np.full(m, TRASH_BLOCK, np.int32)
+        idx[:len(pairs)] = [b for b, _ in pairs]
+        return self._swap_gather(self.cache, jnp.asarray(idx)), pairs
+
+    def _drain_swap_out(self, token) -> None:
+        """Materialize a pending d2h gather into the host pool."""
+        handle, pairs = token
+        t0 = time.monotonic()
+        slots = [s for _, s in pairs]
+        for hp, g in zip(self._host_pool, handle):
+            hp[slots] = np.asarray(g[:len(slots)])
+        nbytes = len(slots) * self._host_block_nbytes
+        self.stats["swapped_out_blocks"] += len(slots)
+        self.stats["swapped_out_bytes"] += nbytes
+        self._swap_cost.observe_swap(nbytes, time.monotonic() - t0)
+
+    def _swap_in(self, pairs) -> None:
+        """h2d: copy host slots into freshly allocated device blocks,
+        before COW copies (which may read them) and the step."""
+        n = len(pairs)
+        m = self._pad_pow2(n)
+        idx = np.full(m, TRASH_BLOCK, np.int32)
+        idx[:n] = [b for _, b in pairs]
+        slots = [s for s, _ in pairs]
+        vals = []
+        for hp in self._host_pool:
+            buf = np.zeros((m,) + hp.shape[1:], hp.dtype)
+            buf[:n] = hp[slots]
+            vals.append(jnp.asarray(buf))
+        self.cache = self._swap_scatter(self.cache, jnp.asarray(idx), vals)
+        self.stats["swapped_in_blocks"] += n
+        self.stats["swapped_in_bytes"] += n * self._host_block_nbytes
 
     # -- host-side step ----------------------------------------------------
 
@@ -457,6 +584,16 @@ class InferenceEngine:
             if self.on_finish is not None:
                 self.on_finish(req)
 
+    def abort(self, rid: int) -> bool:
+        """Cancel an in-flight request between steps (front-end client
+        disconnect). Cache resources are released immediately — blocks
+        hash-retained, swapped host slots discarded — and no further
+        tokens are produced. Safe no-op for unknown/retired rids."""
+        ok = self.sched.abort(rid)
+        if ok:
+            self.stats["aborts"] = self.sched.n_aborts
+        return ok
+
     def _run_encodes(self, plan: StepPlan) -> None:
         """Admission-time encoder passes: write each new request's cross
         K/V into its slot row before any decoder work touches it."""
@@ -476,6 +613,9 @@ class InferenceEngine:
         with jax.set_mesh(self.mesh):
             plan = self.sched.schedule()
             self.stats["preemptions"] = self.sched.n_preemptions
+            self.stats["swap_preemptions"] = self.sched.n_swap_preemptions
+            self.stats["swap_ins"] = self.sched.n_swap_ins
+            self.stats["host_hit_blocks"] = self.sched.host_hit_blocks
             self.stats["cache_hit_tokens"] = self.sched.cache_hit_tokens
             self.stats["quantum_dropped_tokens"] = \
                 self.sched.quantum_dropped_tokens
@@ -487,6 +627,22 @@ class InferenceEngine:
                     self.stats["peak_blocks_in_use"], st.blocks_in_use)
             if self.debug_invariants:
                 self._check_invariants(plan)
+            # host-swap copies. The d2h gather is issued FIRST — on the
+            # pre-step pool content, before anything (swap-in scatter, COW
+            # copies, the step itself) can rewrite a freed block — and
+            # materialized to the host pool after the step is dispatched,
+            # overlapping the host copy with device compute. Swap-ins must
+            # land before COW copies: a host-copied block registered this
+            # step can already be a COW source for a later admission.
+            d2h_token = None
+            if plan.swap_outs:
+                d2h_token = self._issue_swap_out(plan.swap_outs)
+            if plan.swap_ins:
+                if d2h_token is not None:
+                    # same-step slot reuse: host content must exist first
+                    self._drain_swap_out(d2h_token)
+                    d2h_token = None
+                self._swap_in(plan.swap_ins)
             self._run_encodes(plan)
             for src, dst in plan.copies:
                 self.stats["cow_copies"] += 1
@@ -496,13 +652,18 @@ class InferenceEngine:
             if plan.scheduled_tokens == 0:
                 # no compute, but an admission (e.g. a full prefix-cache
                 # hit that is immediately decode-ready) is still progress
+                if d2h_token is not None:
+                    self._drain_swap_out(d2h_token)
                 if plan.admitted:
                     self.step_count += 1
                 return plan.admitted > 0
             arrays = self._build_arrays(plan)
             step_exec = (self._step_chunk if plan.chunk is not None
                          else self._step_plain)
+            t_step = time.monotonic()
             nxt, self.cache = step_exec(self.params, self.cache, arrays)
+            if d2h_token is not None:
+                self._drain_swap_out(d2h_token)
             if self.runner.spec_tokens or self.draft_cfg is not None:
                 toks, n_acc, c_tok = nxt
                 toks, n_acc = np.asarray(toks), np.asarray(n_acc)
@@ -536,6 +697,14 @@ class InferenceEngine:
                     self._append_token(slot, req, int(chunk_toks[ci]))
                 else:
                     self.sched.note_progress(req)
+            if self._swap_cost is not None and plan.chunks:
+                # np.asarray above already synced the step's outputs, so
+                # this wall time covers real device work: feed the
+                # recompute-throughput EMA the cost model weighs against
+                # moving bytes
+                self._swap_cost.observe_prefill(
+                    sum(c[2] for c in plan.chunks),
+                    time.monotonic() - t_step)
             self.stats["steps"] += 1
             self.step_count += 1
             if self.debug_invariants and self.bm is not None:

@@ -36,6 +36,7 @@ import itertools
 import queue
 import threading
 import time
+from collections import deque
 from typing import NamedTuple
 
 from repro.serving.frontend.admission import AdmissionController
@@ -163,9 +164,15 @@ class AsyncEngineDriver:
         self._draining = False
         self._stopped = False
         self.error: BaseException | None = None
-        # SSE streams whose client disconnected mid-stream (the request
-        # still runs to retirement; remaining tokens are dropped)
+        # SSE streams whose client disconnected mid-stream (the HTTP
+        # layer follows up with abort(), so the request stops computing)
         self.dropped_streams = 0
+        # requests cancelled before retirement (client disconnect or an
+        # explicit abort): their cache resources were released early
+        self.aborted = 0
+        # rids whose abort was requested but not yet applied by the
+        # engine thread (drained between steps)
+        self._abort_q: deque[int] = deque()
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -268,6 +275,33 @@ class AsyncEngineDriver:
         self._inbox.put((t, next(self._seq), req))
         return stream
 
+    def abort(self, rid: int) -> None:
+        """Cancel an in-flight request (thread-safe, from any thread or
+        the event loop). Applied by the engine thread *between* steps:
+        the request stops computing, its blocks / host slots are released
+        immediately, and its stream closes. A no-op for unknown or
+        already-retired rids."""
+        self._inbox.put(("abort", rid))
+
+    def _apply_abort(self, pending: list, rid: int) -> None:
+        """Engine-thread side of ``abort``: runs between steps."""
+        cancelled = False
+        for i, (_, _, req) in enumerate(pending):
+            if req.rid == rid:            # never reached the scheduler
+                pending.pop(i)
+                heapq.heapify(pending)
+                cancelled = True
+                break
+        else:
+            cancelled = self.engine.abort(rid)
+        self._queued.discard(rid)
+        stream = self._streams.pop(rid, None)
+        if stream is not None:
+            stream._finish()
+        if cancelled or stream is not None:
+            self.aborted += 1
+            self.admission.note_completed()
+
     # -- engine-thread callbacks (fire inside engine.step) -------------------
 
     def _on_admit(self, slot, req) -> None:
@@ -307,10 +341,18 @@ class AsyncEngineDriver:
                         item = self._inbox.get(
                             block=block, timeout=self._idle_wait_s)
                         block = False
-                        if item is not None:          # None = wake-up ping
-                            heapq.heappush(pending, item)
+                        if item is None:              # None = wake-up ping
+                            continue
+                        if item[0] == "abort":
+                            self._abort_q.append(item[1])
+                            continue
+                        heapq.heappush(pending, item)
                 except queue.Empty:
                     pass
+                # cancellations apply between steps, before this tick's
+                # admissions, so an aborted request never re-enters a plan
+                while self._abort_q:
+                    self._apply_abort(pending, self._abort_q.popleft())
                 # admit every arrival due on the virtual clock, in
                 # submission order — the same order engine.run() uses
                 while pending and pending[0][0] <= eng.step_count:

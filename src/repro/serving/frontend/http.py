@@ -15,9 +15,10 @@ needs behind a load balancer:
 
 Connections are ``Connection: close`` (one request per connection): the
 SSE stream has no predeclared length, and keeping the parser trivial
-keeps it auditable. A client that disconnects mid-stream does not cancel
-the request — it runs to retirement and the remaining tokens are
-dropped (per-request cancellation is future work; docs/serving-frontend.md).
+keeps it auditable. A client that disconnects mid-stream **cancels** the
+request: the driver's abort path releases its batch slot, KV blocks and
+any host-swapped pages between engine steps, so abandoned work stops
+consuming the token budget (docs/serving-frontend.md).
 
 Request body schema (all but ``prompt`` optional)::
 
@@ -234,7 +235,9 @@ class FrontendServer:
                  + "data: [DONE]\n\n").encode())
             await writer.drain()
         except (ConnectionResetError, BrokenPipeError):
-            # client went away mid-stream: the request still runs to
-            # retirement (tokens are dropped); count it for operators
+            # client went away mid-stream: cancel the request — its slot,
+            # blocks and host-swap pages free up between steps instead of
+            # computing tokens nobody will read
             self.driver.dropped_streams += 1
+            self.driver.abort(req.rid)
             raise

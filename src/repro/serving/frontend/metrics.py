@@ -47,6 +47,23 @@ _ENGINE_COUNTERS = (
      "Speculative decode slot-steps (draft-and-verify)"),
     ("spec_emitted", "repro_engine_spec_emitted_total",
      "Tokens emitted by speculative verify steps"),
+    ("aborts", "repro_engine_aborts_total",
+     "Requests cancelled before retirement (client disconnect / abort)"),
+    ("swap_preemptions", "repro_engine_swap_preemptions_total",
+     "Preemptions resolved by swapping KV to the host tier instead of "
+     "recompute"),
+    ("swap_ins", "repro_engine_swap_ins_total",
+     "Swapped-out requests re-admitted from the host tier"),
+    ("host_hit_blocks", "repro_engine_host_hit_blocks_total",
+     "Prefix-cache hits served by copying host-resident blocks back"),
+    ("swapped_out_blocks", "repro_engine_swapped_out_blocks_total",
+     "KV blocks copied device-to-host by swap preemptions"),
+    ("swapped_in_blocks", "repro_engine_swapped_in_blocks_total",
+     "KV blocks copied host-to-device by swap-ins and host prefix hits"),
+    ("swapped_out_bytes", "repro_engine_swapped_out_bytes_total",
+     "Bytes moved device-to-host by swap preemptions"),
+    ("swapped_in_bytes", "repro_engine_swapped_in_bytes_total",
+     "Bytes moved host-to-device by swap-ins and host prefix hits"),
 )
 
 _HISTOGRAMS = (
@@ -89,6 +106,13 @@ def render_metrics(engine, driver=None) -> str:
             "Peak KV blocks in use", s["peak_blocks_in_use"])
     _scalar(out, "repro_engine_kv_cache_mib", "gauge",
             "Device cache footprint, MiB", s["kv_cache_mib"])
+    _scalar(out, "repro_engine_swap_space_mib", "gauge",
+            "Pinned host-swap tier capacity, MiB (0 = swap off)",
+            s["swap_space_mib"])
+    out.append("# HELP repro_engine_kv_dtype Serving KV-cache storage "
+               "dtype, as a one-hot label")
+    out.append("# TYPE repro_engine_kv_dtype gauge")
+    out.append(f'repro_engine_kv_dtype{{kv_dtype="{s["kv_dtype"]}"}} 1')
     _scalar(out, "repro_engine_running", "gauge",
             "Requests currently occupying a batch slot",
             len(engine.sched.running))
@@ -113,8 +137,11 @@ def render_metrics(engine, driver=None) -> str:
                 adm.completed)
         _scalar(out, "repro_frontend_dropped_streams_total", "counter",
                 "SSE streams whose client disconnected mid-stream "
-                "(request still runs to retirement)",
+                "(the request is then aborted)",
                 driver.dropped_streams)
+        _scalar(out, "repro_frontend_aborted_requests_total", "counter",
+                "Requests cancelled before retirement via the driver's "
+                "abort path", driver.aborted)
         _scalar(out, "repro_frontend_draining", "gauge",
                 "1 while draining (no new admissions), else 0",
                 1.0 if driver.draining else 0.0)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.models import quant
 from repro.models.transformer import period_structure
 
 TRASH_BLOCK = 0
@@ -98,43 +99,64 @@ def mamba_layer_stacks(cfg: ModelConfig) -> list[str]:
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, kv_dtype: str = "bf16"):
     """Zero page pools matching ``transformer.decode_step_paged``.
 
     Covers the *attention* stacks only; mamba stacks carry constant-size
     per-slot state (``serving.cache.init_slot_state``) rather than paged
-    KV — a hybrid model's serving cache is the union of both."""
+    KV — a hybrid model's serving cache is the union of both.
+
+    With a quantized ``kv_dtype`` ("int8" / "fp8") the k/v leaves store
+    the narrow dtype and each stack gains fp32 ``k_scale`` / ``v_scale``
+    leaves shaped ``(NP, num_blocks, block_size, K, 1)`` — same rank and
+    block axis as the pools, so block-indexed copy/COW/swap helpers
+    handle value and scale leaves uniformly (docs/kv-cache.md)."""
     kinds, NP = period_structure(cfg)
     shape = (NP, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    if quant.is_quantized(kv_dtype):
+        dtype = quant.KV_DTYPES[kv_dtype]
+    sshape = shape[:-1] + (1,)
+
+    def stack():
+        c = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if quant.is_quantized(kv_dtype):
+            c["k_scale"] = jnp.zeros(sshape, jnp.float32)
+            c["v_scale"] = jnp.zeros(sshape, jnp.float32)
+        return c
+
     cache = {}
     for i, kind in enumerate(kinds):
         if kind == "mamba":
             continue
-        cache[f"sub{i}"] = {"k": jnp.zeros(shape, dtype),
-                            "v": jnp.zeros(shape, dtype)}
+        cache[f"sub{i}"] = stack()
     if cfg.shared_attn_period:
-        cache["shared"] = {"k": jnp.zeros(shape, dtype),
-                           "v": jnp.zeros(shape, dtype)}
+        cache["shared"] = stack()
     return cache
 
 
 def block_bytes(cfg: ModelConfig, block_size: int, dtype_bytes: int = 2,
-                tp: int = 1):
+                tp: int = 1, kv_dtype: str = "bf16"):
     """HBM bytes one block id costs across every layer's k+v pools.
 
     ``tp`` > 1 gives the *per-shard* cost on a kv-head-sharded mesh
     (docs/multi-host.md): each model shard holds num_kv_heads/tp heads of
     every page, so a block's footprint divides exactly — the accounting
     the mesh-invariance walks pin. Requires tp to divide num_kv_heads
-    (the engine validates via ``spmd.sharding.paged_pool_pspec``)."""
+    (the engine validates via ``spmd.sharding.paged_pool_pspec``).
+
+    A quantized ``kv_dtype`` narrows the per-element cost and adds the
+    fp32 per-row scale leaves (4 bytes per (token, head) row)."""
     kinds, NP = period_structure(cfg)
     n_stacks = len(attn_layer_stacks(cfg))
     if cfg.num_kv_heads % tp != 0:
         raise ValueError(
             f"num_kv_heads={cfg.num_kv_heads} is not divisible by tp={tp}"
             " (see spmd.sharding.paged_pool_pspec)")
+    row_bytes = cfg.head_dim * dtype_bytes
+    if quant.is_quantized(kv_dtype):
+        row_bytes = cfg.head_dim * quant.kv_dtype_bytes(kv_dtype) + 4
     return (2 * NP * n_stacks * block_size * (cfg.num_kv_heads // tp)
-            * cfg.head_dim * dtype_bytes)
+            * row_bytes)
 
 
 @dataclass
@@ -159,7 +181,8 @@ class BlockManager:
     returns the page copy the *caller* must perform.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 num_host_blocks: int = 0):
         assert num_blocks >= 2 and block_size >= 1
         self.num_blocks = num_blocks
         self.block_size = block_size
@@ -169,6 +192,14 @@ class BlockManager:
         self._ref: dict[int, int] = {}        # block -> refcount (> 0 only)
         self._hash_of: dict[int, bytes] = {}  # block -> content hash
         self._block_of: dict[bytes, int] = {}  # content hash -> block
+        # Host tier (swap-preemption): slots in a pinned host pool, one
+        # slot holding one block's pages across every layer. A swapped
+        # request owns its slots exclusively until swap_in/swap_discard.
+        self.num_host_blocks = num_host_blocks
+        self._host_free = list(range(num_host_blocks - 1, -1, -1))
+        self._swapped: dict[int, list[int]] = {}      # rid -> host slots
+        self._host_hash_of: dict[int, bytes] = {}     # slot -> content hash
+        self._host_block_of: dict[bytes, int] = {}    # content hash -> slot
 
     # -- queries ----------------------------------------------------------
 
@@ -353,6 +384,128 @@ class BlockManager:
                 del self._ref[b]
                 self._free.append(b)
 
+    # -- host tier (swap-preemption) --------------------------------------
+
+    def is_swapped(self, rid: int) -> bool:
+        return rid in self._swapped
+
+    @property
+    def num_host_free(self) -> int:
+        return len(self._host_free)
+
+    def can_swap_out(self, rid: int) -> bool:
+        return len(self._tables.get(rid, ())) <= len(self._host_free)
+
+    def swap_out(self, rid: int) -> list[tuple[int, int]]:
+        """Move rid's table to host slots. Returns the (device_block,
+        host_slot) copy pairs the *caller* must perform — on the pre-step
+        pool contents, before anything in the same step can rewrite a
+        freed block (the engine issues the d2h gather first, then lets it
+        overlap the jitted step). Device blocks follow ``free`` semantics
+        (hash retained while on the free list), so a quick swap-in can
+        revive them without any copy at all; hashed blocks also publish
+        into the host index so *other* requests' admissions can
+        prefix-hit swapped content (``match_host``)."""
+        t = self._tables.pop(rid)
+        pairs = []
+        slots = []
+        for b in t:
+            s = self._host_free.pop()
+            pairs.append((b, s))
+            slots.append(s)
+            h = self._hash_of.get(b)
+            if h is not None and h not in self._host_block_of:
+                self._host_hash_of[s] = h
+                self._host_block_of[h] = s
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
+        self._swapped[rid] = slots
+        return pairs
+
+    def can_swap_in(self, rid: int) -> bool:
+        # Worst case every slot needs a fresh device block; hashed slots
+        # whose device twin survived on the free list revive for free.
+        return len(self._swapped.get(rid, ())) <= self.num_free
+
+    def swap_in(self, rid: int) -> tuple[list[int], list[tuple[int, int]]]:
+        """Rebuild rid's device table from its host slots. Returns
+        (table, copy_pairs) where copy_pairs is the (host_slot,
+        device_block) h2d copies the caller must perform *before* the
+        step computes over them. A hashed slot whose original device
+        block still sits on the free list (hash intact — pages are never
+        written while free) is revived in place with no copy."""
+        if rid in self._tables:
+            raise KeyError(f"request {rid} already has a table")
+        slots = self._swapped.pop(rid)
+        pairs = []
+        t = []
+        for s in slots:
+            h = self._host_hash_of.pop(s, None)
+            if h is not None and self._host_block_of.get(h) == s:
+                del self._host_block_of[h]
+            b = self._block_of.get(h) if h is not None else None
+            if b is not None:
+                # device twin survived: revive, no copy
+                if self._ref.get(b, 0) == 0:
+                    self._free.remove(b)
+                self._ref[b] = self._ref.get(b, 0) + 1
+            else:
+                b = self._pop_free()
+                self._ref[b] = 1
+                pairs.append((s, b))
+                if h is not None:
+                    self.register(b, h)
+            t.append(b)
+            self._host_free.append(s)
+        self._tables[rid] = t
+        return self.table(rid), pairs
+
+    def swap_discard(self, rid: int) -> None:
+        """Drop a swapped-out request's host slots without copying back
+        (abort while swapped). Host hashes go with the slots — unlike the
+        device free list there is no in-place revival of a freed slot."""
+        for s in self._swapped.pop(rid):
+            h = self._host_hash_of.pop(s, None)
+            if h is not None and self._host_block_of.get(h) == s:
+                del self._host_block_of[h]
+            self._host_free.append(s)
+
+    def match_host(self, hashes: list[bytes]) -> list[int]:
+        """Longest prefix of ``hashes`` resolving to *host* slots — used
+        by admission after the device index runs dry, so a prefix that
+        only survives swapped-out is copied back instead of recomputed."""
+        out = []
+        for h in hashes:
+            s = self._host_block_of.get(h)
+            if s is None:
+                break
+            out.append(s)
+        return out
+
+    def host_copy_in(self, rid: int, slots: list[int],
+                     hashes: list[bytes]) -> tuple[list[int],
+                                                   list[tuple[int, int]]]:
+        """Non-destructive host prefix hit: copy ``slots`` (still owned
+        by their swapped-out request) into freshly allocated device
+        blocks appended to rid's table (created if absent — admission
+        adopts the device-hit prefix first, then extends it from here),
+        registering ``hashes`` on the new blocks. Returns (blocks,
+        (host_slot, device_block) copy pairs)."""
+        if len(slots) > self.num_free:
+            raise MemoryError(
+                f"need {len(slots)} blocks, have {self.num_free}")
+        t = self._tables.setdefault(rid, [])
+        pairs = []
+        for s, h in zip(slots, hashes):
+            b = self._pop_free()
+            self._ref[b] = 1
+            t.append(b)
+            pairs.append((s, b))
+            self.register(b, h)
+        return self.table(rid), pairs
+
     def check(self) -> None:
         """Invariants: refcounts == table references, free list exact,
         hash index consistent, no trash block anywhere."""
@@ -371,3 +524,14 @@ class BlockManager:
             assert b != TRASH_BLOCK
             assert self._block_of.get(h) == b, "hash maps disagree"
         assert len(self._block_of) == len(self._hash_of)
+        # host tier
+        owned = [s for slots in self._swapped.values() for s in slots]
+        assert len(set(owned)) == len(owned), "host slot double-owned"
+        host_free = set(self._host_free)
+        assert len(host_free) == len(self._host_free), "host free dups"
+        assert not (host_free & set(owned)), "host free overlaps swapped"
+        assert len(owned) + len(self._host_free) == self.num_host_blocks
+        for s, h in self._host_hash_of.items():
+            assert s not in host_free, "hashed host slot is free"
+            assert self._host_block_of.get(h) == s, "host hash disagree"
+        assert len(self._host_block_of) == len(self._host_hash_of)

@@ -102,7 +102,8 @@ class ModelRunner:
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig):
         self.cfg, self.pcfg = cfg, pcfg
 
-    def init_cache(self, num_blocks: int, block_size: int, max_batch: int):
+    def init_cache(self, num_blocks: int, block_size: int, max_batch: int,
+                   kv_dtype: str = "bf16"):
         raise NotImplementedError
 
     def step(self, params, cache, a, *, has_chunk: bool):
@@ -174,8 +175,10 @@ class TransformerRunner(ModelRunner):
             params, cache, self._decode_batch(a), self.cfg, self.pcfg)
         return self._sample(logits_d, logits_c, a, has_chunk), cache
 
-    def init_cache(self, num_blocks, block_size, max_batch):
-        return init_paged_cache(self.cfg, num_blocks, block_size)
+    def init_cache(self, num_blocks, block_size, max_batch,
+                   kv_dtype="bf16"):
+        return init_paged_cache(self.cfg, num_blocks, block_size,
+                                kv_dtype=kv_dtype)
 
 
 class SSMRunner(ModelRunner):
@@ -193,7 +196,12 @@ class SSMRunner(ModelRunner):
         self.chunk_quantum = cfg.ssm.chunk_size
         self.needs_blocks = bool(attn_layer_stacks(cfg))
 
-    def init_cache(self, num_blocks, block_size, max_batch):
+    def init_cache(self, num_blocks, block_size, max_batch,
+                   kv_dtype="bf16"):
+        if kv_dtype != "bf16":
+            raise ValueError(
+                f"kv_dtype={kv_dtype}: SSM/hybrid runners keep bf16 pools "
+                "(slot state has no quantized form)")
         cache = (init_paged_cache(self.cfg, num_blocks, block_size)
                  if self.needs_blocks else {})
         cache.update(init_slot_state(self.cfg, max_batch))
@@ -245,7 +253,12 @@ class EncDecRunner(ModelRunner):
     needs_blocks = True
     needs_encoder = True
 
-    def init_cache(self, num_blocks, block_size, max_batch):
+    def init_cache(self, num_blocks, block_size, max_batch,
+                   kv_dtype="bf16"):
+        if kv_dtype != "bf16":
+            raise ValueError(
+                f"kv_dtype={kv_dtype}: the enc-dec runner keeps bf16 pools "
+                "(cross K/V is per-slot, not paged)")
         cfg = self.cfg
         shape = (cfg.num_layers, num_blocks, block_size,
                  cfg.num_kv_heads, cfg.head_dim)
@@ -318,10 +331,12 @@ class SpeculativeRunner(ModelRunner):
         self.draft_cfg = draft_cfg
         self.spec_tokens = spec_tokens
 
-    def init_cache(self, num_blocks, block_size, max_batch):
-        return {"tgt": init_paged_cache(self.cfg, num_blocks, block_size),
+    def init_cache(self, num_blocks, block_size, max_batch,
+                   kv_dtype="bf16"):
+        return {"tgt": init_paged_cache(self.cfg, num_blocks, block_size,
+                                        kv_dtype=kv_dtype),
                 "dft": init_paged_cache(self.draft_cfg, num_blocks,
-                                        block_size)}
+                                        block_size, kv_dtype=kv_dtype)}
 
     def step(self, params, cache, a, *, has_chunk):
         k = self.spec_tokens

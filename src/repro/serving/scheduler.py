@@ -79,6 +79,45 @@ class SamplingParams:
 
 
 @dataclass
+class SwapCostModel:
+    """Per-victim swap-vs-recompute decision for preemption.
+
+    Swapping moves ``2 * n_blocks * block_bytes`` over the device<->host
+    link (out now, back in later); recomputing replays ``num_computed``
+    prefill tokens through the model. Both rates start at conservative
+    defaults and are refined online by the engine's measurements (EMA), so
+    the policy adapts to the actual machine instead of a guessed ratio.
+    jax-free, like everything else in this module.
+    """
+
+    block_bytes: int                 # device bytes one block id costs
+    policy: str = "auto"             # "always" | "never" | "auto"
+    bytes_per_s: float = 4.0e9       # d2h+h2d bandwidth EMA
+    prefill_tok_s: float = 2.0e4     # recompute throughput EMA
+    ema_alpha: float = 0.2
+
+    def prefer_swap(self, n_blocks: int, n_recompute_tokens: int) -> bool:
+        if self.policy == "always":
+            return True
+        if self.policy == "never":
+            return False
+        move_s = 2.0 * n_blocks * self.block_bytes \
+            / max(self.bytes_per_s, 1.0)
+        recompute_s = n_recompute_tokens / max(self.prefill_tok_s, 1.0)
+        return move_s < recompute_s
+
+    def observe_swap(self, nbytes: int, seconds: float) -> None:
+        if nbytes > 0 and seconds > 0:
+            self.bytes_per_s += self.ema_alpha * (nbytes / seconds
+                                                  - self.bytes_per_s)
+
+    def observe_prefill(self, n_tokens: int, seconds: float) -> None:
+        if n_tokens > 0 and seconds > 0:
+            self.prefill_tok_s += self.ema_alpha * (n_tokens / seconds
+                                                    - self.prefill_tok_s)
+
+
+@dataclass
 class Request:
     prompt: np.ndarray                      # (prompt_len,) int32
     max_new: int = 16
@@ -137,6 +176,13 @@ class StepPlan:
     # speculative lookahead: each decode slot costs 1 + spec_tokens target
     # positions (the widened verify row)
     spec_tokens: int = 0
+    # host-swap copies the engine must perform around this step:
+    # swap_outs are (device_block, host_slot) d2h gathers of *pre-step*
+    # pool content (issue before anything can rewrite a freed block);
+    # swap_ins are (host_slot, device_block) h2d copies that must land
+    # before the step (and before COW copies, which may read them)
+    swap_outs: list[tuple[int, int]] = field(default_factory=list)
+    swap_ins: list[tuple[int, int]] = field(default_factory=list)
 
     @property
     def chunk(self) -> tuple[int, Request, int] | None:
@@ -177,7 +223,8 @@ class Scheduler:
                  chunk_width: int, *, enable_prefix_caching: bool = True,
                  chunk_quantum: int = 1, slot_cache=None,
                  encoder_cache=None, spec_tokens: int = 0,
-                 max_context: int | None = None, prefill_pack: int = 1):
+                 max_context: int | None = None, prefill_pack: int = 1,
+                 swap_cost: SwapCostModel | None = None):
         if max_num_batched_tokens <= max_batch * (1 + spec_tokens):
             raise ValueError(
                 f"max_num_batched_tokens={max_num_batched_tokens} must "
@@ -208,10 +255,20 @@ class Scheduler:
         if prefill_pack < 1:
             raise ValueError(f"prefill_pack={prefill_pack} must be >= 1")
         self.prefill_pack = prefill_pack
+        # host-swap preemption: active only when a cost model is supplied
+        # AND the block manager actually has a host tier
+        self.swap_cost = swap_cost
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}      # slot -> request
         self._join_order: list[int] = []           # slots, oldest first
         self.n_preemptions = 0
+        self.n_swap_preemptions = 0
+        self.n_swap_ins = 0
+        self.n_aborts = 0
+        self.host_hit_blocks = 0
+        # copy pairs accumulated while building the current plan
+        self._pending_swap_outs: list[tuple[int, int]] = []
+        self._pending_swap_ins: list[tuple[int, int]] = []
         self.cache_hit_tokens = 0
         # prefill tokens lost to chunk_quantum rounding on a step's final
         # chunk (earlier chunks' remainders roll into the next chunk)
@@ -228,6 +285,11 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    @property
+    def _swap_enabled(self) -> bool:
+        return (self.swap_cost is not None and self.bm is not None
+                and self.bm.num_host_blocks > 0)
 
     def free_slots(self) -> list[int]:
         return [s for s in range(self.max_batch) if s not in self.running]
@@ -273,6 +335,8 @@ class Scheduler:
         decodes harder than the single-chunk policy."""
         copies: list[tuple[int, int]] = []
         encodes: list[tuple[int, Request]] = []
+        self._pending_swap_outs = []
+        self._pending_swap_ins = []
         self._ensure_decode_capacity()
         decodes = [(s, r) for s, r in sorted(self.running.items())
                    if r.decode_ready]
@@ -285,6 +349,10 @@ class Scheduler:
                 if not r.decode_ready]
         while (len(pres) < self.prefill_pack and budget_left > 0
                and self.waiting and len(self.running) < self.max_batch):
+            head = self.waiting[0]
+            if (self.bm is not None and self.bm.is_swapped(head.rid)
+                    and not self.bm.can_swap_in(head.rid)):
+                break           # FCFS: wait for device blocks to free up
             slot, req = self._admit_one(copies, encodes)
             admitted += 1
             if not req.decode_ready:
@@ -318,9 +386,14 @@ class Scheduler:
                 budget_left -= n
                 width_left -= n
         self.quantum_dropped_tokens += pending_q_loss
-        return StepPlan(decodes=decodes, chunks=chunks, copies=copies,
+        plan = StepPlan(decodes=decodes, chunks=chunks, copies=copies,
                         admitted=admitted, encodes=encodes,
-                        spec_tokens=self.spec_tokens)
+                        spec_tokens=self.spec_tokens,
+                        swap_outs=self._pending_swap_outs,
+                        swap_ins=self._pending_swap_ins)
+        self._pending_swap_outs = []
+        self._pending_swap_ins = []
+        return plan
 
     def _quantize(self, n: int, remaining: int) -> int:
         """Round a non-final chunk down to the chunk quantum (SSM runners:
@@ -388,13 +461,36 @@ class Scheduler:
         req = self.waiting.popleft()
         if self.bm is None:
             return self._bind_slot(req, encodes)
+        if self.bm.is_swapped(req.rid):
+            # swap-preempted victim returning: its KV rows come back from
+            # the host tier byte-for-byte — num_computed survived the
+            # eviction, so there is no recompute chunk at all (hashed
+            # blocks whose device twin is still cached revive copy-free)
+            _, pairs = self.bm.swap_in(req.rid)
+            self._pending_swap_ins.extend(pairs)
+            self.n_swap_ins += 1
+            return self._bind_slot(req, encodes)
         bs = self.bm.block_size
         total = req.context_len
         hits: list[int] = []
+        hashes: list = []
         if self.enable_prefix_caching:
-            hits = self.bm.match(extend_chain_hashes(
-                req.hash_chain, req.prefill_tokens(), bs))
-        n_cached = len(hits) * bs
+            hashes = extend_chain_hashes(
+                req.hash_chain, req.prefill_tokens(), bs)
+            hits = self.bm.match(hashes)
+        host_ext: list[int] = []
+        if hashes and self._swap_enabled:
+            # a swapped request's hashed blocks are findable by *other*
+            # requests too: extend the device prefix with host-resident
+            # blocks (copied in, not recomputed), capped by free blocks
+            # left after adoption revives the cached-free device hits
+            hh = self.bm.match_host(hashes)
+            if len(hh) > len(hits):
+                n_revived = sum(
+                    1 for b in hits if self.bm.refcount(b) == 0)
+                avail = max(0, self.bm.num_free - n_revived)
+                host_ext = hh[len(hits):len(hits) + avail]
+        n_cached = (len(hits) + len(host_ext)) * bs
         cow_idx = None
         if n_cached > total - 1:
             # Whole stream cached: recompute the last token for its logits.
@@ -402,17 +498,28 @@ class Scheduler:
             # or drop that hit when no spare block exists for the copy.
             # The copy target must still be free *after* adoption revives
             # the matched cached-free blocks out of the free list.
+            # (When host_ext is nonempty the final block is a fresh host
+            # copy with refcount 1 — always writable in place after the
+            # deregister below, so no spare block is ever needed.)
             n_cached = total - 1
             cow_idx = n_cached // bs
-            n_revived = sum(1 for b in hits if self.bm.refcount(b) == 0)
-            if self.bm.refcount(hits[-1]) >= 1 \
-                    and self.bm.num_free - n_revived < 1:
-                hits = hits[:-1]
-                n_cached = len(hits) * bs
-                cow_idx = None
+            if not host_ext:
+                n_revived = sum(
+                    1 for b in hits if self.bm.refcount(b) == 0)
+                if self.bm.refcount(hits[-1]) >= 1 \
+                        and self.bm.num_free - n_revived < 1:
+                    hits = hits[:-1]
+                    n_cached = len(hits) * bs
+                    cow_idx = None
         self.bm.adopt(req.rid, hits)
+        if host_ext:
+            _, pairs = self.bm.host_copy_in(
+                req.rid, host_ext,
+                hashes[len(hits):len(hits) + len(host_ext)])
+            self._pending_swap_ins.extend(pairs)
+            self.host_hit_blocks += len(host_ext)
         req.num_computed = n_cached
-        req.n_published = len(hits)         # matched blocks are registered
+        req.n_published = len(hits) + len(host_ext)   # all registered
         self.cache_hit_tokens += n_cached
         if cow_idx is not None:
             src = self.bm.table(req.rid)[cow_idx]
@@ -420,11 +527,11 @@ class Scheduler:
             if dst is not None:
                 copies.append((src, dst))
             else:
-                # refcount was 1 (a revived cached block): the recompute
-                # will write its last position in place, so pull it from
-                # the cache index — a concurrent admission must not adopt
-                # a block with a pending write. It re-registers via
-                # note_progress once the write has happened.
+                # refcount was 1 (a revived cached block, or a fresh host
+                # copy): the recompute will write its last position in
+                # place, so pull it from the cache index — a concurrent
+                # admission must not adopt a block with a pending write.
+                # It re-registers via note_progress after the write.
                 self.bm.deregister(src)
                 req.n_published = cow_idx
         return self._bind_slot(req, encodes)
@@ -480,15 +587,53 @@ class Scheduler:
             self.encoder_cache.free(req.rid)
 
     def _preempt(self, slot: int) -> Request:
+        """Evict one running request. With a host tier, the cost model
+        picks swap (KV bytes move to pinned host memory; ``num_computed``
+        survives) or recompute (blocks freed hash-retained; the prompt +
+        generated tokens replay on re-admission) per victim."""
         req = self.running.pop(slot)
         self._join_order.remove(slot)
-        self._release(req)
-        req.num_computed = 0
-        req.n_published = 0         # re-admission gets a different table
+        if (self._swap_enabled and req.num_computed > 0
+                and self.bm.can_swap_out(req.rid)
+                and self.swap_cost.prefer_swap(
+                    len(self.bm.table(req.rid)), req.num_computed)):
+            self._pending_swap_outs.extend(self.bm.swap_out(req.rid))
+            if self.slot_cache is not None:
+                self.slot_cache.free(req.rid)
+            if self.encoder_cache is not None:
+                self.encoder_cache.free(req.rid)
+            self.n_swap_preemptions += 1
+            # num_computed / n_published survive: the KV rows themselves
+            # come back via swap_in, nothing is recomputed
+        else:
+            self._release(req)
+            req.num_computed = 0
+            req.n_published = 0     # re-admission gets a different table
         req.n_preempted += 1
         self.n_preemptions += 1
         self.waiting.appendleft(req)
         return req
+
+    def abort(self, rid: int) -> bool:
+        """Cancel a request wherever it currently lives: waiting (dropping
+        any host-swapped KV), or running (blocks freed hash-retained, slot
+        released). Returns False when the rid is unknown — already retired
+        or never submitted — which the caller treats as a no-op."""
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                del self.waiting[i]
+                if self.bm is not None and self.bm.is_swapped(rid):
+                    self.bm.swap_discard(rid)
+                self.n_aborts += 1
+                return True
+        for slot, r in list(self.running.items()):
+            if r.rid == rid:
+                self.running.pop(slot)
+                self._join_order.remove(slot)
+                self._release(r)
+                self.n_aborts += 1
+                return True
+        return False
 
     def retire(self, slot: int) -> Request:
         req = self.running.pop(slot)

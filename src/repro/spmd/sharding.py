@@ -170,6 +170,11 @@ def serving_cache_pspec(path, leaf, tp: int) -> P:
     if keys and keys[-1] in ("k", "v", "xk", "xv") and leaf.ndim == 5:
         ok = leaf.shape[3] % tp == 0
         return P(None, None, None, "model" if ok else None, None)
+    if keys and keys[-1] in ("k_scale", "v_scale") and leaf.ndim == 5:
+        # quantized-pool scale leaves (NP, nb, bs, K, 1): same kv-head
+        # sharding as the value pools they describe
+        ok = leaf.shape[3] % tp == 0
+        return P(None, None, None, "model" if ok else None, None)
     return P()
 
 

@@ -532,4 +532,89 @@ def test_render_metrics_without_driver(tiny_mesh, glm_params):
     text = render_metrics(eng)
     _assert_prometheus_valid(text)
     assert "repro_engine_cache_hit_rate 0" in text      # div-zero guarded
+    assert 'repro_engine_kv_dtype{kv_dtype="bf16"} 1' in text
+    assert "repro_engine_swap_space_mib 0" in text      # tiering off
+    assert "repro_engine_swap_preemptions_total 0" in text
     assert "repro_frontend" not in text
+
+
+# ---------------------------------------------------------------------------
+# Per-request cancellation: driver abort path + disconnect-triggered abort
+# ---------------------------------------------------------------------------
+
+
+def test_driver_abort_cancels_pending_and_running(tiny_mesh, glm_params):
+    """abort() kills a request that is still queued (never reaches the
+    engine) and one that is mid-generation (engine abort between steps);
+    the survivor's stream is untouched and every block is released."""
+    cfg, params = glm_params
+    prompts = [RNG.integers(0, cfg.vocab_size, 16).astype(np.int32)
+               for _ in range(3)]
+    eng = _engine(cfg, tiny_mesh, params, max_batch=1)
+    drv = AsyncEngineDriver(eng)
+
+    async def go():
+        s0 = await drv.submit(Request(prompts[0].copy(), max_new=24))
+        s1 = await drv.submit(Request(prompts[1].copy(), max_new=4))
+        s2 = await drv.submit(Request(prompts[2].copy(), max_new=4))
+        drv.abort(s2.request.rid)          # aborted before the loop starts
+        await drv.start()
+        toks0 = []
+        async for ev in s0:
+            toks0.append(ev.token)
+            if len(toks0) == 2:
+                drv.abort(s0.request.rid)  # mid-stream abort
+        toks1 = [ev.token async for ev in s1]
+        await drv.drain()
+        return toks0, toks1
+
+    toks0, toks1 = asyncio.run(go())
+    assert len(toks1) == 4                  # survivor runs to completion
+    assert 2 <= len(toks0) < 24             # victim's stream closed early
+    assert drv.aborted == 2
+    assert eng.stats["aborts"] >= 1         # s0 was live inside the engine
+    assert eng.bm.stats().blocks_in_use == 0
+    eng.bm.check()
+
+
+def test_http_disconnect_aborts_request(tiny_mesh, glm_params):
+    """A client that vanishes mid-SSE-stream cancels its request: the
+    driver abort path fires, generation stops early, and both the
+    dropped-stream and aborted counters land in /metrics."""
+    cfg, params = glm_params
+    prompt = [int(t) for t in RNG.integers(0, cfg.vocab_size, 16)]
+    eng = _engine(cfg, tiny_mesh, params)
+    drv = AsyncEngineDriver(eng)
+
+    async def go():
+        async with drv:
+            srv = FrontendServer(drv, port=0)
+            await srv.start()
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", srv.port)
+            writer.write(_post("/generate",
+                               {"prompt": prompt, "max_new": 64}))
+            await writer.drain()
+            got = b""
+            while got.count(b"data: ") < 2:    # two tokens, then vanish
+                got += await reader.read(256)
+            writer.close()
+            await writer.wait_closed()
+            for _ in range(200):               # wait for the abort to land
+                if drv.aborted:
+                    break
+                await asyncio.sleep(0.05)
+            st, _, body = await _http(srv.port, _get("/metrics"))
+            assert st == 200
+            await srv.aclose()
+            return body.decode()
+
+    text = asyncio.run(go())
+    assert drv.dropped_streams == 1
+    assert drv.aborted == 1
+    assert eng.stats["aborts"] == 1
+    assert eng.stats["tokens"] < 64            # stopped well before max_new
+    assert "repro_frontend_aborted_requests_total 1" in text
+    assert "repro_frontend_dropped_streams_total 1" in text
+    assert "repro_engine_aborts_total 1" in text
+    assert eng.bm.stats().blocks_in_use == 0

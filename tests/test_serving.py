@@ -333,12 +333,15 @@ def test_prefix_cache_eviction_prefers_unhashed():
 
 def _bm_random_walk(tape):
     """Interpret ``tape`` (an iterator of ints) as add/grow/fork/free/COW/
-    register/adopt/truncate ops against a BlockManager, asserting the full
-    invariant set and exact free-block accounting after every op (truncate
-    is the speculative draft/target rewind path)."""
-    NB, BS = 9, 4
-    bm = BlockManager(num_blocks=NB, block_size=BS)
+    register/adopt/truncate/swap ops against a BlockManager with a host
+    tier, asserting the full invariant set and exact free-block accounting
+    on both tiers after every op (truncate is the speculative draft/target
+    rewind path; swap-out/swap-in/swap-discard are the host-residency
+    preemption/abort paths)."""
+    NB, BS, NH = 9, 4, 6
+    bm = BlockManager(num_blocks=NB, block_size=BS, num_host_blocks=NH)
     tokens: dict[int, int] = {}       # rid -> tokens covered
+    swapped: dict[int, int] = {}      # rid -> host slots owned
     next_rid = [0]
     next_hash = [0]
 
@@ -354,11 +357,14 @@ def _bm_random_walk(tape):
         in_use = {b for rid in tokens for b in bm.table(rid)}
         assert bm.num_free == (NB - 1) - len(in_use)
         assert bm.stats().blocks_in_use == len(in_use)
+        assert bm.num_host_free == NH - sum(swapped.values())
+        for rid in swapped:
+            assert bm.is_swapped(rid)
 
-    for _ in range(120):
-        op = draw(8)
+    for _ in range(160):
+        op = draw(11)
         rids = list(tokens)
-        if op == 0 or not rids:                       # allocate
+        if op == 0 or (not rids and op < 8):          # allocate
             rid = new_rid()
             try:
                 bm.allocate(rid, draw(3 * BS + 1))
@@ -399,6 +405,30 @@ def _bm_random_walk(tape):
             n = draw(cover + 1) if cover else 0
             bm.truncate(rid, n)
             tokens[rid] = min(tokens[rid], n)
+        elif op == 8:                                 # swap out (preempt)
+            if rids:
+                rid = rids[draw(len(rids))]
+                if bm.can_swap_out(rid):
+                    n = len(bm.table(rid))
+                    pairs = bm.swap_out(rid)
+                    assert len(pairs) == n
+                    swapped[rid] = n
+                    del tokens[rid]
+        elif op == 9:                                 # swap in (re-admit)
+            srids = list(swapped)
+            if srids:
+                rid = srids[draw(len(srids))]
+                if bm.can_swap_in(rid):
+                    t, pairs = bm.swap_in(rid)
+                    assert len(t) == swapped.pop(rid)
+                    assert len(pairs) <= len(t)   # revivals copy nothing
+                    tokens[rid] = 0
+        elif op == 10:                                # swap discard (abort)
+            srids = list(swapped)
+            if srids:
+                rid = srids[draw(len(srids))]
+                bm.swap_discard(rid)
+                del swapped[rid]
         else:                                         # adopt cached blocks
             if next_hash[0]:
                 h = draw(next_hash[0]) + 1
@@ -412,7 +442,12 @@ def _bm_random_walk(tape):
         bm.free(rid)
         del tokens[rid]
         check_accounting()
+    for rid in list(swapped):
+        bm.swap_discard(rid)
+        del swapped[rid]
+        check_accounting()
     assert bm.num_free == NB - 1
+    assert bm.num_host_free == NH
 
 
 def test_block_manager_random_walk_seeded():
@@ -432,6 +467,105 @@ def test_block_manager_random_walk_hypothesis():
         _bm_random_walk(iter(lambda: next(it, 0), None))
 
     prop()
+
+
+# ---------------------------------------------------------------------------
+# Host tier: swap-out / swap-in residency
+# ---------------------------------------------------------------------------
+
+
+def test_swap_roundtrip_revives_free_device_blocks():
+    """Swap out then immediately swap in: hashed device blocks survived on
+    the free list (pages are never written while free), so the table is
+    rebuilt in place with zero h2d copies."""
+    bm = BlockManager(num_blocks=6, block_size=4, num_host_blocks=4)
+    bm.allocate(1, 8)
+    t0 = bm.table(1)
+    bm.register(t0[0], b"h0"), bm.register(t0[1], b"h1")
+    pairs = bm.swap_out(1)
+    assert [b for b, _ in pairs] == t0 and bm.is_swapped(1)
+    assert bm.num_host_free == 2 and bm.num_free == 5
+    assert bm.match_host([b"h0", b"h1"]) == [s for _, s in pairs]
+    bm.check()
+    t1, copies = bm.swap_in(1)
+    assert t1 == t0 and copies == []              # pure revival
+    assert bm.num_host_free == 4 and not bm.is_swapped(1)
+    bm.check()
+    bm.free(1)
+    bm.check()
+
+
+def test_swap_in_copies_after_device_eviction():
+    """If the freed device twins get recycled while a request is swapped
+    out, swap-in must allocate fresh blocks and return h2d copy pairs,
+    re-registering the hashes on the new blocks."""
+    bm = BlockManager(num_blocks=6, block_size=4, num_host_blocks=4)
+    bm.allocate(1, 8)
+    t0 = bm.table(1)
+    bm.register(t0[0], b"h0"), bm.register(t0[1], b"h1")
+    bm.swap_out(1)
+    bm.allocate(2, 20)                 # recycles every free block
+    assert bm.match([b"h0", b"h1"]) == []         # device hashes wiped
+    assert not bm.can_swap_in(1)
+    bm.free(2)
+    t1, copies = bm.swap_in(1)
+    assert len(t1) == 2 and len(copies) == 2      # no revival possible
+    assert bm.match([b"h0", b"h1"]) == t1         # hashes re-registered
+    bm.check()
+
+
+def test_match_host_and_host_copy_in_shares_blocks():
+    """A host prefix hit copies swapped slots into fresh device blocks
+    without disturbing the swapped-out owner; a later swap-in of the
+    owner dedups onto the re-registered blocks (refcount share)."""
+    bm = BlockManager(num_blocks=6, block_size=4, num_host_blocks=4)
+    bm.allocate(1, 8)
+    h = chain_block_hashes(np.arange(8, dtype=np.int32), 4)
+    for b, hb in zip(bm.table(1), h):
+        bm.register(b, hb)
+    bm.swap_out(1)
+    bm.allocate(2, 20)                 # wipe the device-side hash index
+    bm.free(2)
+    assert bm.match(h) == []
+    slots = bm.match_host(h)
+    assert len(slots) == 2
+    t3, copies = bm.host_copy_in(3, slots, h)
+    assert len(t3) == 2 and [s for s, _ in copies] == slots
+    assert bm.match(h) == t3           # host hit re-registered on device
+    bm.check()
+    t1, copies1 = bm.swap_in(1)        # owner dedups onto rid 3's blocks
+    assert t1 == t3 and copies1 == []
+    assert bm.refcount(t1[0]) == 2
+    bm.check()
+    bm.free(1), bm.free(3)
+    bm.check()
+
+
+def test_swap_discard_releases_host_slots():
+    bm = BlockManager(num_blocks=6, block_size=4, num_host_blocks=4)
+    bm.allocate(1, 8)
+    bm.register(bm.table(1)[0], b"h0")
+    bm.swap_out(1)
+    assert bm.num_host_free == 2
+    bm.swap_discard(1)
+    assert bm.num_host_free == 4 and not bm.is_swapped(1)
+    assert bm.match_host([b"h0"]) == []           # host hash died with slot
+    bm.check()
+
+
+def test_swap_cost_model_prefers_cheaper_side():
+    from repro.serving.scheduler import SwapCostModel
+    m = SwapCostModel(block_bytes=1 << 20)        # defaults: 4 GB/s, 20k t/s
+    # 2 blocks: 4 MiB both ways / 4 GB/s ~ 1.0 ms < 100 tokens / 20k t/s
+    assert m.prefer_swap(2, 100)
+    assert not m.prefer_swap(64, 4)               # 128 MiB vs 0.2 ms
+    assert SwapCostModel(block_bytes=1, policy="always").prefer_swap(9, 0)
+    assert not SwapCostModel(block_bytes=1, policy="never").prefer_swap(0, 9)
+    # EMA observations move the estimates toward the measured rates
+    m.observe_swap(1 << 30, 1.0)                  # measured 1 GB/s
+    assert m.bytes_per_s < 4e9
+    m.observe_prefill(100_000, 1.0)               # measured 100k tok/s
+    assert m.prefill_tok_s > 2e4
 
 
 # ---------------------------------------------------------------------------
@@ -524,6 +658,75 @@ def test_scheduler_preempts_newest_and_requeues_front():
     assert s.waiting[0].rid == c.rid
     assert np.array_equal(b.prefill_tokens(),
                           np.concatenate([b.prompt, [7, 8]]))
+    bm.check()
+
+
+def _swap_preempt_setup():
+    """The growth-pressure choreography of the preemption test above, but
+    with a host tier and a policy="always" cost model: the evicted victim
+    is swap-preempted instead of released."""
+    from repro.serving.scheduler import SwapCostModel
+    bm = BlockManager(num_blocks=7, block_size=2, num_host_blocks=8)
+    s = _sched(bm, max_batch=2, max_blocks_per_seq=6, budget=8, chunk=4,
+               enable_prefix_caching=False,
+               swap_cost=SwapCostModel(block_bytes=64, policy="always"))
+    a, b = _req(n_prompt=4), _req(n_prompt=4)
+    s.add(a), s.add(b)
+    _complete_chunk(s.schedule())           # a prefills, samples
+    _complete_chunk(s.schedule())           # b prefills, samples
+    s.schedule()                            # both decode: 3 blocks each
+    for r in (a, b):
+        r.out.append(8)
+        r.num_computed += 1
+    plan = s.schedule()         # a's growth evicts b -> swapped, not reset
+    return bm, s, a, b, plan
+
+
+def test_scheduler_swap_preemption_preserves_progress():
+    bm, s, a, b, plan = _swap_preempt_setup()
+    assert s.n_swap_preemptions == 1    # counted within n_preemptions
+    assert len(plan.swap_outs) == 3         # b's whole table went to host
+    assert bm.is_swapped(b.rid) and s.waiting[0] is b
+    assert b.num_computed == 5              # progress survives the swap
+    assert b.out == [7, 8]
+    bm.check()
+    # a finishes and retires; b swaps back in and resumes *decoding* —
+    # no recompute chunk is scheduled for it
+    slot_a = next(sl for sl, r in s.running.items() if r is a)
+    s.retire(slot_a)
+    plan2 = s.schedule()
+    assert s.n_swap_ins == 1 and not bm.is_swapped(b.rid)
+    assert len(plan2.swap_ins) == 3         # unhashed blocks: all copied
+    assert plan2.chunk is None              # no recompute chunk for b
+    assert b.num_computed == 5
+    plan3 = s.schedule()                    # decodes are planned pre-admit
+    assert [r.rid for _, r in plan3.decodes] == [b.rid]
+    bm.check()
+
+
+def test_scheduler_abort_swapped_request_discards_host_slots():
+    bm, s, a, b, _ = _swap_preempt_setup()
+    assert bm.num_host_free == 8 - 3
+    assert s.abort(b.rid)
+    assert s.n_aborts == 1
+    assert bm.num_host_free == 8 and not bm.is_swapped(b.rid)
+    assert not s.waiting
+    bm.check()
+
+
+def test_scheduler_abort_running_and_waiting():
+    bm = BlockManager(num_blocks=17, block_size=4)
+    s = _sched(bm, max_batch=1, budget=16, chunk=8)
+    a, b = _req(), _req()
+    s.add(a), s.add(b)
+    _complete_chunk(s.schedule())           # a running, b waiting
+    assert s.abort(b.rid)                   # waiting abort: just dequeues
+    assert not s.waiting
+    assert s.abort(a.rid)                   # running abort: frees the slot
+    assert not s.running and not s.has_work
+    assert bm.stats().blocks_in_use == 0
+    assert not s.abort(999_999)             # unknown rid: no-op
+    assert s.n_aborts == 2
     bm.check()
 
 
@@ -756,6 +959,149 @@ def test_engine_preemption_preserves_greedy_output(glm_smoke):
     assert tight.stats["cache_hit_tokens"] > 0
     for w, r in zip(want, reqs):
         np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_engine_swap_preemption_preserves_greedy_output(glm_smoke):
+    """Swap-preemption is byte-identical to the unconstrained engine (and
+    hence to recompute-preemption): swapped pages come back exact copies,
+    and the host round-trip shows up in the swap counters."""
+    from repro.serving import InferenceEngine, Request
+    from repro.serving.kv_cache import block_bytes
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    base = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
+    want = list(base.run([Request(p, max_new=20) for p in prompts])
+                .values())
+    bb = block_bytes(cfg, 16)
+    tight = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, num_blocks=8, params=server.params,
+                            swap_space_bytes=8 * bb, swap_policy="always",
+                            debug_invariants=True)
+    reqs = [Request(p, max_new=20) for p in prompts]
+    got = tight.run(reqs)
+    assert tight.stats["swap_preemptions"] >= 1
+    assert tight.stats["swap_ins"] >= 1
+    assert tight.stats["swapped_out_blocks"] > 0
+    assert tight.stats["swapped_out_bytes"] \
+        == tight.stats["swapped_out_blocks"] * bb
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+    assert tight.bm.stats().blocks_in_use == 0
+    tight.bm.check()
+
+
+def test_engine_abort_mid_run_releases_resources(glm_smoke):
+    """Aborting a running and a waiting request mid-serve frees their
+    slots/blocks, counts in stats, and leaves the survivors untouched."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(3)]
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    reqs = [Request(p, max_new=24) for p in prompts]
+    for r in reqs:
+        eng.sched.add(r)
+    for _ in range(6):
+        eng.step()
+    assert eng.abort(reqs[0].rid)          # running
+    assert eng.abort(reqs[2].rid)          # still waiting (max_batch=2)
+    assert not eng.abort(reqs[0].rid)      # already gone
+    while eng.sched.has_work:
+        eng.step()
+    assert eng.stats["aborts"] == 2
+    assert len(reqs[1].out) == 24          # survivor ran to completion
+    assert 0 < len(reqs[0].out) < 24       # victim stopped where aborted
+    assert len(reqs[2].out) <= 1           # never got a slot
+    assert eng.bm.stats().blocks_in_use == 0
+    eng.bm.check()
+
+
+def test_engine_int8_cross_path_identity(glm_smoke):
+    """One kv_dtype, every path: the int8 engine's greedy outputs are
+    byte-identical across an unconstrained run, a prefix-cache re-run,
+    recompute preemption and swap preemption — quantization is a pure
+    elementwise function of the bf16 writes, so the repo's cross-path
+    byte-identity story survives storage narrowing."""
+    from repro.serving import InferenceEngine, Request
+    from repro.serving.kv_cache import block_bytes
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    kw = dict(max_batch=2, block_size=16, max_len=96, params=server.params,
+              kv_dtype="int8", debug_invariants=True)
+    base = InferenceEngine(cfg, mesh, **kw)
+    assert base.stats["kv_dtype"] == "int8"
+    want = list(base.run([Request(p, max_new=20) for p in prompts])
+                .values())
+    rerun = list(base.run([Request(p, max_new=20) for p in prompts])
+                 .values())                # second pass: prefix-cache hits
+    assert base.stats["cache_hit_tokens"] > 0
+    for w, g in zip(want, rerun):
+        np.testing.assert_array_equal(w, g)
+    bb = block_bytes(cfg, 16, kv_dtype="int8")
+    for swap_bytes in (0, 8 * bb):
+        tight = InferenceEngine(cfg, mesh, num_blocks=8,
+                                swap_space_bytes=swap_bytes,
+                                swap_policy="always" if swap_bytes
+                                else "auto", **kw)
+        reqs = [Request(p, max_new=20) for p in prompts]
+        got = tight.run(reqs)
+        n_pre = (tight.stats["swap_preemptions"] if swap_bytes
+                 else tight.stats["preemptions"])
+        assert n_pre >= 1
+        for w, r in zip(want, reqs):
+            np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_engine_quantized_tolerance_vs_bf16(glm_smoke):
+    """Quantized engines are tolerance-equivalent to bf16 on greedy
+    tokens: the prompt-prefill (first) token matches on nearly every
+    request, and int8 (8-bit mantissa budget) tracks the full trajectory
+    far more closely than the tiny-signal random-weight setup lets fp8
+    (3-bit mantissa) — calibrated against the fixed fixture params."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(4)]
+    kw = dict(max_batch=2, block_size=16, max_len=96, params=server.params,
+              debug_invariants=True)
+    outs = {}
+    for dtype in ("bf16", "int8", "fp8"):
+        eng = InferenceEngine(cfg, mesh, kv_dtype=dtype, **kw)
+        reqs = [Request(p, max_new=12) for p in prompts]
+        got = eng.run(reqs)
+        outs[dtype] = [got[r.rid] for r in reqs]
+    for dtype, min_first, min_total in (("int8", 3, 0.75), ("fp8", 2, 0.4)):
+        first = sum(a[0] == b[0]
+                    for a, b in zip(outs[dtype], outs["bf16"]))
+        total = sum(int(np.sum(a == b))
+                    for a, b in zip(outs[dtype], outs["bf16"]))
+        assert first >= min_first, (dtype, first)
+        assert total >= min_total * 4 * 12, (dtype, total)
+
+
+def test_engine_int8_cache_layout_and_footprint(glm_smoke):
+    """The int8 engine's paged pools really are int8 with fp32 (..., 1)
+    scale leaves riding the same block axis, and the device footprint
+    shrinks accordingly."""
+    import jax
+    from repro.serving import InferenceEngine
+    cfg, mesh, server = glm_smoke
+    kw = dict(max_batch=2, block_size=16, max_len=96, params=server.params,
+              num_blocks=8)
+    bf = InferenceEngine(cfg, mesh, **kw)
+    i8 = InferenceEngine(cfg, mesh, kv_dtype="int8", **kw)
+    dtypes = {str(p.dtype) for p in jax.tree.leaves(i8.cache)
+              if p.ndim >= 2 and p.shape[1] == 8}
+    assert "int8" in dtypes and "float32" in dtypes
+    scales = [p for p in jax.tree.leaves(i8.cache)
+              if p.ndim == 5 and p.shape[1] == 8 and p.shape[-1] == 1]
+    assert scales and all(p.dtype == np.float32 for p in scales)
+    assert i8.stats["kv_cache_mib"] < bf.stats["kv_cache_mib"]
 
 
 def test_engine_shared_prefix_shares_blocks(glm_smoke):
@@ -1247,6 +1593,30 @@ def test_engine_speculative_greedy_matches_plain(tiny_mesh_module,
     if self_draft:
         # identical draft == target logits: every draft token is accepted
         assert spec.stats["mean_accept_len"] > 1.0
+
+
+def test_engine_int8_speculative_matches_plain_int8(tiny_mesh_module,
+                                                    star_params):
+    """Speculative decode (k=2, self-draft) over int8 pools is
+    byte-identical to the plain int8 engine: draft and target quantize
+    the same bf16 writes, so verify rows see the same dequantized KV."""
+    from repro.serving import InferenceEngine, Request
+    cfg, params = star_params
+    mesh = tiny_mesh_module
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(4)]
+    plain = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, params=params, kv_dtype="int8",
+                            debug_invariants=True)
+    want = list(plain.run([Request(p, max_new=8) for p in prompts])
+                .values())
+    spec = _spec_engine(cfg, mesh, params, 2, self_draft=True,
+                        kv_dtype="int8")
+    reqs = [Request(p, max_new=8) for p in prompts]
+    got = spec.run(reqs, arrival_steps=[0, 0, 2, 5])
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+    assert spec.stats["mean_accept_len"] > 1.0   # self-draft still accepts
 
 
 def test_engine_speculative_prefix_cache_hit_cow(tiny_mesh_module,
