@@ -451,6 +451,60 @@ def bench_serving_kv_tiering(rows):
 
 
 # ---------------------------------------------------------------------------
+# Production sampling surface (docs/sampling.md): the full in-jit pipeline
+# (top-p + min-p + penalties + logprobs, per slot) vs the pure-greedy fast
+# path on the identical workload — the cost of the richer per-slot
+# transform, isolated from model/runner differences.
+# ---------------------------------------------------------------------------
+
+
+def bench_serving_sampling(rows):
+    from repro.config import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import InferenceEngine, Request
+    from repro.serving.scheduler import SamplingParams
+
+    cfg = get_config("glm4_9b", smoke=True)
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(21)
+    n_req, prompt_len, max_batch = 12, 32, 4
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_req)]
+    max_news = [4 + 4 * (i % 4) for i in range(n_req)]
+    n_tok = sum(max_news)
+    full_sp = [SamplingParams(temperature=0.9, top_k=16, top_p=0.85,
+                              min_p=0.02, repetition_penalty=1.2,
+                              frequency_penalty=0.1, logprobs=4, seed=i)
+               for i in range(n_req)]
+
+    def mk(sps=None):
+        return [Request(p, max_new=mn,
+                        sampling=sps[i] if sps else SamplingParams())
+                for i, (p, mn) in enumerate(zip(prompts, max_news))]
+
+    shared_params = None
+    dts = {}
+    for name, sps in (("serving/sampling_greedy_base", None),
+                      ("serving/sampling_full", full_sp)):
+        eng = InferenceEngine(cfg, mesh, max_batch=max_batch, block_size=16,
+                              max_len=128, enable_prefix_caching=False,
+                              params=shared_params)
+        shared_params = eng.params          # identical weights both rows
+        eng.run(mk(sps))                    # compile
+        t0 = time.perf_counter()
+        eng.run(mk(sps))
+        dts[name] = dt = time.perf_counter() - t0
+        derived = (f"tok_s={n_tok/dt:.1f} "
+                   f"full_sampling_steps={eng.stats['full_sampling_steps']}")
+        if sps is None:
+            assert eng.stats["full_sampling_steps"] == 0  # fast path held
+        else:
+            derived += (" overhead_ratio="
+                        f"{dt/dts['serving/sampling_greedy_base']:.3f}")
+        rows.append(_csv(name, dt / n_tok * 1e6, derived))
+
+
+# ---------------------------------------------------------------------------
 # Paged-attention kernel rows: decode and chunked prefill through the
 # dispatch layer with the pages_per_compute_block knob, plus the ragged
 # packed-prefill op (fused KV scatter + attention). On CPU these time the

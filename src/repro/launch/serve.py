@@ -101,8 +101,15 @@ def make_requests(cfg, args, rng):
     for i in range(args.requests):
         # staggered horizons: each request retires on its own max_new
         max_new = max(1, args.max_new - (i % 4) * args.max_new // 4)
+        stop = tuple(tuple(int(t) for t in s.split(","))
+                     for s in (args.stop or []))
         sp = SamplingParams(temperature=args.temperature,
-                            top_k=args.top_k, seed=i)
+                            top_k=args.top_k, seed=i,
+                            top_p=args.top_p, min_p=args.min_p,
+                            repetition_penalty=args.repetition_penalty,
+                            presence_penalty=args.presence_penalty,
+                            frequency_penalty=args.frequency_penalty,
+                            logprobs=args.logprobs, stop=stop)
         frames = None
         if cfg.frontend == "audio":
             frames = rng.normal(0, 1, (cfg.encoder_seq_len, cfg.d_model)
@@ -111,7 +118,7 @@ def make_requests(cfg, args, rng):
             rng.integers(0, cfg.vocab_size, args.prompt_len
                          ).astype(np.int32),
             max_new=max_new, sampling=sp, eos_id=args.eos_id,
-            frames=frames))
+            min_new=args.min_new, frames=frames))
     return reqs
 
 
@@ -167,6 +174,8 @@ def run_engine(cfg, mesh, args):
           f"cache_hit_tokens={s['cache_hit_tokens']} "
           f"cow_copies={s['cow_copies']} "
           f"peak_block_util={s['peak_block_utilization']:.2f}")
+    print(f"[serve] sampling: full_sampling_steps={s['full_sampling_steps']} "
+          f"stop_hits={s['stop_hits']}")
     print(f"[serve] frontend: submitted={controller.submitted} "
           f"shed={controller.shed} completed={controller.completed} "
           f"queue_peak={controller.queue_peak} "
@@ -285,6 +294,28 @@ def main():
                     "are shed regardless of the SLO projection")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off); composes "
+                    "with --top-k / --min-p (docs/sampling.md)")
+    ap.add_argument("--min-p", type=float, default=0.0,
+                    help="min-p truncation relative to the max "
+                    "probability (0 = off)")
+    ap.add_argument("--repetition-penalty", type=float, default=1.0,
+                    help="divide positive / multiply negative logits of "
+                    "already-seen tokens (1.0 = off)")
+    ap.add_argument("--presence-penalty", type=float, default=0.0,
+                    help="subtract once per distinct generated token")
+    ap.add_argument("--frequency-penalty", type=float, default=0.0,
+                    help="subtract per occurrence of a generated token")
+    ap.add_argument("--logprobs", type=int, default=0,
+                    help="per-token top-N logprobs in the stream (0 = off)")
+    ap.add_argument("--stop", action="append", default=None,
+                    metavar="IDS",
+                    help="stop sequence as comma-separated token ids; "
+                    "repeatable (each flag adds one sequence)")
+    ap.add_argument("--min-new", type=int, default=0,
+                    help="ignore EOS / stop sequences before this many "
+                    "generated tokens (max_new still wins)")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

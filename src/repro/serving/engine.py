@@ -55,6 +55,7 @@ from repro.serving.cache import (EncoderCache, SlotStateCache,
                                  encoder_cache_bytes, slot_state_bytes)
 from repro.serving.kv_cache import (TRASH_BLOCK, BlockManager, block_bytes)
 from repro.serving.runners import make_runner
+from repro.serving.sampling import SamplingBuffer
 from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
                                      StepPlan, SwapCostModel)
 from repro.serving.stats import Histogram, SECONDS_BUCKETS, STEP_BUCKETS
@@ -115,7 +116,8 @@ class InferenceEngine:
                  shard_params: bool = False,
                  latency_record_cap: int = LATENCY_RECORD_CAP,
                  prefill_pack: int = 1, kv_dtype: str = "bf16",
-                 swap_space_bytes: int = 0, swap_policy: str = "auto"):
+                 swap_space_bytes: int = 0, swap_policy: str = "auto",
+                 max_logprobs: int = 8, max_stop_len: int = 8):
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
         # tensor parallelism over the mesh "model" axis: page pools and
@@ -203,6 +205,14 @@ class InferenceEngine:
         if not self.runner.supports_packed_prefill:
             prefill_pack = 1
         self.prefill_pack = max(1, prefill_pack)
+        # dense per-slot sampling state (full path): param counts, prompt
+        # masks and stop rings, bound/released alongside the slot caches
+        self.max_logprobs = max_logprobs
+        self.max_stop_len = max_stop_len
+        self.runner.max_logprobs = max_logprobs
+        self.samp_buf = SamplingBuffer(max_batch, cfg.vocab_size,
+                                       max_stop_len=max_stop_len,
+                                       max_logprobs=max_logprobs)
         self.sched = Scheduler(self.bm, max_batch, self.max_blocks_per_seq,
                                max_num_batched_tokens, self.chunk_width,
                                enable_prefix_caching=enable_prefix_caching,
@@ -213,7 +223,8 @@ class InferenceEngine:
                                max_context=-(-max_len // block_size)
                                * block_size,
                                prefill_pack=self.prefill_pack,
-                               swap_cost=self._swap_cost)
+                               swap_cost=self._swap_cost,
+                               sampling_buffer=self.samp_buf)
         self.max_batch = max_batch
         self.debug_invariants = debug_invariants
 
@@ -248,6 +259,11 @@ class InferenceEngine:
         self._step_plain = jax.jit(
             functools.partial(self.runner.step, has_chunk=False),
             donate_argnums=(1,))
+        # full-sampling executables are built LAZILY: a deployment that
+        # never sees a top-p/penalty/logprobs request never compiles (or
+        # traces) the full pipeline — the pure-greedy fast-path guard
+        # test asserts this dict stays empty on all-greedy traffic
+        self._full_steps: dict[bool, object] = {}
         if self.runner.needs_encoder:
             self._encode = jax.jit(self.runner.encode, donate_argnums=(1,))
         if self.runner.needs_blocks:
@@ -292,6 +308,7 @@ class InferenceEngine:
                       "latency": {},
                       "kv_cache_mib": round(cache_mib / 2 ** 20, 3),
                       "kv_dtype": kv_dtype, "aborts": 0,
+                      "stop_hits": 0, "full_sampling_steps": 0,
                       "swap_preemptions": 0, "swap_ins": 0,
                       "host_hit_blocks": 0,
                       "swapped_out_blocks": 0, "swapped_in_blocks": 0,
@@ -451,7 +468,17 @@ class InferenceEngine:
 
     # -- host-side step ----------------------------------------------------
 
-    def _build_arrays(self, plan: StepPlan) -> dict:
+    def _full_step(self, has_chunk: bool):
+        """The jitted step with the full sampling pipeline, compiled on
+        first use only (see ``_full_steps``)."""
+        if has_chunk not in self._full_steps:
+            self._full_steps[has_chunk] = jax.jit(
+                functools.partial(self.runner.step, has_chunk=has_chunk,
+                                  full_sampling=True),
+                donate_argnums=(1,))
+        return self._full_steps[has_chunk]
+
+    def _build_arrays(self, plan: StepPlan, full: bool = False) -> dict:
         B, C, nbmax = self.max_batch, self.chunk_width, self.max_blocks_per_seq
         S = self.prefill_pack
         a = {"d_tok": np.zeros(B, np.int32),
@@ -463,6 +490,17 @@ class InferenceEngine:
              "seeds": np.zeros(B + S, np.int32),
              "rids": np.zeros(B + S, np.int32),
              "counters": np.zeros(B + S, np.int32)}
+        if full:
+            # full-pipeline rows: identity defaults on every inactive /
+            # plain-params row, dense count state gathered per request
+            V = self.samp_buf.vocab_size
+            a.update({"top_ps": np.ones(B + S, np.float32),
+                      "min_ps": np.zeros(B + S, np.float32),
+                      "rep_pens": np.ones(B + S, np.float32),
+                      "pres_pens": np.zeros(B + S, np.float32),
+                      "freq_pens": np.zeros(B + S, np.float32),
+                      "pmask": np.zeros((B + S, V), bool),
+                      "ocounts": np.zeros((B + S, V), np.int32)})
         if S == 1:
             a.update({"c_tok": np.zeros((1, C), np.int32),
                       "c_start": np.zeros(1, np.int32),
@@ -489,6 +527,16 @@ class InferenceEngine:
             a["seeds"][i] = req.sampling.seed
             a["rids"][i] = req.rid
             a["counters"][i] = len(req.out)
+            if full:
+                sp = req.sampling
+                a["top_ps"][i] = sp.top_p
+                a["min_ps"][i] = sp.min_p
+                a["rep_pens"][i] = sp.repetition_penalty
+                a["pres_pens"][i] = sp.presence_penalty
+                a["freq_pens"][i] = sp.frequency_penalty
+                pmask, ocounts = self.samp_buf.row(req.rid)
+                a["pmask"][i] = pmask
+                a["ocounts"][i] = ocounts
 
         for slot, req in plan.decodes:
             a["d_active"][slot] = True
@@ -556,15 +604,36 @@ class InferenceEngine:
         self.hist["e2e_seconds"].observe(
             rec["done_wall"] - rec["arrival_wall"])
 
-    def _append_token(self, slot: int, req: Request, tok: int) -> None:
+    def _req_logprobs(self, req: Request, lp, idx):
+        """Format one emitted token's logprobs for the ``on_token`` hook:
+        ``{"token_logprob": float, "top": [(id, logprob), ...]}`` trimmed
+        to the request's ``logprobs`` count, or None when the request
+        didn't ask (or the step ran the plain path)."""
+        n = req.sampling.logprobs
+        if lp is None or n <= 0:
+            return None
+        return {"token_logprob": float(lp["chosen"][idx]),
+                "top": [(int(t), float(v))
+                        for t, v in zip(lp["top_ids"][idx][:n],
+                                        lp["top_lp"][idx][:n])]}
+
+    def _append_token(self, slot: int, req: Request, tok: int,
+                      logprobs=None) -> None:
         req.out.append(tok)
+        self.samp_buf.commit(req.rid, tok)
         self.stats["tokens"] += 1
         if len(req.out) == 1:
             self._lat(req.rid).update(first_token_step=self.step_count,
                                       first_token_wall=time.monotonic())
         self.sched.note_progress(req)
+        if (req.sampling.stop and not req.stop_hit
+                and len(req.out) >= req.min_new
+                and self.samp_buf.check_stop(req.rid, req.sampling.stop)
+                is not None):
+            req.stop_hit = True
+            self.stats["stop_hits"] += 1
         if self.on_token is not None:
-            self.on_token(req, tok)
+            self.on_token(req, tok, logprobs)
         if req.done:
             rec = self._lat(req.rid)
             rec.update(done_step=self.step_count,
@@ -657,15 +726,35 @@ class InferenceEngine:
                 if plan.admitted:
                     self.step_count += 1
                 return plan.admitted > 0
-            arrays = self._build_arrays(plan)
-            step_exec = (self._step_chunk if plan.chunk is not None
-                         else self._step_plain)
+            # per-step fast-path switch: the full pipeline compiles and
+            # runs only when some scheduled request actually needs it —
+            # pure-greedy (and temperature/top-k-only) batches stay on
+            # the two plain executables, byte-identical to before
+            full = (any(r.sampling.needs_pipeline
+                        for _, r in plan.decodes)
+                    or any(r.sampling.needs_pipeline
+                           for _, r, _ in plan.chunks))
+            arrays = self._build_arrays(plan, full)
+            if full:
+                self.stats["full_sampling_steps"] += 1
+                step_exec = self._full_step(plan.chunk is not None)
+            else:
+                step_exec = (self._step_chunk if plan.chunk is not None
+                             else self._step_plain)
             t_step = time.monotonic()
             nxt, self.cache = step_exec(self.params, self.cache, arrays)
             if d2h_token is not None:
                 self._drain_swap_out(d2h_token)
+            chunk_lp = None
             if self.runner.spec_tokens or self.draft_cfg is not None:
-                toks, n_acc, c_tok = nxt
+                if full:
+                    toks, n_acc, c_tok, lp_d, chunk_lp = nxt
+                    lp_d = {k: np.asarray(v) for k, v in lp_d.items()}
+                    chunk_lp = {k: np.asarray(v)
+                                for k, v in chunk_lp.items()}
+                else:
+                    toks, n_acc, c_tok = nxt
+                    lp_d = None
                 toks, n_acc = np.asarray(toks), np.asarray(n_acc)
                 chunk_toks = np.asarray(c_tok)
                 for slot, req in plan.decodes:
@@ -675,7 +764,9 @@ class InferenceEngine:
                     for i in range(int(n_acc[slot]) + 1):
                         req.num_computed += 1
                         self.stats["spec_emitted"] += 1
-                        self._append_token(slot, req, int(toks[slot, i]))
+                        self._append_token(
+                            slot, req, int(toks[slot, i]),
+                            self._req_logprobs(req, lp_d, (slot, i)))
                         if req.done:
                             break
                     if self.sched.running.get(slot) is req:
@@ -684,17 +775,28 @@ class InferenceEngine:
                         # they share the block table)
                         self.bm.truncate(req.rid, req.context_len)
             else:
-                nxt = np.asarray(nxt)
+                if full:
+                    toks, lp = nxt
+                    nxt = np.asarray(toks)
+                    lp = {k: np.asarray(v) for k, v in lp.items()}
+                    chunk_lp = {k: v[self.max_batch:]
+                                for k, v in lp.items()}
+                else:
+                    nxt = np.asarray(nxt)
+                    lp = None
                 chunk_toks = nxt[self.max_batch:]
                 for slot, req in plan.decodes:
                     req.num_computed += 1
-                    self._append_token(slot, req, int(nxt[slot]))
+                    self._append_token(slot, req, int(nxt[slot]),
+                                       self._req_logprobs(req, lp, slot))
             for ci, (slot, req, n) in enumerate(plan.chunks):
                 req.num_computed += n
                 self.stats["prefill_chunks"] += 1
                 self.stats["prefill_tokens"] += n
                 if req.num_computed == req.context_len:
-                    self._append_token(slot, req, int(chunk_toks[ci]))
+                    self._append_token(
+                        slot, req, int(chunk_toks[ci]),
+                        self._req_logprobs(req, chunk_lp, ci))
                 else:
                     self.sched.note_progress(req)
             if self._swap_cost is not None and plan.chunks:

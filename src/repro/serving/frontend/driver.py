@@ -64,6 +64,9 @@ class TokenEvent(NamedTuple):
     index: int                  # position in the request's output stream
     token: int                  # token id, byte-identical to engine.run()
     text: str                   # incremental detokenization of `token`
+    # per-token logprobs ({"token_logprob": float, "top": [(id, lp), ...]})
+    # when the request asked for them (SamplingParams.logprobs > 0)
+    logprobs: dict | None = None
 
 
 _DONE = object()
@@ -92,10 +95,11 @@ class TokenStream:
 
     # -- engine-thread side -------------------------------------------------
 
-    def _push(self, tok: int) -> None:
+    def _push(self, tok: int, logprobs: dict | None = None) -> None:
         if self.first_token_wall is None:
             self.first_token_wall = time.monotonic()
-        self._loop.call_soon_threadsafe(self._q.put_nowait, int(tok))
+        self._loop.call_soon_threadsafe(
+            self._q.put_nowait, (int(tok), logprobs))
 
     def _finish(self) -> None:
         self._loop.call_soon_threadsafe(self._q.put_nowait, _DONE)
@@ -118,7 +122,8 @@ class TokenStream:
             if self.error is not None:
                 raise self.error
             raise StopAsyncIteration
-        ev = TokenEvent(self._n, item, self._detok(item))
+        tok, logprobs = item
+        ev = TokenEvent(self._n, tok, self._detok(tok), logprobs)
         self._n += 1
         return ev
 
@@ -309,12 +314,12 @@ class AsyncEngineDriver:
             self._queued.discard(req.rid)
             self.admission.note_admit(time.monotonic())
 
-    def _on_token(self, req, tok) -> None:
+    def _on_token(self, req, tok, logprobs=None) -> None:
         stream = self._streams.get(req.rid)
         if stream is None:
             return
         first = stream.first_token_wall is None
-        stream._push(tok)
+        stream._push(tok, logprobs)
         if first:
             self.admission.note_ttft(
                 stream.first_token_wall - stream.submit_wall)

@@ -20,10 +20,18 @@ request: the driver's abort path releases its batch slot, KV blocks and
 any host-swapped pages between engine steps, so abandoned work stops
 consuming the token budget (docs/serving-frontend.md).
 
-Request body schema (all but ``prompt`` optional)::
+Request body schema (all but ``prompt`` optional; see docs/sampling.md
+for field semantics)::
 
-    {"prompt": [int, ...], "max_new": 16, "temperature": 0.0,
-     "top_k": 0, "seed": 0, "eos_id": null}
+    {"prompt": [int, ...], "max_new": 16, "min_new": 0,
+     "temperature": 0.0, "top_k": 0, "top_p": 1.0, "min_p": 0.0,
+     "repetition_penalty": 1.0, "presence_penalty": 0.0,
+     "frequency_penalty": 0.0, "logprobs": 0,
+     "stop": [[int, ...], ...], "seed": 0, "eos_id": null}
+
+With ``logprobs: n`` each SSE event carries a ``logprobs`` object:
+``{"token_logprob": float, "top": [[id, lp], ...]}`` (top-n of the
+post-penalty distribution the token was drawn from).
 """
 
 from __future__ import annotations
@@ -96,20 +104,38 @@ def _parse_generate(body: bytes) -> Request:
     if (not isinstance(prompt, list) or not prompt
             or not all(isinstance(t, int) and t >= 0 for t in prompt)):
         raise _BadRequest('"prompt" must be a non-empty list of token ids')
+    stop = payload.get("stop", [])
+    if (not isinstance(stop, list)
+            or not all(isinstance(s, list) and s
+                       and all(isinstance(t, int) and t >= 0 for t in s)
+                       for s in stop)):
+        raise _BadRequest(
+            '"stop" must be a list of non-empty token-id lists')
     try:
         sp = SamplingParams(
             temperature=float(payload.get("temperature", 0.0)),
             top_k=int(payload.get("top_k", 0)),
-            seed=int(payload.get("seed", 0)))
+            seed=int(payload.get("seed", 0)),
+            top_p=float(payload.get("top_p", 1.0)),
+            min_p=float(payload.get("min_p", 0.0)),
+            repetition_penalty=float(
+                payload.get("repetition_penalty", 1.0)),
+            presence_penalty=float(payload.get("presence_penalty", 0.0)),
+            frequency_penalty=float(payload.get("frequency_penalty", 0.0)),
+            logprobs=int(payload.get("logprobs", 0)),
+            stop=tuple(tuple(s) for s in stop))
         max_new = int(payload.get("max_new", 16))
+        min_new = int(payload.get("min_new", 0))
         eos_id = payload.get("eos_id")
         eos_id = None if eos_id is None else int(eos_id)
     except (TypeError, ValueError) as e:
         raise _BadRequest(f"bad sampling field: {e}") from e
     if max_new < 1:
         raise _BadRequest('"max_new" must be >= 1')
+    if min_new < 0:
+        raise _BadRequest('"min_new" must be >= 0')
     return Request(np.asarray(prompt, np.int32), max_new=max_new,
-                   sampling=sp, eos_id=eos_id)
+                   sampling=sp, eos_id=eos_id, min_new=min_new)
 
 
 class FrontendServer:
@@ -225,8 +251,11 @@ class FrontendServer:
         try:
             async for ev in stream:
                 n += 1
-                payload = json.dumps({"index": ev.index, "token": ev.token,
-                                      "text": ev.text})
+                event = {"index": ev.index, "token": ev.token,
+                         "text": ev.text}
+                if ev.logprobs is not None:
+                    event["logprobs"] = ev.logprobs
+                payload = json.dumps(event)
                 writer.write(f"data: {payload}\n\n".encode())
                 await writer.drain()          # stream, don't batch
             writer.write(

@@ -47,6 +47,12 @@ _ENGINE_COUNTERS = (
      "Speculative decode slot-steps (draft-and-verify)"),
     ("spec_emitted", "repro_engine_spec_emitted_total",
      "Tokens emitted by speculative verify steps"),
+    ("stop_hits", "repro_engine_stop_hits_total",
+     "Requests retired by a per-request stop sequence match"),
+    ("full_sampling_steps", "repro_engine_full_sampling_steps_total",
+     "Engine steps that ran the full sampling pipeline (top-p/min-p/"
+     "penalties/logprobs); pure-greedy steps stay on the plain "
+     "executables"),
     ("aborts", "repro_engine_aborts_total",
      "Requests cancelled before retirement (client disconnect / abort)"),
     ("swap_preemptions", "repro_engine_swap_preemptions_total",

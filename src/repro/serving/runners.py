@@ -53,8 +53,10 @@ from repro.models import encdec, transformer
 from repro.serving.cache import init_encoder_cache, init_slot_state
 from repro.serving.kv_cache import (init_paged_cache, attn_layer_stacks,
                                     mamba_layer_stacks)
-from repro.serving.sampling import (propose_tokens, sample_tokens,
-                                    speculative_verify)
+from repro.serving.sampling import (SP_KEYS, propose_tokens,
+                                    propose_tokens_full, sample_tokens,
+                                    sample_tokens_full, speculative_verify,
+                                    speculative_verify_full)
 
 __all__ = ["ModelRunner", "TransformerRunner", "SSMRunner", "HybridRunner",
            "EncDecRunner", "SpeculativeRunner", "make_runner"]
@@ -98,6 +100,8 @@ class ModelRunner:
                                       # (except a prompt's final chunk)
     spec_tokens: int = 0              # draft tokens per slot per step
                                       # (speculative decoding lookahead)
+    max_logprobs: int = 8             # top-L logprob rows the full path
+                                      # returns (engine knob, set at init)
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig):
         self.cfg, self.pcfg = cfg, pcfg
@@ -106,9 +110,15 @@ class ModelRunner:
                    kv_dtype: str = "bf16"):
         raise NotImplementedError
 
-    def step(self, params, cache, a, *, has_chunk: bool):
+    def step(self, params, cache, a, *, has_chunk: bool,
+             full_sampling: bool = False):
         """One budgeted step. ``a`` is the engine's array dict (chunk row,
-        decode batch, sampling params). Returns (sampled (B+1,), cache)."""
+        decode batch, sampling params). Returns (sampled (B+1,), cache);
+        with ``full_sampling`` the sampled half is ``(tokens, logprobs)``
+        from the full pipeline. Like ``has_chunk``, ``full_sampling`` is
+        a *static* jit flag: pure-greedy traffic only ever compiles the
+        plain executables and never traces the penalty/top-p/logprob
+        work."""
         raise NotImplementedError
 
     def encode(self, params, cache, slot, frames):
@@ -117,7 +127,8 @@ class ModelRunner:
 
     # -- shared step halves ------------------------------------------------
 
-    def _sample(self, logits_d, logits_c, a, has_chunk):
+    def _sample(self, logits_d, logits_c, a, has_chunk,
+                full_sampling=False):
         if not has_chunk:
             # sampling rows B.. are sized for the engine's prefill_pack
             # (1 for classic single-chunk, S for the ragged packed path)
@@ -125,6 +136,9 @@ class ModelRunner:
             logits_c = jnp.zeros((n_extra,) + logits_d.shape[1:],
                                  logits_d.dtype)
         logits = jnp.concatenate([logits_d, logits_c], axis=0)
+        if full_sampling:
+            return sample_tokens_full(logits, {k: a[k] for k in SP_KEYS},
+                                      max_logprobs=self.max_logprobs)
         return sample_tokens(logits, a["temps"], a["top_ks"], a["seeds"],
                              a["rids"], a["counters"])
 
@@ -159,7 +173,7 @@ class TransformerRunner(ModelRunner):
     supports_prefix_caching = True
     supports_packed_prefill = True
 
-    def step(self, params, cache, a, *, has_chunk):
+    def step(self, params, cache, a, *, has_chunk, full_sampling=False):
         if has_chunk:
             if "c_starts" in a:
                 logits_c, cache = transformer.prefill_chunk_ragged(
@@ -173,7 +187,8 @@ class TransformerRunner(ModelRunner):
             logits_c = None
         logits_d, cache = transformer.decode_step_paged(
             params, cache, self._decode_batch(a), self.cfg, self.pcfg)
-        return self._sample(logits_d, logits_c, a, has_chunk), cache
+        return self._sample(logits_d, logits_c, a, has_chunk,
+                            full_sampling), cache
 
     def init_cache(self, num_blocks, block_size, max_batch,
                    kv_dtype="bf16"):
@@ -207,7 +222,7 @@ class SSMRunner(ModelRunner):
         cache.update(init_slot_state(self.cfg, max_batch))
         return cache
 
-    def step(self, params, cache, a, *, has_chunk):
+    def step(self, params, cache, a, *, has_chunk, full_sampling=False):
         logits_c = None
         if has_chunk:
             slot = a["c_slot"][0]
@@ -236,7 +251,8 @@ class SSMRunner(ModelRunner):
         for key in self._state_keys:
             cache[key] = _mask_slot_rows(cache[key], old_state[key],
                                          a["d_active"])
-        return self._sample(logits_d, logits_c, a, has_chunk), cache
+        return self._sample(logits_d, logits_c, a, has_chunk,
+                            full_sampling), cache
 
 
 class HybridRunner(SSMRunner):
@@ -272,7 +288,7 @@ class EncDecRunner(ModelRunner):
         return {"self": cache["self"],
                 "cross": _scatter_slot(cache["cross"], kv, slot)}
 
-    def step(self, params, cache, a, *, has_chunk):
+    def step(self, params, cache, a, *, has_chunk, full_sampling=False):
         logits_c = None
         if has_chunk:
             cross_row = _slice_slot(cache["cross"], a["c_slot"][0])
@@ -283,7 +299,8 @@ class EncDecRunner(ModelRunner):
         logits_d, out = encdec.decode_step_paged(
             params, cache, self._decode_batch(a), self.cfg, self.pcfg)
         cache = {"self": out["self"], "cross": cache["cross"]}
-        return self._sample(logits_d, logits_c, a, has_chunk), cache
+        return self._sample(logits_d, logits_c, a, has_chunk,
+                            full_sampling), cache
 
 
 class SpeculativeRunner(ModelRunner):
@@ -338,7 +355,7 @@ class SpeculativeRunner(ModelRunner):
                 "dft": init_paged_cache(self.draft_cfg, num_blocks,
                                         block_size, kv_dtype=kv_dtype)}
 
-    def step(self, params, cache, a, *, has_chunk):
+    def step(self, params, cache, a, *, has_chunk, full_sampling=False):
         k = self.spec_tokens
         B = a["d_tok"].shape[0]
         tgt, dft = cache["tgt"], cache["dft"]
@@ -360,6 +377,11 @@ class SpeculativeRunner(ModelRunner):
                     params["dft"], dft, cb, self.draft_cfg, self.pcfg)
         temps, top_ks = a["temps"][:B], a["top_ks"][:B]
         seeds, rids, cnts = a["seeds"][:B], a["rids"][:B], a["counters"][:B]
+        sp_d = ({key: a[key][:B] for key in SP_KEYS} if full_sampling
+                else None)
+        # committed counts, incremented with each proposal's one-hot so
+        # proposal i and verify row i share identical penalty counts
+        oc = a["ocounts"][:B] if full_sampling else None
         # -- draft phase: k proposals, k+1 KV writes (the last write backs
         # the final proposal so the draft cache mirrors the target's) ----
         toks = [a["d_tok"]]
@@ -374,8 +396,15 @@ class SpeculativeRunner(ModelRunner):
                     params["dft"], dft, db, self.draft_cfg, self.pcfg)
                 if i < k:
                     dlogits.append(lg)
-                    toks.append(propose_tokens(lg, temps, top_ks, seeds,
-                                               rids, cnts + i))
+                    if full_sampling:
+                        nt = propose_tokens_full(
+                            lg, dict(sp_d, ocounts=oc, counters=cnts + i))
+                        oc = oc + jax.nn.one_hot(nt, lg.shape[-1],
+                                                 dtype=oc.dtype)
+                    else:
+                        nt = propose_tokens(lg, temps, top_ks, seeds,
+                                            rids, cnts + i)
+                    toks.append(nt)
         # -- verify phase: one widened target pass over all k+1 positions
         verify_tokens = jnp.stack(toks, axis=1)                  # (B, k+1)
         vb = {"tokens": verify_tokens, "q_start": a["d_pos"],
@@ -387,15 +416,34 @@ class SpeculativeRunner(ModelRunner):
         draft_logits = (jnp.stack(dlogits, axis=1) if dlogits else
                         jnp.zeros((B, 0, tlogits.shape[-1]),
                                   tlogits.dtype))
-        out_toks, n_acc = speculative_verify(
-            verify_tokens[:, 1:], draft_logits, tlogits,
-            temps, top_ks, seeds, rids, cnts)
+        if full_sampling:
+            out_toks, n_acc, lp_d = speculative_verify_full(
+                verify_tokens[:, 1:], draft_logits, tlogits, sp_d,
+                max_logprobs=self.max_logprobs)
+        else:
+            out_toks, n_acc = speculative_verify(
+                verify_tokens[:, 1:], draft_logits, tlogits,
+                temps, top_ks, seeds, rids, cnts)
         if has_chunk:
-            c_tok = sample_tokens(logits_c, a["temps"][B:], a["top_ks"][B:],
-                                  a["seeds"][B:], a["rids"][B:],
-                                  a["counters"][B:])
+            if full_sampling:
+                c_tok, lp_c = sample_tokens_full(
+                    logits_c, {key: a[key][B:] for key in SP_KEYS},
+                    max_logprobs=self.max_logprobs)
+            else:
+                c_tok = sample_tokens(logits_c, a["temps"][B:],
+                                      a["top_ks"][B:], a["seeds"][B:],
+                                      a["rids"][B:], a["counters"][B:])
         else:
             c_tok = jnp.zeros((1,), jnp.int32)
+            if full_sampling:
+                S = a["temps"].shape[0] - B
+                L = min(self.max_logprobs, tlogits.shape[-1])
+                lp_c = {"chosen": jnp.zeros((S,), tlogits.dtype),
+                        "top_lp": jnp.zeros((S, L), tlogits.dtype),
+                        "top_ids": jnp.zeros((S, L), jnp.int32)}
+        if full_sampling:
+            return ((out_toks, n_acc, c_tok, lp_d, lp_c),
+                    {"tgt": tgt, "dft": dft})
         return (out_toks, n_acc, c_tok), {"tgt": tgt, "dft": dft}
 
 

@@ -23,12 +23,35 @@ batch composition — and with ``k = 0`` draft tokens the verify step
 consumes exactly the plain stream, so it degenerates byte-identically to
 non-speculative decoding (``speculative_verify`` with K = 0 is
 ``sample_tokens``).
+
+Two sampling paths share these streams (docs/sampling.md):
+
+* the **plain path** (`sample_tokens` / `propose_tokens` /
+  `speculative_verify`) covers greedy / temperature / top-k — the
+  transform is `_prep_logits`, and pure-greedy batches never trace
+  anything else;
+* the **full path** (`sample_tokens_full` / `propose_tokens_full` /
+  `speculative_verify_full`) adds repetition/presence/frequency
+  penalties (backed by per-slot token-count arrays), top-p and min-p
+  truncation (one shared sorted-logits pass with top-k), and per-step
+  logprobs. Every full-path transform is an exact bitwise identity at
+  its default parameter value, so a temperature/top-k-only request
+  sampled through the full path (because a batchmate needs it) draws
+  byte-identical tokens to the plain path — the replay and mixed-batch
+  equivalence tests pin this.
+
+:class:`SamplingBuffer` is the host-side dense per-slot state backing
+the full path: param rows, prompt-presence masks, generated-token count
+arrays and stop-sequence rings, bound at admission and rebuilt from the
+request's own (prompt, out) on every re-bind — which is what makes
+preemption-recompute, swap-in and speculative rollback replay for free.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG = -1.0e30
 
@@ -56,10 +79,23 @@ def _prep_logits(lg, t, k):
 
 def _sample_stream(logits, temps, top_ks, seeds, rids, counters, tag=None):
     """One greedy / temperature / top-k sampling pass over (B, V) logit
-    rows. ``tag`` selects an independent stream off the same per-(seed,
-    rid, counter) base key — the single implementation keeps the plain
-    and draft streams' distributions provably identical, which the
-    rejection sampler's p/q consistency depends on."""
+    rows.
+
+    Key derivation, in this exact order: ``key = fold_in(fold_in(
+    PRNGKey(seed), rid), counter)``, then — only when ``tag`` is given —
+    ``key = fold_in(key, tag)``. The tag is folded *last*, onto the
+    fully-derived base key, so ``tag=None`` (the plain stream) and each
+    tagged stream (``_DRAFT``/``_ACCEPT``/``_RESID``) are independent
+    streams off the same (seed, rid, counter) triple; a tagged stream at
+    one counter never collides with the plain stream at *any* counter.
+    Greedy rows (temperature <= 0) take the argmax and consume **no**
+    randomness — the key is derived but never advances any state, so
+    mixing greedy and sampled rows in one batch cannot shift anyone's
+    stream. The single implementation keeps the plain and draft streams'
+    distributions provably identical, which the rejection sampler's p/q
+    consistency depends on. Pinned by the seeded key-stream regression
+    test (tests/test_sampling.py) so refactors can't silently break
+    preemption replay."""
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def one(lg, t, k, s, r, c):
@@ -152,3 +188,330 @@ def speculative_verify(draft_tokens, draft_logits, target_logits,
 
     return jax.vmap(one)(draft_tokens, draft_logits, target_logits,
                          temps, top_ks, seeds, rids, counters)
+
+
+# -- full sampling path: penalties + top-p/min-p/top-k + logprobs ----------
+#
+# Array-dict keys every full-path entry point consumes ("sp"): the per-row
+# param vectors plus the dense per-row count state. All (N,) float32 unless
+# noted. Built host-side by the engine from SamplingBuffer rows.
+SP_KEYS = ("temps", "top_ks", "top_ps", "min_ps", "rep_pens", "pres_pens",
+           "freq_pens", "seeds", "rids", "counters", "pmask", "ocounts")
+
+
+def _penalize(lg, pmask, ocounts, rep, pres, freq):
+    """Repetition / presence / frequency penalties on one (V,) row.
+
+    vLLM semantics: repetition penalty divides positive logits (and
+    multiplies negative ones) by ``rep`` for every token present in the
+    prompt or the output so far; frequency subtracts ``freq *
+    count(token in output)``; presence subtracts ``pres`` once per
+    distinct output token. At the defaults (rep=1, pres=freq=0) every op
+    is an exact bitwise identity (x/1.0, x*1.0, x-0.0), which the
+    mixed-batch byte-identity guarantee relies on."""
+    seen = pmask | (ocounts > 0)
+    lg = jnp.where(seen, jnp.where(lg > 0, lg / rep, lg * rep), lg)
+    return (lg - freq * ocounts.astype(lg.dtype)
+            - pres * (ocounts > 0).astype(lg.dtype))
+
+
+def _truncate(lg, k, top_p, min_p):
+    """Top-k + top-p + min-p truncation of one temperature-scaled (V,)
+    row. One shared ``jnp.sort`` serves all three: the k-th-largest
+    threshold, the descending cumulative-mass prefix for top-p (kept
+    ranks are those whose mass *before* them is < top_p, so at least one
+    survives), and the row max for the min-p threshold ``max + log(
+    min_p)``. Gates ``top_p < 1`` / ``min_p > 0`` / ``k > 0`` make each
+    mask empty at its default, so the composed output is bitwise equal
+    to the plain ``_prep_logits`` there. If every position ends up
+    masked (degenerate params), fall back to keeping the argmax."""
+    V = lg.shape[-1]
+    srt = jnp.sort(lg)                               # one shared sort
+    kth = srt[V - jnp.clip(k, 1, V)]                 # k-th largest
+    mask = (k > 0) & (lg < kth)
+    desc = srt[::-1]
+    probs = jax.nn.softmax(desc)
+    before = jnp.cumsum(probs) - probs               # mass ahead of rank i
+    n_keep = jnp.maximum(
+        jnp.sum((before < top_p).astype(jnp.int32)), 1)
+    mask |= (top_p < 1.0) & (lg < desc[n_keep - 1])
+    mask |= (min_p > 0.0) & (lg < srt[-1] + jnp.log(min_p))
+    out = jnp.where(mask, NEG, lg)
+    return jnp.where(jnp.all(mask),
+                     jnp.where(jnp.arange(V) == jnp.argmax(lg), lg, NEG),
+                     out)
+
+
+def _prep_logits_full(lg, pmask, ocounts, t, k, top_p, min_p,
+                      rep, pres, freq):
+    """Full-path analogue of :func:`_prep_logits` for one (V,) row:
+    penalties, then the *identical* temperature scale, then the shared-
+    sort truncation. With default penalties/top-p/min-p this is bitwise
+    equal to ``_prep_logits(lg, t, k)``."""
+    pen = _penalize(lg, pmask, ocounts, rep, pres, freq)
+    return _truncate(pen / jnp.maximum(t, 1e-6), k, top_p, min_p)
+
+
+def _row_logprobs(pen, t, tok, n_top):
+    """Log-probabilities reported per emitted token: log-softmax of the
+    *penalized, pre-truncation* logits — the model's post-penalty
+    distribution, comparable across truncation settings. Sampled rows
+    scale by their temperature; greedy rows report the unscaled
+    distribution (t -> 0 would degenerate to a one-hot)."""
+    scale = jnp.where(t > 0.0, jnp.maximum(t, 1e-6), 1.0)
+    logp = jax.nn.log_softmax(pen / scale)
+    top_lp, top_ids = jax.lax.top_k(logp, n_top)
+    return logp[tok], top_lp, top_ids.astype(jnp.int32)
+
+
+def _sample_stream_full(logits, sp, tag=None, max_logprobs=8):
+    """Full-pipeline counterpart of :func:`_sample_stream` over (N, V)
+    rows: same key derivation (tag folded last onto the (seed, rid,
+    counter) base key; greedy rows consume no randomness), same
+    categorical draw — only the logits transform is richer. Returns
+    ``(tokens (N,), lp)`` with ``lp = {"chosen": (N,), "top_lp": (N, L),
+    "top_ids": (N, L)}`` where L = min(max_logprobs, V)."""
+    L = min(max_logprobs, logits.shape[-1])
+
+    def one(lg, pm, oc, t, k, tp, mp, rp, pp, fp, s, r, c):
+        pen = _penalize(lg, pm, oc, rp, pp, fp)
+        trunc = _truncate(pen / jnp.maximum(t, 1e-6), k, tp, mp)
+        key = _base_key(s, r, c)
+        if tag is not None:
+            key = jax.random.fold_in(key, tag)
+        samp = jax.random.categorical(key, trunc).astype(jnp.int32)
+        # greedy rows argmax the *transformed* row: identical index to
+        # argmax(raw) at default params (positive scaling and masks that
+        # never drop the max preserve the argmax), penalty-aware otherwise
+        tok = jnp.where(t <= 0.0,
+                        jnp.argmax(trunc).astype(jnp.int32), samp)
+        chosen, top_lp, top_ids = _row_logprobs(pen, t, tok, L)
+        return tok, chosen, top_lp, top_ids
+
+    toks, chosen, top_lp, top_ids = jax.vmap(one)(
+        logits, sp["pmask"], sp["ocounts"], sp["temps"], sp["top_ks"],
+        sp["top_ps"], sp["min_ps"], sp["rep_pens"], sp["pres_pens"],
+        sp["freq_pens"], sp["seeds"], sp["rids"], sp["counters"])
+    return toks, {"chosen": chosen, "top_lp": top_lp, "top_ids": top_ids}
+
+
+def sample_tokens_full(logits, sp, *, max_logprobs=8):
+    """Full-pipeline sampling over (N, V) rows. ``sp`` holds the
+    :data:`SP_KEYS` arrays — (N,) param vectors plus ``pmask`` (N, V)
+    bool and ``ocounts`` (N, V) int32. Returns ``(tokens, lp)``; see
+    :func:`_sample_stream_full`."""
+    return _sample_stream_full(logits, sp, max_logprobs=max_logprobs)
+
+
+def propose_tokens_full(logits, sp):
+    """Full-pipeline draft proposals (``_DRAFT`` stream). The caller
+    passes ``sp`` with ``ocounts`` already including every *earlier*
+    proposal of this speculative window (one-hot accumulated), so
+    proposal i and verify row i see identical counts."""
+    return _sample_stream_full(logits, sp, tag=_DRAFT)[0]
+
+
+def speculative_verify_full(draft_tokens, draft_logits, target_logits,
+                            sp, *, max_logprobs=8):
+    """Full-pipeline accept/reject, same protocol and streams as
+    :func:`speculative_verify` but with p and q both produced by the
+    full transform (:func:`_prep_logits_full`) — rejection sampling
+    preserves the *transformed* target distribution for any per-slot
+    parameter combination, because draft and target share it exactly.
+
+    Verify row i (and the bonus row K) transforms with counts =
+    ``sp["ocounts"]`` + one-hots of draft tokens < i — the counts the
+    sequential sampler would have had after committing those tokens,
+    matching what :func:`propose_tokens_full` used for proposal i.
+    Greedy rows accept while the draft token equals the argmax of the
+    *transformed* target row (bitwise the raw argmax at default params).
+
+    Returns ``(out_tokens (B, K+1), n_accept (B,), lp)`` with per-
+    position logprob arrays ``lp = {"chosen": (B, K+1), "top_lp":
+    (B, K+1, L), "top_ids": (B, K+1, L)}``.
+    """
+    B, K1, V = target_logits.shape
+    K = K1 - 1
+    L = min(max_logprobs, V)
+    oh = jax.nn.one_hot(draft_tokens, V, dtype=sp["ocounts"].dtype)
+    counts = jnp.concatenate(
+        [sp["ocounts"][:, None],
+         sp["ocounts"][:, None] + jnp.cumsum(oh, axis=1)], axis=1)
+
+    def one(d_toks, d_lg, t_lg, cnts, pm, t, k, tp, mp, rp, pp, fp,
+            s, r, c0):
+        pen = jax.vmap(lambda lg, oc: _penalize(lg, pm, oc, rp, pp, fp))(
+            t_lg, cnts)                                         # (K+1, V)
+        p_lg = jax.vmap(lambda x: _truncate(
+            x / jnp.maximum(t, 1e-6), k, tp, mp))(pen)
+        t_arg = jnp.argmax(p_lg, axis=-1).astype(jnp.int32)     # (K+1,)
+        if K == 0:
+            fresh = jax.random.categorical(
+                _base_key(s, r, c0), p_lg[0]).astype(jnp.int32)
+            out = jnp.where(t <= 0.0, t_arg, fresh[None])
+            n_acc = jnp.zeros((), jnp.int32)
+        else:
+            q_pen = jax.vmap(
+                lambda lg, oc: _penalize(lg, pm, oc, rp, pp, fp))(
+                    d_lg, cnts[:K])
+            q_lg = jax.vmap(lambda x: _truncate(
+                x / jnp.maximum(t, 1e-6), k, tp, mp))(q_pen)
+            p = jax.nn.softmax(p_lg, axis=-1)                   # (K+1, V)
+            q = jax.nn.softmax(q_lg, axis=-1)                   # (K, V)
+            cs = c0 + jnp.arange(K, dtype=jnp.int32)
+            u = jax.vmap(lambda c: jax.random.uniform(
+                jax.random.fold_in(_base_key(s, r, c), _ACCEPT)))(cs)
+            p_d = jnp.take_along_axis(p[:K], d_toks[:, None], axis=1)[:, 0]
+            q_d = jnp.take_along_axis(q, d_toks[:, None], axis=1)[:, 0]
+            acc_temp = u < p_d / jnp.maximum(q_d, 1e-37)
+            acc = jnp.where(t <= 0.0, d_toks == t_arg[:K], acc_temp)
+            n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32)))
+            resid = jnp.clip(p[:K] - q, 0.0, None)
+            r_lg = jnp.where(resid.sum(-1, keepdims=True) > 0,
+                             jnp.log(jnp.maximum(resid, 1e-37)), p_lg[:K])
+            r_toks = jax.vmap(lambda c, lg: jax.random.categorical(
+                jax.random.fold_in(_base_key(s, r, c), _RESID), lg))(
+                    cs, r_lg).astype(jnp.int32)
+            fresh = jax.random.categorical(
+                _base_key(s, r, c0 + K), p_lg[K]).astype(jnp.int32)
+            out_temp = jnp.concatenate(
+                [jnp.where(jnp.arange(K) < n_acc, d_toks, r_toks),
+                 fresh[None]])
+            out = jnp.where(t <= 0.0, t_arg, out_temp)
+        chosen, top_lp, top_ids = jax.vmap(
+            lambda pe, tk: _row_logprobs(pe, t, tk, L))(pen, out)
+        return out, n_acc, chosen, top_lp, top_ids
+
+    out, n_acc, chosen, top_lp, top_ids = jax.vmap(one)(
+        draft_tokens, draft_logits, target_logits, counts, sp["pmask"],
+        sp["temps"], sp["top_ks"], sp["top_ps"], sp["min_ps"],
+        sp["rep_pens"], sp["pres_pens"], sp["freq_pens"], sp["seeds"],
+        sp["rids"], sp["counters"])
+    return out, n_acc, {"chosen": chosen, "top_lp": top_lp,
+                        "top_ids": top_ids}
+
+
+class SamplingBuffer:
+    """Host-side dense per-slot sampling state for the full path.
+
+    The layout follows the dense ``SequenceBuffer`` idiom: one row per
+    batch slot holding the request's sampling params, its prompt-
+    presence mask (V,), its generated-token counts (V,), and a small
+    ring of its most recent tokens for stop-sequence matching. Rows are
+    bound at admission (``bind``), updated as tokens commit
+    (``commit``), and released at retire/abort/preempt (``free``).
+
+    Replay for free: ``bind`` rebuilds the mask, counts and ring from
+    the request's own ``(prompt, out)``, and only *accepted* tokens are
+    ever committed — so preemption-recompute, swap-in and speculative
+    rollback all land back in exactly the state the uninterrupted run
+    would have had, with no explicit rewind path.
+
+    ``needs_pipeline`` over the bound requests is the engine's per-step
+    fast-path switch: a batch of requests none of which needs the full
+    pipeline runs the plain (greedy/temperature/top-k) executables,
+    tracing none of the penalty/top-p/logprob work.
+    """
+
+    def __init__(self, max_batch: int, vocab_size: int, *,
+                 max_stop_len: int = 8, max_logprobs: int = 8):
+        self.max_batch = max_batch
+        self.vocab_size = vocab_size
+        self.max_stop_len = max_stop_len
+        self.max_logprobs = max_logprobs
+        self.pmask = np.zeros((max_batch, vocab_size), bool)
+        self.ocounts = np.zeros((max_batch, vocab_size), np.int32)
+        self.rings = np.zeros((max_batch, max_stop_len), np.int32)
+        self.ring_len = np.zeros(max_batch, np.int32)
+        self._slot_of: dict[int, int] = {}
+
+    # -- validation (scheduler.validate delegates here) --------------------
+
+    def validate(self, req) -> None:
+        sp = req.sampling
+        if not 0.0 < sp.top_p <= 1.0:
+            raise ValueError(f"request {req.rid}: top_p={sp.top_p} "
+                             "must be in (0, 1]")
+        if not 0.0 <= sp.min_p <= 1.0:
+            raise ValueError(f"request {req.rid}: min_p={sp.min_p} "
+                             "must be in [0, 1]")
+        if sp.repetition_penalty <= 0.0:
+            raise ValueError(
+                f"request {req.rid}: repetition_penalty="
+                f"{sp.repetition_penalty} must be > 0")
+        if sp.logprobs < 0 or sp.logprobs > self.max_logprobs:
+            raise ValueError(
+                f"request {req.rid}: logprobs={sp.logprobs} must be in "
+                f"[0, max_logprobs={self.max_logprobs}] (raise the "
+                "engine's max_logprobs knob for more)")
+        for s in sp.stop:
+            if not s or len(s) > self.max_stop_len:
+                raise ValueError(
+                    f"request {req.rid}: stop sequence length {len(s)} "
+                    f"must be in [1, max_stop_len={self.max_stop_len}]")
+        if req.min_new > req.max_new:
+            raise ValueError(
+                f"request {req.rid}: min_new={req.min_new} exceeds "
+                f"max_new={req.max_new}")
+
+    # -- bind / free (scheduler admission & release paths) -----------------
+
+    def bind(self, req, slot: int) -> None:
+        """(Re)bind a request's row: rebuild mask/counts/ring from its
+        current (prompt, out) — the replay property."""
+        self._slot_of[req.rid] = slot
+        self.pmask[slot] = False
+        ids = np.asarray(req.prompt, np.int64)
+        self.pmask[slot][ids[ids < self.vocab_size]] = True
+        self.ocounts[slot] = 0
+        if req.out:
+            out = np.asarray(req.out, np.int64)
+            np.add.at(self.ocounts[slot], out[out < self.vocab_size], 1)
+        tail = req.out[-self.max_stop_len:]
+        self.rings[slot] = 0
+        self.rings[slot, :len(tail)] = tail
+        self.ring_len[slot] = len(tail)
+
+    def free(self, rid: int) -> None:
+        """Release a request's row (retire/abort/preempt). Unknown rids
+        are a no-op — aborting a still-waiting request never bound."""
+        slot = self._slot_of.pop(rid, None)
+        if slot is None:
+            return
+        self.pmask[slot] = False
+        self.ocounts[slot] = 0
+        self.rings[slot] = 0
+        self.ring_len[slot] = 0
+
+    # -- per-token updates (engine append path) ----------------------------
+
+    def commit(self, rid: int, tok: int) -> None:
+        """Account one accepted token: bump its count, push the ring."""
+        slot = self._slot_of[rid]
+        if 0 <= tok < self.vocab_size:
+            self.ocounts[slot, tok] += 1
+        n = int(self.ring_len[slot])
+        if n < self.max_stop_len:
+            self.rings[slot, n] = tok
+            self.ring_len[slot] = n + 1
+        else:
+            self.rings[slot, :-1] = self.rings[slot, 1:]
+            self.rings[slot, -1] = tok
+
+    def check_stop(self, rid: int, stops) -> tuple | None:
+        """Return the first stop sequence matching the ring's tail (the
+        request's most recent tokens), or None."""
+        slot = self._slot_of[rid]
+        n = int(self.ring_len[slot])
+        for s in stops:
+            m = len(s)
+            if m <= n and list(self.rings[slot, n - m:n]) == list(s):
+                return tuple(s)
+        return None
+
+    # -- row access (engine array building) --------------------------------
+
+    def row(self, rid: int) -> tuple:
+        """(pmask_row, ocounts_row) views for one bound request."""
+        slot = self._slot_of[rid]
+        return self.pmask[slot], self.ocounts[slot]

@@ -73,9 +73,45 @@ _RID = itertools.count()
 
 @dataclass(frozen=True)
 class SamplingParams:
+    """Per-request sampling surface (docs/sampling.md).
+
+    Every default is an exact identity: a request left at the defaults
+    samples byte-identically on the plain (greedy/temperature/top-k)
+    path and the full pipeline, and ``needs_pipeline`` is what lets the
+    engine keep pure-greedy batches on the plain compiled executables.
+    ``stop`` holds token-id sequences (tuples, so the dataclass stays
+    hashable); matching happens host-side against the SamplingBuffer's
+    per-slot ring of recent tokens.
+    """
+
     temperature: float = 0.0       # 0 => greedy
     top_k: int = 0                 # 0 => no truncation
     seed: int = 0
+    top_p: float = 1.0             # 1.0 => no nucleus truncation
+    min_p: float = 0.0             # 0 => no min-p truncation
+    repetition_penalty: float = 1.0
+    presence_penalty: float = 0.0
+    frequency_penalty: float = 0.0
+    logprobs: int = 0              # top-N logprobs per token (0 = off)
+    stop: tuple = ()               # stop sequences: tuples of token ids
+
+    def __post_init__(self):
+        # normalize list-of-lists from JSON frontends into the hashable
+        # tuple-of-tuples form (frozen dataclass: go through __setattr__)
+        object.__setattr__(self, "stop",
+                           tuple(tuple(int(t) for t in s)
+                                 for s in self.stop))
+
+    @property
+    def needs_pipeline(self) -> bool:
+        """True when sampling this request needs the full in-jit
+        pipeline (penalties / top-p / min-p / logprobs). Stop sequences
+        and min_new are host-side checks and do *not* force it."""
+        return (self.top_p < 1.0 or self.min_p > 0.0
+                or self.repetition_penalty != 1.0
+                or self.presence_penalty != 0.0
+                or self.frequency_penalty != 0.0
+                or self.logprobs > 0)
 
 
 @dataclass
@@ -123,6 +159,12 @@ class Request:
     max_new: int = 16
     sampling: SamplingParams = field(default_factory=SamplingParams)
     eos_id: int | None = None
+    # EOS and stop sequences are ignored until min_new tokens exist
+    # (max_new still wins; validation rejects min_new > max_new)
+    min_new: int = 0
+    # set by the engine when a stop sequence matched the output tail;
+    # host state on the request, so it survives preemption like `out`
+    stop_hit: bool = False
     # enc-dec only: (T_enc, d_model) stub frame embeddings for the
     # admission-time encode pass (zeros when None)
     frames: np.ndarray | None = field(default=None, repr=False)
@@ -138,6 +180,10 @@ class Request:
     @property
     def done(self) -> bool:
         if len(self.out) >= self.max_new:
+            return True
+        if len(self.out) < self.min_new:
+            return False               # EOS/stop ignored before min_new
+        if self.stop_hit:
             return True
         return bool(self.out) and self.eos_id is not None \
             and self.out[-1] == self.eos_id
@@ -224,7 +270,8 @@ class Scheduler:
                  chunk_quantum: int = 1, slot_cache=None,
                  encoder_cache=None, spec_tokens: int = 0,
                  max_context: int | None = None, prefill_pack: int = 1,
-                 swap_cost: SwapCostModel | None = None):
+                 swap_cost: SwapCostModel | None = None,
+                 sampling_buffer=None):
         if max_num_batched_tokens <= max_batch * (1 + spec_tokens):
             raise ValueError(
                 f"max_num_batched_tokens={max_num_batched_tokens} must "
@@ -258,6 +305,10 @@ class Scheduler:
         # host-swap preemption: active only when a cost model is supplied
         # AND the block manager actually has a host tier
         self.swap_cost = swap_cost
+        # dense per-slot sampling state (sampling.SamplingBuffer): bound
+        # at admission like the slot/encoder caches, rebuilt on re-bind
+        # so recompute/swap-in replay penalties and stop rings exactly
+        self.sampling_buffer = sampling_buffer
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}      # slot -> request
         self._join_order: list[int] = []           # slots, oldest first
@@ -301,6 +352,8 @@ class Scheduler:
         # submission instead of crashing mid-run when the table overflows.
         # (Single source of truth: admission relies on this having run.)
         # Slot-state caches are constant-size: no block horizon to check.
+        if self.sampling_buffer is not None:
+            self.sampling_buffer.validate(req)
         if self.bm is None:
             return
         horizon = len(req.prompt) + req.max_new
@@ -542,6 +595,8 @@ class Scheduler:
         slot = self.free_slots()[0]
         self.running[slot] = req
         self._join_order.append(slot)
+        if self.sampling_buffer is not None:
+            self.sampling_buffer.bind(req, slot)
         if self.slot_cache is not None:
             self.slot_cache.allocate(req.rid, slot)
         if self.encoder_cache is not None:
@@ -585,6 +640,8 @@ class Scheduler:
             self.slot_cache.free(req.rid)
         if self.encoder_cache is not None:
             self.encoder_cache.free(req.rid)
+        if self.sampling_buffer is not None:
+            self.sampling_buffer.free(req.rid)
 
     def _preempt(self, slot: int) -> Request:
         """Evict one running request. With a host tier, the cost model
@@ -602,6 +659,8 @@ class Scheduler:
                 self.slot_cache.free(req.rid)
             if self.encoder_cache is not None:
                 self.encoder_cache.free(req.rid)
+            if self.sampling_buffer is not None:
+                self.sampling_buffer.free(req.rid)
             self.n_swap_preemptions += 1
             # num_computed / n_published survive: the KV rows themselves
             # come back via swap_in, nothing is recomputed

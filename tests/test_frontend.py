@@ -618,3 +618,93 @@ def test_http_disconnect_aborts_request(tiny_mesh, glm_params):
     assert "repro_frontend_dropped_streams_total 1" in text
     assert "repro_engine_aborts_total 1" in text
     assert eng.bm.stats().blocks_in_use == 0
+
+
+def test_http_sampling_fields_logprobs_and_stop(tiny_mesh, glm_params):
+    """/generate accepts the full sampling surface: a logprobs request
+    streams per-token logprob objects over SSE (greedy, so tokens are
+    byte-identical to engine.run), a stop-sequence request retires early
+    in-engine, the new counters land in /metrics, and malformed stop
+    bodies are a 400."""
+    cfg, params = glm_params
+    prompt = [int(t) for t in RNG.integers(0, cfg.vocab_size, 24)]
+    twin = _engine(cfg, tiny_mesh, params)
+    want = next(iter(twin.run(
+        [Request(np.asarray(prompt, np.int32), max_new=8)]).values()))
+    stop = [int(want[2]), int(want[3])]      # matches at stream index 3
+
+    eng = _engine(cfg, tiny_mesh, params)
+    drv = AsyncEngineDriver(eng)
+
+    async def go():
+        async with drv:
+            srv = FrontendServer(drv, port=0)
+            await srv.start()
+            p = srv.port
+            st, _, body = await _http(p, _post(
+                "/generate",
+                {"prompt": prompt, "max_new": 8, "logprobs": 2}))
+            assert st == 200
+            events = [e for e in _sse_events(body) if "token" in e]
+            assert [e["token"] for e in events] == list(want)
+            for e in events:
+                lp = e["logprobs"]
+                assert lp["token_logprob"] <= 0.0
+                assert len(lp["top"]) == 2
+                assert lp["top"][0][1] >= lp["top"][1][1]
+
+            st, _, body = await _http(p, _post(
+                "/generate",
+                {"prompt": prompt, "max_new": 8, "stop": [stop]}))
+            assert st == 200
+            events = _sse_events(body)
+            toks = [e["token"] for e in events if "token" in e]
+            assert toks == list(want[:4])     # retired at the stop match
+            assert "logprobs" not in events[0]
+            done = [e for e in events if e.get("done")]
+            assert done[0]["n_tokens"] == 4
+
+            st, _, body = await _http(p, _get("/metrics"))
+            text = body.decode()
+            assert "repro_engine_stop_hits_total 1" in text
+            assert "repro_engine_full_sampling_steps_total" in text
+
+            st, _, body = await _http(p, _post(
+                "/generate", {"prompt": prompt, "stop": [["x"]]}))
+            assert st == 400 and b"stop" in body
+            st, _, body = await _http(p, _post(
+                "/generate", {"prompt": prompt, "top_p": 0.0}))
+            assert st == 400 and b"top_p" in body
+            st, _, body = await _http(p, _post(
+                "/generate", {"prompt": prompt, "max_new": 4,
+                              "min_new": 9}))
+            assert st == 400 and b"min_new" in body
+            await srv.aclose()
+
+    asyncio.run(go())
+
+
+def test_stream_full_pipeline_equivalence(tiny_mesh, glm_params):
+    """A top-p + penalties request streamed through the driver is
+    byte-identical to the same request through engine.run() — the full
+    sampling executables behave identically under the async front-end."""
+    cfg, params = glm_params
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    sp = SamplingParams(temperature=0.9, top_p=0.85, repetition_penalty=1.3,
+                        seed=4)
+
+    def make():
+        return [Request(p.copy(), max_new=10, sampling=sp, rid=62000 + i)
+                for i, p in enumerate(prompts)]
+
+    twin = _engine(cfg, tiny_mesh, params)
+    want = twin.run(make())
+    assert twin.stats["full_sampling_steps"] > 0
+
+    eng = _engine(cfg, tiny_mesh, params)
+    drv = AsyncEngineDriver(eng)
+    reqs = make()
+    events = asyncio.run(_stream_all(drv, reqs, [0, 0]))
+    for r, evs in zip(reqs, events):
+        np.testing.assert_array_equal([e.token for e in evs], want[r.rid])

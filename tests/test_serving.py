@@ -1782,3 +1782,237 @@ def test_sampling_same_seed_requests_decorrelated(glm_smoke):
     b = Request(prompt.copy(), max_new=12, sampling=sp)
     outs = eng.run([a, b])
     assert not np.array_equal(outs[a.rid], outs[b.rid])
+
+
+# ---------------------------------------------------------------------------
+# Full sampling pipeline in the engine (top-p/min-p/penalties/stop/logprobs)
+# ---------------------------------------------------------------------------
+
+
+FULL_SP = dict(temperature=0.9, top_k=16, top_p=0.85,
+               repetition_penalty=1.3, frequency_penalty=0.2,
+               stop=((3, 1, 4),))
+
+
+def test_engine_full_pipeline_replays_across_preemption(glm_smoke):
+    """Preemption-recompute with penalties and stop sequences active:
+    the SamplingBuffer rebinds from (prompt, out) on re-admission, so
+    penalty counts and stop rings land back exactly where the
+    uninterrupted run had them — streams stay byte-identical."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    sp = SamplingParams(seed=3, **FULL_SP)
+
+    def make():
+        return [Request(p, max_new=20, sampling=sp, rid=66000 + i)
+                for i, p in enumerate(prompts)]
+
+    base = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
+    want = list(base.run(make()).values())
+    assert base.stats["full_sampling_steps"] > 0
+    tight = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, num_blocks=8, params=server.params,
+                            debug_invariants=True)
+    reqs = make()
+    got = tight.run(reqs)
+    assert tight.stats["preemptions"] >= 1
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+
+
+def test_engine_full_pipeline_replays_across_swap_in(glm_smoke):
+    """Swap-preemption + swap-in with the full pipeline active: the
+    sampling row is freed at swap-out and rebuilt at swap-in, and the
+    streams are byte-identical to the unconstrained engine."""
+    from repro.serving import InferenceEngine, Request
+    from repro.serving.kv_cache import block_bytes
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    sp = SamplingParams(seed=5, **FULL_SP)
+
+    def make():
+        return [Request(p, max_new=20, sampling=sp, rid=67000 + i)
+                for i, p in enumerate(prompts)]
+
+    base = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
+    want = list(base.run(make()).values())
+    bb = block_bytes(cfg, 16)
+    tight = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, num_blocks=8, params=server.params,
+                            swap_space_bytes=8 * bb, swap_policy="always",
+                            debug_invariants=True)
+    reqs = make()
+    got = tight.run(reqs)
+    assert tight.stats["swap_preemptions"] >= 1
+    assert tight.stats["swap_ins"] >= 1
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+    assert tight.bm.stats().blocks_in_use == 0
+
+
+def test_engine_speculative_full_pipeline_replays(tiny_mesh_module,
+                                                  star_params):
+    """Speculative k=2 with top-p + penalties: proposal-side counts
+    accumulate draft one-hots, the verifier derives the identical
+    per-position counts, and rollback never commits rejected tokens —
+    outputs replay byte-identically under block-pool pressure."""
+    from repro.serving import Request
+    cfg, params = star_params
+    mesh = tiny_mesh_module
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(2)]
+    sp = SamplingParams(seed=11, **FULL_SP)
+
+    def make():
+        return [Request(p, max_new=20, sampling=sp, rid=68000 + i)
+                for i, p in enumerate(prompts)]
+
+    base = _spec_engine(cfg, mesh, params, 2)
+    want = list(base.run(make()).values())
+    assert base.stats["full_sampling_steps"] > 0
+    tight = _spec_engine(cfg, mesh, params, 2, num_blocks=8)
+    reqs = make()
+    got = tight.run(reqs)
+    assert tight.stats["preemptions"] >= 1
+    for w, r in zip(want, reqs):
+        np.testing.assert_array_equal(got[r.rid], w)
+    assert tight.bm.stats().blocks_in_use == 0
+
+
+def test_engine_pure_greedy_skips_full_pipeline(glm_smoke):
+    """The fast-path guard: an all-greedy workload never compiles or
+    runs the full sampling executables (no sampling collectives traced),
+    and its bytes still match the static-server oracle."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompts = [RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+               for _ in range(4)]
+    legacy = server.serve_batch(prompts, [8] * 4)
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    reqs = [Request(p, max_new=8) for p in prompts]
+    outs = eng.run(reqs)
+    assert eng._full_steps == {}            # full path never even traced
+    assert eng.stats["full_sampling_steps"] == 0
+    assert eng.stats["stop_hits"] == 0
+    for r, want in zip(reqs, legacy):
+        np.testing.assert_array_equal(outs[r.rid], want)
+
+
+def test_engine_mixed_batch_full_path_preserves_plain_rows(glm_smoke):
+    """A greedy request batched with a top-p batchmate rides the full
+    executables (the batchmate needs them) yet emits bytes identical to
+    its all-greedy solo run: every full-path transform is an exact
+    identity at default params."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompt = RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    solo = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                           max_len=96, params=server.params,
+                           debug_invariants=True)
+    g = Request(prompt.copy(), max_new=12, rid=70001)
+    want = solo.run([g])[g.rid]
+    mixed = InferenceEngine(cfg, mesh, max_batch=2, block_size=16,
+                            max_len=96, params=server.params,
+                            debug_invariants=True)
+    g2 = Request(prompt.copy(), max_new=12, rid=70001)
+    other = Request(
+        RNG.integers(0, cfg.vocab_size, 32).astype(np.int32), max_new=12,
+        sampling=SamplingParams(temperature=1.0, top_p=0.8, seed=9),
+        rid=70002)
+    outs = mixed.run([g2, other])
+    assert mixed.stats["full_sampling_steps"] > 0
+    np.testing.assert_array_equal(outs[g2.rid], want)
+
+
+def test_engine_stop_sequence_retires_in_engine(glm_smoke):
+    """A matched stop sequence retires the request inside the engine —
+    shorter output, stop_hit set, counters bumped, blocks and the batch
+    slot released — without consuming the remaining max_new steps."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompt = RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    probe_eng = InferenceEngine(cfg, mesh, max_batch=1, block_size=16,
+                                max_len=96, params=server.params,
+                                debug_invariants=True)
+    probe = Request(prompt.copy(), max_new=8)
+    pout = probe_eng.run([probe])[probe.rid].tolist()
+    # two-token stop ending at index 3 of the deterministic greedy stream
+    stop = (int(pout[2]), int(pout[3]))
+
+    eng = InferenceEngine(cfg, mesh, max_batch=1, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    r = Request(prompt.copy(), max_new=32,
+                sampling=SamplingParams(stop=(stop,)))
+    outs = eng.run([r])
+    assert len(outs[r.rid]) == 4 and r.stop_hit
+    assert tuple(outs[r.rid][-2:]) == stop
+    assert eng.stats["stop_hits"] == 1
+    assert not eng.sched.running                    # slot released
+    assert eng.bm.stats().blocks_in_use == 0        # blocks released
+    # stop sequences alone stay on the plain executables (host-side check)
+    assert eng.stats["full_sampling_steps"] == 0
+
+
+def test_engine_min_new_defers_eos_and_stop(glm_smoke):
+    """min_new holds off EOS and stop retirement until the floor is
+    reached; max_new still wins."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    prompt = RNG.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    probe_eng = InferenceEngine(cfg, mesh, max_batch=1, block_size=16,
+                                max_len=96, params=server.params,
+                                debug_invariants=True)
+    probe = Request(prompt.copy(), max_new=20)
+    pout = probe_eng.run([probe])[probe.rid].tolist()
+    tok = int(pout[1])
+    min_new = 6
+    # expected: first re-occurrence at index >= min_new-1, else max_new
+    exp = next((i + 1 for i in range(min_new - 1, 20) if pout[i] == tok), 20)
+
+    eng = InferenceEngine(cfg, mesh, max_batch=1, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    r_eos = Request(prompt.copy(), max_new=20, eos_id=tok, min_new=min_new)
+    assert len(eng.run([r_eos])[r_eos.rid]) == exp
+    eng2 = InferenceEngine(cfg, mesh, max_batch=1, block_size=16, max_len=96,
+                           params=server.params, debug_invariants=True)
+    r_stop = Request(prompt.copy(), max_new=20, min_new=min_new,
+                     sampling=SamplingParams(stop=((tok,),)))
+    assert len(eng2.run([r_stop])[r_stop.rid]) == exp
+    assert r_stop.stop_hit == (exp < 20)
+
+
+def test_engine_logprobs_surface(glm_smoke):
+    """logprobs route through on_token for every emitted token (chunk-
+    final prefill tokens included), with the chosen token's logprob and
+    a sorted top-n of the post-penalty distribution."""
+    from repro.serving import InferenceEngine, Request
+    cfg, mesh, server = glm_smoke
+    eng = InferenceEngine(cfg, mesh, max_batch=2, block_size=16, max_len=96,
+                          params=server.params, debug_invariants=True)
+    got = {}
+    eng.on_token = (lambda req, tok, lp=None:
+                    got.setdefault(req.rid, []).append((int(tok), lp)))
+    reqs = [Request(RNG.integers(0, cfg.vocab_size, 32).astype(np.int32),
+                    max_new=6,
+                    sampling=SamplingParams(temperature=0.8, seed=i,
+                                            top_p=0.9, logprobs=3))
+            for i in range(2)]
+    outs = eng.run(reqs)
+    for r in reqs:
+        events = got[r.rid]
+        assert len(events) == 6
+        assert [t for t, _ in events] == list(outs[r.rid])
+        for _, lp in events:
+            assert lp is not None and len(lp["top"]) == 3
+            assert all(isinstance(i, int) for i, _ in lp["top"])
+            lps = [v for _, v in lp["top"]]
+            assert lps == sorted(lps, reverse=True)
+            assert lp["token_logprob"] <= 0.0
