@@ -505,6 +505,98 @@ def bench_serving_sampling(rows):
 
 
 # ---------------------------------------------------------------------------
+# Data-parallel replicas behind the ReplicaRouter (docs/multi-host.md): a
+# burst workload drained by dp=1 vs dp=2 fleets (same per-replica config,
+# shared prefix index), plus the disaggregated prefill/decode split. Wall
+# tok_s is reported as measured; on a single-core host the replicas'
+# threads serialize, so dp scaling is additionally reported on the fleet
+# *step* clock — max over replicas' engine steps, which is what wall time
+# tracks when each replica owns real hardware (same deterministic virtual
+# clock the ttft_steps percentiles use).
+# ---------------------------------------------------------------------------
+
+
+def bench_serving_dp(rows):
+    from repro.config import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import (InferenceEngine, ReplicaRouter, Request,
+                               SharedPrefixIndex)
+
+    cfg = get_config("glm4_9b", smoke=True)
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    n_req, prompt_len, max_batch = 16, 32, 4
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_req)]
+    warm = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+            for _ in range(n_req)]
+    # uniform horizons: a burst of equal-cost requests, so the router's
+    # least-outstanding-tokens placement splits the fleet evenly and the
+    # scaling number measures replication, not workload skew (raggedness
+    # is the serving_throughput rows' subject)
+    max_new = 12
+    n_tok = n_req * max_new
+
+    def mk(ps, base):
+        return [Request(p.copy(), max_new=max_new, rid=base + i)
+                for i, p in enumerate(ps)]
+
+    shared_params = None
+    results = {}
+    for dp, name in ((1, "serving/dp1"), (2, "serving/dp2")):
+        shared = SharedPrefixIndex(num_slots=256)
+        engines = [InferenceEngine(cfg, mesh, max_batch=max_batch,
+                                   block_size=16, max_len=128,
+                                   params=shared_params,
+                                   shared_index=shared)
+                   for _ in range(dp)]
+        shared_params = engines[0].params   # identical weights, all rows
+        router = ReplicaRouter(engines)
+        router.run(mk(warm, 90000))         # compile + warm the replicas
+        steps0 = [e.stats["steps"] for e in engines]
+        routed0 = list(router.routed)
+        t0 = time.perf_counter()
+        router.run(mk(prompts, 91000))      # the burst: all arrive at once
+        dt = time.perf_counter() - t0
+        steps = [e.stats["steps"] - s0 for e, s0 in zip(engines, steps0)]
+        fleet_steps = max(steps)            # replicas step concurrently
+        results[name] = (dt, fleet_steps)
+        routed = [n - n0 for n, n0 in zip(router.routed, routed0)]
+        derived = (f"tok_s={n_tok/dt:.1f} fleet_steps={fleet_steps} "
+                   f"routed={'/'.join(str(n) for n in routed)} "
+                   f"shared_published_blocks="
+                   f"{shared.stats()['published_blocks']}")
+        if dp > 1:
+            dt1, fs1 = results["serving/dp1"]
+            derived += (f" wall_speedup_vs_dp1={dt1/dt:.2f} "
+                        f"step_speedup_vs_dp1={fs1/fleet_steps:.2f}")
+        rows.append(_csv(name, dt / n_tok * 1e6, derived))
+
+    # disaggregated prefill/decode: probe on the prefill replica, decode
+    # continuation adopts the published blocks through the shared index
+    shared = SharedPrefixIndex(num_slots=256)
+    engines = [InferenceEngine(cfg, mesh, max_batch=max_batch,
+                               block_size=16, max_len=128,
+                               params=shared_params, shared_index=shared)
+               for _ in range(2)]
+    router = ReplicaRouter(engines, disaggregate=True)
+    router.run(mk(warm, 92000))
+    steps0 = [e.stats["steps"] for e in engines]
+    handoffs0 = router.handoffs
+    t0 = time.perf_counter()
+    router.run(mk(prompts, 93000))
+    dt = time.perf_counter() - t0
+    steps = [e.stats["steps"] - s0 for e, s0 in zip(engines, steps0)]
+    rows.append(_csv(
+        "serving/disagg_prefill_decode", dt / n_tok * 1e6,
+        f"tok_s={n_tok/dt:.1f} fleet_steps={max(steps)} "
+        f"handoffs={router.handoffs - handoffs0} "
+        f"decode_shared_hit_blocks={engines[1].stats['shared_hit_blocks']} "
+        f"prefill_published_blocks="
+        f"{engines[0].stats['shared_published_blocks']}"))
+
+
+# ---------------------------------------------------------------------------
 # Paged-attention kernel rows: decode and chunked prefill through the
 # dispatch layer with the pages_per_compute_block knob, plus the ragged
 # packed-prefill op (fused KV scatter + attention). On CPU these time the

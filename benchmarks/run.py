@@ -36,6 +36,7 @@ def main() -> None:
         pb.bench_serving_ragged_prefill,
         pb.bench_serving_kv_tiering,
         pb.bench_serving_sampling,
+        pb.bench_serving_dp,
         pb.bench_paged_kernels,
         pb.bench_fig6_null_step,
         pb.bench_fig7_scaling,

@@ -32,6 +32,14 @@ host platform for CPU smoke runs:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \\
       python -m repro.launch.serve --arch glm4_9b --smoke --mesh model=2
+
+Data-parallel replicas behind one router (shared cross-replica prefix
+index; add --disaggregate for prefill/decode role split —
+docs/multi-host.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke --dp 2
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4_9b --smoke \\
+      --dp 2 --disaggregate
 """
 
 from __future__ import annotations
@@ -71,7 +79,7 @@ def parse_mesh(spec: str | None) -> tuple[int, int]:
     return sizes["data"], sizes["model"]
 
 
-def build_engine(cfg, mesh, args):
+def build_engine(cfg, mesh, args, shared_index=None, params=None):
     from repro.serving import InferenceEngine
     draft_cfg = (get_config(args.speculative_draft, smoke=args.smoke)
                  if args.speculative_draft else None)
@@ -85,13 +93,36 @@ def build_engine(cfg, mesh, args):
         num_speculative_tokens=args.num_speculative_tokens,
         prefill_pack=args.prefill_pack, kv_dtype=args.kv_dtype,
         swap_space_bytes=args.swap_space_bytes,
-        swap_policy=args.swap_policy)
+        swap_policy=args.swap_policy,
+        shared_index=shared_index, params=params)
 
 
-def build_controller(args):
+def build_fleet(cfg, mesh, args):
+    """N identical engine replicas around one SharedPrefixIndex, plus the
+    ReplicaRouter. Params are initialised once on replica 0 and shared by
+    reference (replicas must be byte-identical for the routing to be
+    output-invariant); the shared index is sized to hold one full replica
+    pool's worth of published blocks."""
+    from repro.serving import ReplicaRouter, SharedPrefixIndex
+    dp = args.dp
+    shared = SharedPrefixIndex(num_slots=args.shared_slots)
+    first = build_engine(cfg, mesh, args, shared_index=shared)
+    # speculative engines hold {"tgt","dft"} param dicts the ctor only
+    # assembles from scratch — same seed re-init keeps replicas identical
+    share = None if args.num_speculative_tokens else first.params
+    engines = [first] + [
+        build_engine(cfg, mesh, args, shared_index=shared, params=share)
+        for _ in range(dp - 1)]
+    return ReplicaRouter(engines, admission=build_controller(args, dp),
+                         disaggregate=args.disaggregate,
+                         n_prefill=args.n_prefill)
+
+
+def build_controller(args, n_replicas: int = 1):
     from repro.serving.frontend import AdmissionController
     slo = args.ttft_slo_ms / 1e3 if args.ttft_slo_ms else None
-    return AdmissionController(ttft_slo_p95_s=slo, max_queue=args.max_queue)
+    return AdmissionController(ttft_slo_p95_s=slo, max_queue=args.max_queue,
+                               n_replicas=n_replicas)
 
 
 def make_requests(cfg, args, rng):
@@ -191,6 +222,41 @@ def run_engine(cfg, mesh, args):
     return outs
 
 
+def run_router(cfg, mesh, args):
+    """The synthetic Poisson workload through a data-parallel fleet."""
+    router = build_fleet(cfg, mesh, args)
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(cfg, args, rng)
+    arrivals = poisson_arrival_steps(len(reqs), args.rate, rng)
+    t0 = time.time()
+    outs = router.run(reqs, arrival_steps=arrivals)
+    dt = time.time() - t0
+    tokens = sum(router.replica_stats("tokens"))
+    tok_s = tokens / max(dt, 1e-9)
+    shared = router.shared_stats()
+    print(f"[serve] mesh=data={mesh.shape['data']},model="
+          f"{mesh.shape['model']} dp={router.dp} "
+          f"disaggregate={router.disaggregate}")
+    roles = (f" roles=prefill{router._prefill_ids}/decode"
+             f"{router._decode_ids}" if router.disaggregate else "")
+    print(f"[serve] router: dp={router.dp} routed={router.routed} "
+          f"handoffs={router.handoffs} "
+          f"shared_hit_blocks={sum(router.replica_stats('shared_hit_blocks'))} "
+          f"shared_published_blocks={shared['published_blocks']} "
+          f"shared_evicted_blocks={shared['evicted_blocks']}" + roles)
+    print(f"[serve] fleet: {len(reqs)} requests "
+          f"(poisson rate={args.rate}/step), {tokens} tokens in {dt:.2f}s "
+          f"({tok_s:.1f} tok/s incl. compile) "
+          f"steps={router.replica_stats('steps')} "
+          f"preemptions={router.replica_stats('preemptions')} "
+          f"cache_hit_tokens={router.replica_stats('cache_hit_tokens')}")
+    ctl = router.admission
+    print(f"[serve] frontend: submitted={ctl.submitted} shed={ctl.shed} "
+          f"completed={ctl.completed} queue_peak={ctl.queue_peak}")
+    print("[serve] sample output ids:", outs[reqs[0].rid][:8].tolist())
+    return outs
+
+
 async def _serve_http(eng, controller, host, port):
     from repro.serving.frontend import AsyncEngineDriver, FrontendServer
     drv = AsyncEngineDriver(eng, admission=controller)
@@ -218,8 +284,44 @@ async def _serve_http(eng, controller, host, port):
           f"steps={s['steps']}", flush=True)
 
 
+async def _serve_http_router(router, host, port):
+    from repro.serving.frontend import FrontendServer
+    await router.start()
+    srv = FrontendServer(router, host=host, port=port)
+    await srv.start()
+    ctl = router.admission
+    slo = ctl.ttft_slo_p95_s
+    print(f"[serve] http listening on {host}:{srv.port} "
+          f"dp={router.dp} disaggregate={router.disaggregate} "
+          f"(POST /generate, GET /health, GET /metrics; "
+          f"ttft_slo_p95={slo if slo is not None else 'off'} "
+          f"max_queue={ctl.max_queue})", flush=True)
+    stop = asyncio.Event()
+    loop = asyncio.get_running_loop()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        loop.add_signal_handler(sig, stop.set)
+    await stop.wait()
+    running = sum(len(e.sched.running) for e in router.engines)
+    print("[serve] draining fleet: no new admissions, finishing "
+          f"{running + router.queue_depth} in-flight request(s)",
+          flush=True)
+    await router.aclose()
+    await srv.aclose()
+    print(f"[serve] router: dp={router.dp} routed={router.routed} "
+          f"handoffs={router.handoffs} "
+          f"shared_hit_blocks={sum(router.replica_stats('shared_hit_blocks'))} "
+          f"requests_done={sum(router.replica_stats('requests_done'))} "
+          f"tokens={sum(router.replica_stats('tokens'))} "
+          f"shed={ctl.shed}", flush=True)
+
+
 def run_http(cfg, mesh, args):
     host, _, port = args.http.rpartition(":")
+    if args.dp > 1 or args.disaggregate:
+        router = build_fleet(cfg, mesh, args)
+        asyncio.run(_serve_http_router(router, host or "127.0.0.1",
+                                       int(port)))
+        return
     eng = build_engine(cfg, mesh, args)
     asyncio.run(_serve_http(eng, build_controller(args),
                             host or "127.0.0.1", int(port)))
@@ -273,6 +375,21 @@ def main():
                     help="draft tokens proposed per slot per step; the "
                     "target verifies k+1 positions in one widened step "
                     "(0 disables speculation)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel engine replicas behind one "
+                    "ReplicaRouter admission queue (threads in-process, "
+                    "deterministic least-outstanding-tokens routing, "
+                    "cross-replica prefix sharing; docs/multi-host.md)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="prefill/decode disaggregation: the first "
+                    "--n-prefill replicas prefill (1-token probe), the "
+                    "rest decode; KV hands off as hashed blocks through "
+                    "the shared prefix index (implies --dp >= 2)")
+    ap.add_argument("--n-prefill", type=int, default=1,
+                    help="prefill-role replicas under --disaggregate")
+    ap.add_argument("--shared-slots", type=int, default=512,
+                    help="host-pool slots in the cross-replica "
+                    "SharedPrefixIndex (blocks; LRU-evicted)")
     ap.add_argument("--mesh", default=None,
                     help='mesh axis sizes, e.g. "model=2" or '
                     '"data=2,model=2" (default: 1x1). The "model" axis '
@@ -323,8 +440,12 @@ def main():
     from repro.launch.mesh import make_host_mesh
     data, model = parse_mesh(args.mesh)
     mesh = make_host_mesh(data, model)
+    if args.disaggregate and args.dp < 2:
+        ap.error("--disaggregate needs --dp >= 2 (prefill + decode roles)")
     if args.http:
         run_http(cfg, mesh, args)
+    elif args.dp > 1:
+        run_router(cfg, mesh, args)
     else:
         run_engine(cfg, mesh, args)
 

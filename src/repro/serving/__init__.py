@@ -6,13 +6,16 @@ SLO admission control, HTTP/SSE, /metrics) lives in
 
 from repro.serving.cache import EncoderCache, PagedKVCache, SlotStateCache
 from repro.serving.engine import InferenceEngine
-from repro.serving.kv_cache import BlockManager, init_paged_cache
+from repro.serving.kv_cache import (BlockManager, SharedPrefixIndex,
+                                    init_paged_cache)
+from repro.serving.router import ReplicaRouter, RouterStream
 from repro.serving.runners import (EncDecRunner, HybridRunner, ModelRunner,
                                    SpeculativeRunner, SSMRunner,
                                    TransformerRunner, make_runner)
 from repro.serving.scheduler import Request, SamplingParams, Scheduler
 
-__all__ = ["InferenceEngine", "BlockManager", "PagedKVCache",
+__all__ = ["InferenceEngine", "BlockManager", "SharedPrefixIndex",
+           "ReplicaRouter", "RouterStream", "PagedKVCache",
            "SlotStateCache", "EncoderCache", "init_paged_cache",
            "ModelRunner", "TransformerRunner", "SSMRunner", "HybridRunner",
            "EncDecRunner", "SpeculativeRunner", "make_runner",

@@ -117,7 +117,8 @@ class InferenceEngine:
                  latency_record_cap: int = LATENCY_RECORD_CAP,
                  prefill_pack: int = 1, kv_dtype: str = "bf16",
                  swap_space_bytes: int = 0, swap_policy: str = "auto",
-                 max_logprobs: int = 8, max_stop_len: int = 8):
+                 max_logprobs: int = 8, max_stop_len: int = 8,
+                 shared_index=None):
         self.cfg, self.mesh = cfg, mesh
         self.pcfg = pcfg or ParallelConfig(remat="none")
         # tensor parallelism over the mesh "model" axis: page pools and
@@ -182,6 +183,16 @@ class InferenceEngine:
             raise ValueError(
                 "swap_space_bytes requires a pure paged-KV runner (slot "
                 "state and encoder caches have no block-swap form)")
+        if shared_index is not None and not swap_capable:
+            raise ValueError(
+                "shared_index (cross-replica prefix sharing) requires a "
+                "pure paged-KV runner — the transfer unit is a hashed "
+                "block, which slot-state and encoder caches don't have")
+        if shared_index is not None and not enable_prefix_caching:
+            raise ValueError(
+                "shared_index requires enable_prefix_caching=True: the "
+                "shared unit is the content-hashed block")
+        self.shared_index = shared_index
         num_host_blocks = (swap_space_bytes // self._dev_block_bytes
                            if swap_space_bytes and self._dev_block_bytes
                            else 0)
@@ -189,7 +200,8 @@ class InferenceEngine:
                                          policy=swap_policy)
                            if num_host_blocks > 0 else None)
         self.bm = (BlockManager(num_blocks, block_size,
-                                num_host_blocks=num_host_blocks)
+                                num_host_blocks=num_host_blocks,
+                                shared_index=shared_index)
                    if self.runner.needs_blocks else None)
         self.slot_cache = (SlotStateCache(max_batch)
                            if self.runner.needs_slots else None)
@@ -283,9 +295,20 @@ class InferenceEngine:
                     self._host_pool.append(np.zeros(shape, p.dtype))
                     self._host_block_nbytes += int(
                         np.prod(shape[1:])) * p.dtype.itemsize
+        if num_host_blocks > 0 or shared_index is not None:
+            # the shared-index publish/adopt path reuses the host-swap
+            # gather/scatter executables even with no local host tier
             self._swap_gather = jax.jit(self._swap_gather_fn)
             self._swap_scatter = jax.jit(self._swap_scatter_fn,
                                          donate_argnums=(0,))
+        if shared_index is not None:
+            # shared pool slots mirror the host-tier layout: one slot =
+            # one block's pages across every paged leaf (scale sidecars
+            # included — they share the num_blocks axis)
+            shared_index.attach_pool(
+                [((p.shape[0],) + p.shape[2:], p.dtype)
+                 for p in jax.tree.leaves(self.cache)
+                 if p.ndim >= 2 and p.shape[1] == num_blocks])
 
         cache_mib = 0.0
         if self.runner.needs_blocks:
@@ -311,6 +334,7 @@ class InferenceEngine:
                       "stop_hits": 0, "full_sampling_steps": 0,
                       "swap_preemptions": 0, "swap_ins": 0,
                       "host_hit_blocks": 0,
+                      "shared_hit_blocks": 0, "shared_published_blocks": 0,
                       "swapped_out_blocks": 0, "swapped_in_blocks": 0,
                       "swapped_out_bytes": 0, "swapped_in_bytes": 0,
                       "swap_space_mib": round(
@@ -465,6 +489,60 @@ class InferenceEngine:
         self.cache = self._swap_scatter(self.cache, jnp.asarray(idx), vals)
         self.stats["swapped_in_blocks"] += n
         self.stats["swapped_in_bytes"] += n * self._host_block_nbytes
+
+    def _shared_in(self, pairs) -> None:
+        """h2d: copy shared-index pool slots (blocks another replica
+        published) into freshly allocated device blocks — the ``_swap_in``
+        contract with the process-global pool as the source. Admission
+        pinned the slots; they are released here, once the payload has
+        been captured into the scatter operands."""
+        shared = self.shared_index
+        n = len(pairs)
+        m = self._pad_pow2(n)
+        idx = np.full(m, TRASH_BLOCK, np.int32)
+        idx[:n] = [b for _, b in pairs]
+        slots = [s for s, _ in pairs]
+        vals = []
+        for hp in shared.pool:
+            buf = np.zeros((m,) + hp.shape[1:], hp.dtype)
+            buf[:n] = hp[slots]
+            vals.append(jnp.asarray(buf))
+        shared.release(slots)
+        self.cache = self._swap_scatter(self.cache, jnp.asarray(idx), vals)
+
+    def _flush_shared_publish(self) -> None:
+        """Publish this replica's newly hash-registered blocks into the
+        shared index: d2h-gather their pages into reserved pool slots and
+        commit the hashes. Runs at step boundaries (payloads are complete:
+        registration happens only after the writing exec has synced) and
+        at stream close (``_append_token`` retirement), which is what
+        makes cross-replica adoption deterministic — a request submitted
+        after a producer's stream finished always finds its blocks."""
+        if self.shared_index is None or self.bm is None:
+            return
+        pend = self.bm.drain_publishable()
+        if not pend:
+            return
+        shared = self.shared_index
+        blocks, slots, hashes = [], [], []
+        for b, h in pend:
+            s = shared.reserve(h)
+            if s is None:
+                continue     # raced with another replica, or pool pinned full
+            blocks.append(b)
+            slots.append(s)
+            hashes.append(h)
+        if not blocks:
+            return
+        n = len(blocks)
+        idx = np.full(self._pad_pow2(n), TRASH_BLOCK, np.int32)
+        idx[:n] = blocks
+        g = self._swap_gather(self.cache, jnp.asarray(idx))
+        for pool, leaf in zip(shared.pool, g):
+            pool[slots] = np.asarray(leaf[:n])
+        for s, h in zip(slots, hashes):
+            shared.commit(s, h)
+        self.stats["shared_published_blocks"] += n
 
     # -- host-side step ----------------------------------------------------
 
@@ -622,9 +700,13 @@ class InferenceEngine:
         req.out.append(tok)
         self.samp_buf.commit(req.rid, tok)
         self.stats["tokens"] += 1
-        if len(req.out) == 1:
-            self._lat(req.rid).update(first_token_step=self.step_count,
-                                      first_token_wall=time.monotonic())
+        rec = self._lat(req.rid)
+        if "first_token_step" not in rec:
+            # first token emitted *on this engine* — for a request
+            # submitted with `out` pre-filled (a disaggregated decode
+            # continuation), that's its first locally produced token
+            rec.update(first_token_step=self.step_count,
+                       first_token_wall=time.monotonic())
         self.sched.note_progress(req)
         if (req.sampling.stop and not req.stop_hit
                 and len(req.out) >= req.min_new
@@ -649,6 +731,14 @@ class InferenceEngine:
                         del lat[rid]
                         if len(lat) <= self.latency_record_cap:
                             break
+            if self.shared_index is not None:
+                # stream-close publish barrier: before anyone can observe
+                # this request as finished (on_finish → its stream ends),
+                # every full block it registered is committed to the
+                # shared index — so a request submitted *after* a
+                # producer's stream closed deterministically adopts its
+                # blocks on any replica (docs/multi-host.md)
+                self._flush_shared_publish()
             self.sched.retire(slot)
             if self.on_finish is not None:
                 self.on_finish(req)
@@ -685,6 +775,7 @@ class InferenceEngine:
             self.stats["swap_preemptions"] = self.sched.n_swap_preemptions
             self.stats["swap_ins"] = self.sched.n_swap_ins
             self.stats["host_hit_blocks"] = self.sched.host_hit_blocks
+            self.stats["shared_hit_blocks"] = self.sched.shared_hit_blocks
             self.stats["cache_hit_tokens"] = self.sched.cache_hit_tokens
             self.stats["quantum_dropped_tokens"] = \
                 self.sched.quantum_dropped_tokens
@@ -712,6 +803,10 @@ class InferenceEngine:
                     self._drain_swap_out(d2h_token)
                     d2h_token = None
                 self._swap_in(plan.swap_ins)
+            if plan.shared_ins:
+                # cross-replica adoptions land with the swap-ins, before
+                # COW copies (an adopted block can be a COW source)
+                self._shared_in(plan.shared_ins)
             self._run_encodes(plan)
             for src, dst in plan.copies:
                 self.stats["cow_copies"] += 1
@@ -723,6 +818,7 @@ class InferenceEngine:
                 # hit that is immediately decode-ready) is still progress
                 if d2h_token is not None:
                     self._drain_swap_out(d2h_token)
+                self._flush_shared_publish()
                 if plan.admitted:
                     self.step_count += 1
                 return plan.admitted > 0
@@ -807,10 +903,13 @@ class InferenceEngine:
                 self._swap_cost.observe_prefill(
                     sum(c[2] for c in plan.chunks),
                     time.monotonic() - t_step)
+            self._flush_shared_publish()
             self.stats["steps"] += 1
             self.step_count += 1
             if self.debug_invariants and self.bm is not None:
                 self.bm.check()
+                if self.shared_index is not None:
+                    self.shared_index.check()
             return True
 
     def _check_invariants(self, plan: StepPlan) -> None:

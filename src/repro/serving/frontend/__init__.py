@@ -13,8 +13,10 @@ from repro.serving.frontend.admission import (AdmissionController,
 from repro.serving.frontend.driver import (AsyncEngineDriver, ShedError,
                                            TokenEvent, TokenStream)
 from repro.serving.frontend.http import FrontendServer
-from repro.serving.frontend.metrics import render_metrics
+from repro.serving.frontend.metrics import (render_metrics,
+                                            render_metrics_for,
+                                            render_router_metrics)
 
 __all__ = ["AsyncEngineDriver", "TokenStream", "TokenEvent", "ShedError",
            "AdmissionController", "AdmissionDecision", "FrontendServer",
-           "render_metrics"]
+           "render_metrics", "render_router_metrics", "render_metrics_for"]

@@ -12,10 +12,12 @@ latency. Estimation is deliberately simple and fully observable:
   queue drain rate;
 * a new request behind ``queue_depth`` others projects to
 
-      projected_ttft_p95 = p95(ttft window) + queue_depth * admit_interval
+      projected_ttft_p95 = p95(ttft window)
+                           + queue_depth * admit_interval / n_replicas
 
   — every queued request ahead delays the newcomer's prefill start by
-  roughly one admission interval. When ``projected > ttft_slo_p95_s``
+  roughly one admission interval, divided by the number of data-parallel
+  replicas draining the shared queue. When ``projected > ttft_slo_p95_s``
   the request is shed with ``retry_after_s ~= projected - target``.
 
 A bounded queue (``max_queue``) backstops the estimator: past that depth
@@ -57,11 +59,19 @@ class AdmissionController:
     """
 
     def __init__(self, *, ttft_slo_p95_s: float | None = None,
-                 max_queue: int = 128, window: int = 256):
+                 max_queue: int = 128, window: int = 256,
+                 n_replicas: int = 1):
         if max_queue < 0:
             raise ValueError(f"max_queue={max_queue} must be >= 0")
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas={n_replicas} must be >= 1")
         self.ttft_slo_p95_s = ttft_slo_p95_s
         self.max_queue = max_queue
+        # queue-drain parallelism: N data-parallel replicas consume the
+        # shared queue N-at-a-time, so a queued newcomer waits only
+        # depth/N admit intervals — without this, dp>1 projects the dp=1
+        # drain rate and spuriously sheds load the fleet can absorb
+        self.n_replicas = n_replicas
         self._ttft = deque(maxlen=window)
         self._admit_marks = deque(maxlen=window)
         # counters the /metrics endpoint exports
@@ -101,7 +111,8 @@ class AdmissionController:
         return (m[-1] - m[0]) / (len(m) - 1)
 
     def projected_ttft_p95(self, queue_depth: int) -> float:
-        return self.ttft_p95() + queue_depth * self.mean_admit_interval()
+        return self.ttft_p95() \
+            + queue_depth * self.mean_admit_interval() / self.n_replicas
 
     # -- the decision ------------------------------------------------------
 

@@ -43,7 +43,7 @@ import math
 import numpy as np
 
 from repro.serving.frontend import metrics as metrics_mod
-from repro.serving.frontend.driver import AsyncEngineDriver, ShedError
+from repro.serving.frontend.driver import ShedError
 from repro.serving.scheduler import Request, SamplingParams
 
 __all__ = ["FrontendServer"]
@@ -139,9 +139,11 @@ def _parse_generate(body: bytes) -> Request:
 
 
 class FrontendServer:
-    """The HTTP front door around an :class:`AsyncEngineDriver`."""
+    """The HTTP front door around an :class:`AsyncEngineDriver` or a
+    :class:`~repro.serving.router.ReplicaRouter` (both expose the same
+    ``submit`` / ``abort`` / ``draining`` / ``queue_depth`` surface)."""
 
-    def __init__(self, driver: AsyncEngineDriver, *,
+    def __init__(self, driver, *,
                  host: str = "127.0.0.1", port: int = 0):
         self.driver = driver
         self.host = host
@@ -199,22 +201,26 @@ class FrontendServer:
     # -- routes -------------------------------------------------------------
 
     async def _health(self, writer) -> None:
-        eng = self.driver.engine
+        # the driver is either an AsyncEngineDriver (one engine) or a
+        # ReplicaRouter (a fleet: aggregate across `.engines`)
+        engines = (self.driver.engines if hasattr(self.driver, "engines")
+                   else [self.driver.engine])
         draining = self.driver.draining
         payload = {"status": "draining" if draining else "ok",
-                   "model": eng.cfg.name,
-                   "running": len(eng.sched.running),
+                   "model": engines[0].cfg.name,
+                   "replicas": len(engines),
+                   "running": sum(len(e.sched.running) for e in engines),
                    "queued": self.driver.queue_depth,
-                   "steps": eng.stats["steps"],
-                   "requests_done": eng.stats["requests_done"]}
+                   "steps": sum(e.stats["steps"] for e in engines),
+                   "requests_done": sum(e.stats["requests_done"]
+                                        for e in engines)}
         if draining:
             await self._json(writer, 503, "Service Unavailable", payload)
         else:
             await self._json(writer, 200, "OK", payload)
 
     async def _metrics(self, writer) -> None:
-        body = metrics_mod.render_metrics(
-            self.driver.engine, self.driver).encode()
+        body = metrics_mod.render_metrics_for(self.driver).encode()
         writer.write(_response_head(200, "OK", metrics_mod.CONTENT_TYPE,
                                     len(body)))
         writer.write(body)

@@ -14,7 +14,10 @@ Metric catalog: docs/serving-frontend.md.
 
 from __future__ import annotations
 
-__all__ = ["render_metrics", "CONTENT_TYPE"]
+from repro.serving.stats import Histogram
+
+__all__ = ["render_metrics", "render_router_metrics", "render_metrics_for",
+           "CONTENT_TYPE"]
 
 CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
@@ -70,6 +73,10 @@ _ENGINE_COUNTERS = (
      "Bytes moved device-to-host by swap preemptions"),
     ("swapped_in_bytes", "repro_engine_swapped_in_bytes_total",
      "Bytes moved host-to-device by swap-ins and host prefix hits"),
+    ("shared_hit_blocks", "repro_engine_shared_hit_blocks_total",
+     "Prefix-cache hits adopted from the cross-replica shared index"),
+    ("shared_published_blocks", "repro_engine_shared_published_blocks_total",
+     "Hashed KV blocks this replica published into the shared index"),
 )
 
 _HISTOGRAMS = (
@@ -128,27 +135,106 @@ def render_metrics(engine, driver=None) -> str:
     for key, name, help_ in _HISTOGRAMS:
         engine.hist[key].render(name, help_, out)
     if driver is not None:
-        adm = driver.admission
-        _scalar(out, "repro_frontend_queue_depth", "gauge",
-                "Requests admitted by the front-end but not yet running",
-                driver.queue_depth)
-        _scalar(out, "repro_frontend_queue_peak", "gauge",
-                "Peak front-end queue depth", adm.queue_peak)
-        _scalar(out, "repro_frontend_requests_submitted_total", "counter",
-                "Requests accepted into the front-end queue", adm.submitted)
-        _scalar(out, "repro_frontend_requests_shed_total", "counter",
-                "Requests shed by admission control (HTTP 429)", adm.shed)
-        _scalar(out, "repro_frontend_requests_completed_total", "counter",
-                "Front-end requests whose streams closed cleanly",
-                adm.completed)
-        _scalar(out, "repro_frontend_dropped_streams_total", "counter",
-                "SSE streams whose client disconnected mid-stream "
-                "(the request is then aborted)",
-                driver.dropped_streams)
-        _scalar(out, "repro_frontend_aborted_requests_total", "counter",
-                "Requests cancelled before retirement via the driver's "
-                "abort path", driver.aborted)
-        _scalar(out, "repro_frontend_draining", "gauge",
-                "1 while draining (no new admissions), else 0",
-                1.0 if driver.draining else 0.0)
+        _render_frontend(out, driver)
     return "\n".join(out) + "\n"
+
+
+def _render_frontend(out: list[str], driver) -> None:
+    """The front-end queue/admission section — shared between the single-
+    engine and router renderers (both expose the same driver surface)."""
+    adm = driver.admission
+    _scalar(out, "repro_frontend_queue_depth", "gauge",
+            "Requests admitted by the front-end but not yet running",
+            driver.queue_depth)
+    _scalar(out, "repro_frontend_queue_peak", "gauge",
+            "Peak front-end queue depth", adm.queue_peak)
+    _scalar(out, "repro_frontend_requests_submitted_total", "counter",
+            "Requests accepted into the front-end queue", adm.submitted)
+    _scalar(out, "repro_frontend_requests_shed_total", "counter",
+            "Requests shed by admission control (HTTP 429)", adm.shed)
+    _scalar(out, "repro_frontend_requests_completed_total", "counter",
+            "Front-end requests whose streams closed cleanly",
+            adm.completed)
+    _scalar(out, "repro_frontend_dropped_streams_total", "counter",
+            "SSE streams whose client disconnected mid-stream "
+            "(the request is then aborted)",
+            driver.dropped_streams)
+    _scalar(out, "repro_frontend_aborted_requests_total", "counter",
+            "Requests cancelled before retirement via the driver's "
+            "abort path", driver.aborted)
+    _scalar(out, "repro_frontend_draining", "gauge",
+            "1 while draining (no new admissions), else 0",
+            1.0 if driver.draining else 0.0)
+
+
+def render_router_metrics(router) -> str:
+    """Render the fleet-wide snapshot for a ``ReplicaRouter``.
+
+    Every engine counter family gets one unlabeled fleet-sum series plus
+    per-replica ``{replica="i"}`` series; TTFT/e2e histograms are merged
+    with :meth:`Histogram.merge` (merge == histogram of the concatenated
+    samples, so fleet percentiles are exact) and also emitted per replica
+    under the same family. Router-level series cover routing, the
+    disaggregated handoff count, and the shared prefix index.
+    """
+    out: list[str] = []
+    engines = router.engines
+    for key, name, help_ in _ENGINE_COUNTERS:
+        vals = [e.stats[key] for e in engines]
+        _scalar(out, name, "counter", help_, sum(vals))
+        for i, v in enumerate(vals):
+            out.append(f'{name}{{replica="{i}"}} {format(float(v), "g")}')
+    _scalar(out, "repro_engine_running", "gauge",
+            "Requests currently occupying a batch slot (fleet total)",
+            sum(len(e.sched.running) for e in engines))
+    _scalar(out, "repro_engine_waiting", "gauge",
+            "Requests in the schedulers' waiting queues (fleet total)",
+            sum(len(e.sched.waiting) for e in engines))
+    for key, name, help_ in _HISTOGRAMS:
+        merged = Histogram(engines[0].hist[key].uppers)
+        for e in engines:
+            merged.merge(e.hist[key])
+        merged.render(name, help_, out)
+        for i, e in enumerate(engines):
+            e.hist[key].render(name, help_, out,
+                               labels={"replica": str(i)}, header=False)
+    _scalar(out, "repro_router_replicas", "gauge",
+            "Data-parallel engine replicas behind the router", router.dp)
+    out.append("# HELP repro_router_routed_total Requests routed to each "
+               "replica (least-outstanding-tokens, FCFS tiebreak)")
+    out.append("# TYPE repro_router_routed_total counter")
+    for i, n in enumerate(router.routed):
+        out.append(f'repro_router_routed_total{{replica="{i}"}} '
+                   f'{format(float(n), "g")}')
+    _scalar(out, "repro_router_handoffs_total", "counter",
+            "Disaggregated prefill->decode handoffs (phase-2 "
+            "continuations submitted to a decode replica)",
+            router.handoffs)
+    shared = router.shared_stats()
+    if shared:
+        _scalar(out, "repro_shared_index_slots", "gauge",
+                "Host-pool slots in the shared prefix index",
+                shared["slots"])
+        _scalar(out, "repro_shared_index_committed", "gauge",
+                "Slots currently holding a committed published block",
+                shared["committed"])
+        _scalar(out, "repro_shared_index_published_total", "counter",
+                "Blocks published into the shared index (fleet-wide)",
+                shared["published_blocks"])
+        _scalar(out, "repro_shared_index_adopted_total", "counter",
+                "Block adoptions served by the shared index (fleet-wide)",
+                shared["adopted_blocks"])
+        _scalar(out, "repro_shared_index_evicted_total", "counter",
+                "Committed blocks evicted (LRU) to make room for new "
+                "publishes", shared["evicted_blocks"])
+    _render_frontend(out, router)
+    return "\n".join(out) + "\n"
+
+
+def render_metrics_for(driver) -> str:
+    """Dispatch on the front-end's engine surface: a ``ReplicaRouter``
+    (has ``.engines``) renders the fleet view, an ``AsyncEngineDriver``
+    the single-engine view."""
+    if hasattr(driver, "engines"):
+        return render_router_metrics(driver)
+    return render_metrics(driver.engine, driver)

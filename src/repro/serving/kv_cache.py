@@ -41,6 +41,7 @@ mesh-invariance walks in tests/test_serving_tp.py pin that property.
 from __future__ import annotations
 
 import hashlib
+import threading
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -159,6 +160,193 @@ def block_bytes(cfg: ModelConfig, block_size: int, dtype_bytes: int = 2,
             * row_bytes)
 
 
+class SharedPrefixIndex:
+    """Process-global content-hash index + pinned host payload pool shared
+    by every replica's :class:`BlockManager` (docs/multi-host.md §DP).
+
+    The per-replica prefix cache maps ``hash -> device block``; block ids
+    are meaningless outside their replica, so cross-replica sharing needs
+    a payload medium. This index owns a pool of *host* slots (one slot =
+    one block's pages across every layer, same layout as the PR-8 swap
+    tier) plus a ``hash -> slot`` map. Replicas **publish**: after a full
+    block's hash is registered locally, the engine reserves a slot,
+    d2h-gathers the block's pages into the shared pool, and commits the
+    hash. Any replica's admission then **adopts**: ``acquire`` resolves
+    the longest cached prefix to (slot, hash) pairs, the adopting
+    ``BlockManager.host_copy_in`` allocates fresh device blocks, and the
+    engine h2d-scatters the shared payload — exactly the existing host
+    prefix-hit path, pointed at the shared pool.
+
+    Locking rules (every mutator takes ``self._lock``; replicas run on
+    separate step-loop threads):
+
+    * a **reserved** slot (publish in flight) is invisible to ``acquire``
+      and immune to eviction until ``commit`` or ``abandon``;
+    * an **acquired** slot is pinned until ``release`` (after the h2d
+      copy lands), so no adopted block's payload can be evicted or
+      rewritten under a pending copy;
+    * eviction (pool full on ``reserve``) takes the least-recently-used
+      unpinned committed slot; acquire refreshes recency.
+
+    Byte identity needs none of this to be deterministic: adopted KV is a
+    pure function of the token prefix (the prefix-caching qualification),
+    so a racing miss just recomputes the same bytes. The lock protects
+    *bookkeeping*, not output equivalence.
+    """
+
+    def __init__(self, num_slots: int):
+        assert num_slots >= 1
+        self.num_slots = num_slots
+        self._lock = threading.Lock()
+        self._free = list(range(num_slots - 1, -1, -1))
+        self._slot_of: dict[bytes, int] = {}   # hash -> committed slot
+        self._hash_of: dict[int, bytes] = {}   # committed slot -> hash
+        self._reserved: set[int] = set()       # publish in flight
+        self._pins: dict[int, int] = {}        # slot -> acquire count
+        self._order: list[int] = []            # committed slots, LRU first
+        # pinned numpy payload pool, one array per paged cache leaf
+        # (attach_pool; allocated once by the first replica's engine)
+        self.pool: list[np.ndarray] = []
+        self._pool_key = None
+        self.published_blocks = 0
+        self.adopted_blocks = 0
+        self.evicted_blocks = 0
+
+    # -- payload pool ------------------------------------------------------
+
+    def attach_pool(self, leaf_shapes: list[tuple[tuple, object]]) -> None:
+        """Allocate the shared host pool: one ``(num_slots,) + tail`` array
+        per paged cache leaf (tail excludes the per-replica num_blocks
+        axis, so replicas with different pool sizes still share). First
+        replica allocates; later replicas must present the same layout."""
+        key = tuple((tuple(shape), np.dtype(dt).str)
+                    for shape, dt in leaf_shapes)
+        with self._lock:
+            if self._pool_key is not None:
+                if key != self._pool_key:
+                    raise ValueError(
+                        "shared prefix pool layout mismatch across "
+                        f"replicas: {key} != {self._pool_key}")
+                return
+            self._pool_key = key
+            self.pool = [np.zeros((self.num_slots,) + tuple(shape), dt)
+                         for shape, dt in leaf_shapes]
+
+    # -- publish (writer side) ---------------------------------------------
+
+    def contains(self, h: bytes) -> bool:
+        with self._lock:
+            return h in self._slot_of
+
+    def reserve(self, h: bytes) -> int | None:
+        """Claim a slot for publishing ``h``. None when the hash is
+        already committed or no slot can be freed (all pinned/reserved).
+        The caller copies the payload in, then ``commit``s."""
+        with self._lock:
+            if h in self._slot_of:
+                return None
+            if not self._free:
+                victim = next((s for s in self._order
+                               if not self._pins.get(s)), None)
+                if victim is None:
+                    return None
+                self._evict_locked(victim)
+            s = self._free.pop()
+            self._reserved.add(s)
+            return s
+
+    def commit(self, slot: int, h: bytes) -> None:
+        with self._lock:
+            assert slot in self._reserved, slot
+            self._reserved.discard(slot)
+            if h in self._slot_of:
+                # two replicas raced the same hash through reserve (the
+                # register-time dedup is only best-effort); first commit
+                # wins, the loser's copy is dropped
+                self._free.append(slot)
+                return
+            self._slot_of[h] = slot
+            self._hash_of[slot] = h
+            self._order.append(slot)
+            self.published_blocks += 1
+
+    def abandon(self, slot: int) -> None:
+        """Return a reserved slot unused (publish aborted)."""
+        with self._lock:
+            assert slot in self._reserved, slot
+            self._reserved.discard(slot)
+            self._free.append(slot)
+
+    def _evict_locked(self, slot: int) -> None:
+        self._order.remove(slot)
+        h = self._hash_of.pop(slot)
+        del self._slot_of[h]
+        self._free.append(slot)
+        self.evicted_blocks += 1
+
+    # -- adopt (reader side) -----------------------------------------------
+
+    def acquire(self, hashes: list[bytes],
+                limit: int | None = None) -> list[tuple[int, bytes]]:
+        """Longest prefix of ``hashes`` resolving to committed slots, each
+        pinned against eviction until ``release``. ``limit`` caps the
+        match (the adopter's free-block budget)."""
+        out: list[tuple[int, bytes]] = []
+        with self._lock:
+            for h in hashes if limit is None else hashes[:max(limit, 0)]:
+                s = self._slot_of.get(h)
+                if s is None:
+                    break
+                self._pins[s] = self._pins.get(s, 0) + 1
+                self._order.remove(s)          # refresh recency (MRU)
+                self._order.append(s)
+                out.append((s, h))
+            self.adopted_blocks += len(out)
+        return out
+
+    def release(self, slots: list[int]) -> None:
+        """Unpin after the adopter's h2d copies have landed."""
+        with self._lock:
+            for s in slots:
+                n = self._pins[s] - 1
+                if n:
+                    self._pins[s] = n
+                else:
+                    del self._pins[s]
+
+    # -- audit -------------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"slots": self.num_slots,
+                    "committed": len(self._slot_of),
+                    "pinned": len(self._pins),
+                    "published_blocks": self.published_blocks,
+                    "adopted_blocks": self.adopted_blocks,
+                    "evicted_blocks": self.evicted_blocks}
+
+    def check(self) -> None:
+        """Invariants: slot partition exact, maps mutually consistent,
+        pins only on committed (payload-bearing) slots — i.e. no adopted
+        block can outlive its payload."""
+        with self._lock:
+            committed = set(self._hash_of)
+            free = set(self._free)
+            assert len(free) == len(self._free), "free list duplicates"
+            assert not (free & committed), "free slot holds a hash"
+            assert not (free & self._reserved), "free slot is reserved"
+            assert not (self._reserved & committed), "reserved committed"
+            assert len(free) + len(committed) + len(self._reserved) \
+                == self.num_slots, "slots lost"
+            assert sorted(self._order) == sorted(committed), "order drift"
+            for h, s in self._slot_of.items():
+                assert self._hash_of.get(s) == h, "hash maps disagree"
+            assert len(self._slot_of) == len(self._hash_of)
+            for s, n in self._pins.items():
+                assert n > 0, (s, n)
+                assert s in committed, f"pin on a payload-less slot {s}"
+
+
 @dataclass
 class CacheStats:
     num_blocks: int          # allocatable blocks (excludes the trash block)
@@ -182,10 +370,16 @@ class BlockManager:
     """
 
     def __init__(self, num_blocks: int, block_size: int,
-                 num_host_blocks: int = 0):
+                 num_host_blocks: int = 0,
+                 shared_index: SharedPrefixIndex | None = None):
         assert num_blocks >= 2 and block_size >= 1
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # Cross-replica prefix sharing: registered hashes are queued for
+        # publication into the process-global index (the engine drains the
+        # queue and d2h-copies the payloads at step boundaries).
+        self.shared = shared_index
+        self._publish_q: list[tuple[int, bytes]] = []
         # LIFO free list: recently-freed (cache-warm) blocks are reused first
         self._free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
         self._tables: dict[int, list[int]] = {}
@@ -237,6 +431,8 @@ class BlockManager:
             return
         self._hash_of[block] = h
         self._block_of[h] = block
+        if self.shared is not None and not self.shared.contains(h):
+            self._publish_q.append((block, h))
 
     def match(self, hashes: list[bytes]) -> list[int]:
         """Longest prefix of ``hashes`` resolving to cached blocks."""
@@ -260,6 +456,18 @@ class BlockManager:
         h = self._hash_of.pop(block, None)
         if h is not None:
             del self._block_of[h]
+
+    def drain_publishable(self) -> list[tuple[int, bytes]]:
+        """Queued (block, hash) registrations still current — i.e. the
+        block still carries that hash in the local index, so its pages
+        hold exactly the hashed content. Stale entries (deregistered for
+        an in-place write, or evicted and rewritten since registration)
+        are dropped. The caller d2h-copies survivors into the shared
+        index. Clears the queue."""
+        out = [(b, h) for b, h in self._publish_q
+               if self._hash_of.get(b) == h]
+        self._publish_q.clear()
+        return out
 
     def _pop_free(self) -> int:
         """Take a free block for new content. Prefer blocks with no cached

@@ -229,6 +229,10 @@ class StepPlan:
     # before the step (and before COW copies, which may read them)
     swap_outs: list[tuple[int, int]] = field(default_factory=list)
     swap_ins: list[tuple[int, int]] = field(default_factory=list)
+    # cross-replica prefix adoption: (shared_index_slot, device_block)
+    # h2d copies out of the SharedPrefixIndex pool — same contract as
+    # swap_ins (land before the step), different source pool
+    shared_ins: list[tuple[int, int]] = field(default_factory=list)
 
     @property
     def chunk(self) -> tuple[int, Request, int] | None:
@@ -317,9 +321,11 @@ class Scheduler:
         self.n_swap_ins = 0
         self.n_aborts = 0
         self.host_hit_blocks = 0
+        self.shared_hit_blocks = 0
         # copy pairs accumulated while building the current plan
         self._pending_swap_outs: list[tuple[int, int]] = []
         self._pending_swap_ins: list[tuple[int, int]] = []
+        self._pending_shared_ins: list[tuple[int, int]] = []
         self.cache_hit_tokens = 0
         # prefill tokens lost to chunk_quantum rounding on a step's final
         # chunk (earlier chunks' remainders roll into the next chunk)
@@ -390,6 +396,7 @@ class Scheduler:
         encodes: list[tuple[int, Request]] = []
         self._pending_swap_outs = []
         self._pending_swap_ins = []
+        self._pending_shared_ins = []
         self._ensure_decode_capacity()
         decodes = [(s, r) for s, r in sorted(self.running.items())
                    if r.decode_ready]
@@ -443,9 +450,11 @@ class Scheduler:
                         admitted=admitted, encodes=encodes,
                         spec_tokens=self.spec_tokens,
                         swap_outs=self._pending_swap_outs,
-                        swap_ins=self._pending_swap_ins)
+                        swap_ins=self._pending_swap_ins,
+                        shared_ins=self._pending_shared_ins)
         self._pending_swap_outs = []
         self._pending_swap_ins = []
+        self._pending_shared_ins = []
         return plan
 
     def _quantize(self, n: int, remaining: int) -> int:
@@ -543,7 +552,21 @@ class Scheduler:
                     1 for b in hits if self.bm.refcount(b) == 0)
                 avail = max(0, self.bm.num_free - n_revived)
                 host_ext = hh[len(hits):len(hits) + avail]
-        n_cached = (len(hits) + len(host_ext)) * bs
+        shared_pairs: list[tuple[int, bytes]] = []
+        if hashes and self.bm.shared is not None:
+            # cross-replica extension: blocks another replica published
+            # into the process-global index extend the prefix further
+            # (copied from the shared host pool, not recomputed), again
+            # capped by the free blocks left after revival + host copies
+            n_local = len(hits) + len(host_ext)
+            if n_local < len(hashes):
+                n_revived = sum(
+                    1 for b in hits if self.bm.refcount(b) == 0)
+                avail = max(0, self.bm.num_free - n_revived
+                            - len(host_ext))
+                shared_pairs = self.bm.shared.acquire(
+                    hashes[n_local:], limit=avail)
+        n_cached = (len(hits) + len(host_ext) + len(shared_pairs)) * bs
         cow_idx = None
         if n_cached > total - 1:
             # Whole stream cached: recompute the last token for its logits.
@@ -551,12 +574,12 @@ class Scheduler:
             # or drop that hit when no spare block exists for the copy.
             # The copy target must still be free *after* adoption revives
             # the matched cached-free blocks out of the free list.
-            # (When host_ext is nonempty the final block is a fresh host
-            # copy with refcount 1 — always writable in place after the
-            # deregister below, so no spare block is ever needed.)
+            # (When host_ext/shared_pairs is nonempty the final block is a
+            # fresh copy with refcount 1 — always writable in place after
+            # the deregister below, so no spare block is ever needed.)
             n_cached = total - 1
             cow_idx = n_cached // bs
-            if not host_ext:
+            if not host_ext and not shared_pairs:
                 n_revived = sum(
                     1 for b in hits if self.bm.refcount(b) == 0)
                 if self.bm.refcount(hits[-1]) >= 1 \
@@ -571,8 +594,18 @@ class Scheduler:
                 hashes[len(hits):len(hits) + len(host_ext)])
             self._pending_swap_ins.extend(pairs)
             self.host_hit_blocks += len(host_ext)
+        if shared_pairs:
+            # same allocate-and-register path, sourced from the shared
+            # pool; pairs stay pinned in the index until the engine's
+            # h2d scatter lands (it releases them)
+            _, pairs = self.bm.host_copy_in(
+                req.rid, [s for s, _ in shared_pairs],
+                [h for _, h in shared_pairs])
+            self._pending_shared_ins.extend(pairs)
+            self.shared_hit_blocks += len(shared_pairs)
         req.num_computed = n_cached
-        req.n_published = len(hits) + len(host_ext)   # all registered
+        req.n_published = (len(hits) + len(host_ext)
+                           + len(shared_pairs))     # all registered
         self.cache_hit_tokens += n_cached
         if cow_idx is not None:
             src = self.bm.table(req.rid)[cow_idx]

@@ -70,14 +70,42 @@ class Histogram:
                 return upper
         return self.uppers[-1]
 
-    def render(self, name: str, help_: str, out: list[str]) -> None:
-        """Append Prometheus text-format lines for this histogram."""
-        out.append(f"# HELP {name} {help_}")
-        out.append(f"# TYPE {name} histogram")
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Add ``other``'s observations into this histogram, in place.
+        Bucket bounds must match exactly (fleet aggregation merges
+        replicas built from the same constants). Returns self, so
+        ``reduce(Histogram.merge, hists, Histogram(b))`` folds a fleet.
+
+        Equivalence contract (pinned by tests): merging N histograms is
+        indistinguishable — counts, sum, count, percentiles, rendering —
+        from one histogram that observed the concatenated samples."""
+        if other.uppers != self.uppers:
+            raise ValueError(
+                f"bucket mismatch: {self.uppers} != {other.uppers}")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.total += other.total
+        return self
+
+    def render(self, name: str, help_: str, out: list[str],
+               labels: dict | None = None, header: bool = True) -> None:
+        """Append Prometheus text-format lines for this histogram.
+
+        ``labels`` adds constant label pairs to every series (e.g.
+        ``{"replica": "0"}`` for per-replica fleet series); ``header``
+        False suppresses the HELP/TYPE preamble so several labeled
+        histograms can share one metric family."""
+        if header:
+            out.append(f"# HELP {name} {help_}")
+            out.append(f"# TYPE {name} histogram")
+        base = "".join(f'{k}="{v}",' for k, v in (labels or {}).items())
+        tail = ("{" + base.rstrip(",") + "}") if base else ""
         cum = 0
         for upper, c in zip(self.uppers, self.counts):
             cum += c
-            out.append(f'{name}_bucket{{le="{format(upper, "g")}"}} {cum}')
-        out.append(f'{name}_bucket{{le="+Inf"}} {self.count}')
-        out.append(f"{name}_sum {format(self.total, 'g')}")
-        out.append(f"{name}_count {self.count}")
+            out.append(
+                f'{name}_bucket{{{base}le="{format(upper, "g")}"}} {cum}')
+        out.append(f'{name}_bucket{{{base}le="+Inf"}} {self.count}')
+        out.append(f"{name}_sum{tail} {format(self.total, 'g')}")
+        out.append(f"{name}_count{tail} {self.count}")

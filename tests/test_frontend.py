@@ -64,6 +64,52 @@ def test_histogram_rejects_empty_buckets():
         Histogram(())
 
 
+def test_histogram_merge_equals_concatenated_samples():
+    """Fleet aggregation contract: merging per-replica histograms is
+    indistinguishable — counts, sum, percentiles, rendered text — from
+    one histogram that observed every sample."""
+    uppers = (0.1, 1.0, 4.0)
+    samples = [[0.05, 0.5, 7.0], [0.5, 2.0], [], [0.09, 3.9, 100.0, 0.2]]
+    parts = []
+    whole = Histogram(uppers)
+    for chunk in samples:
+        h = Histogram(uppers)
+        for v in chunk:
+            h.observe(v)
+            whole.observe(v)
+        parts.append(h)
+    merged = Histogram(uppers)
+    for h in parts:
+        assert merged.merge(h) is merged         # returns self (foldable)
+    assert merged.counts == whole.counts
+    assert merged.count == whole.count
+    assert merged.total == pytest.approx(whole.total)
+    for q in (5, 50, 95, 99):
+        assert merged.percentile(q) == whole.percentile(q)
+    got, want = [], []
+    merged.render("m_seconds", "h", got)
+    whole.render("m_seconds", "h", want)
+    assert got == want
+    # merging into a populated histogram keeps prior observations
+    assert merged.merge(parts[0]).count == whole.count + 3
+
+
+def test_histogram_merge_rejects_bucket_mismatch():
+    with pytest.raises(ValueError):
+        Histogram((1.0, 2.0)).merge(Histogram((1.0, 3.0)))
+
+
+def test_histogram_render_labels_and_header():
+    h = Histogram((0.5,))
+    h.observe(0.1)
+    out = []
+    h.render("x_seconds", "h", out, labels={"replica": "1"}, header=False)
+    assert out == ['x_seconds_bucket{replica="1",le="0.5"} 1',
+                   'x_seconds_bucket{replica="1",le="+Inf"} 1',
+                   'x_seconds_sum{replica="1"} 0.1',
+                   'x_seconds_count{replica="1"} 1']
+
+
 # ---------------------------------------------------------------------------
 # AdmissionController — projection math and shed signals
 # ---------------------------------------------------------------------------
@@ -122,6 +168,27 @@ def test_admission_counters_and_queue_peak():
 def test_admission_rejects_negative_queue():
     with pytest.raises(ValueError):
         AdmissionController(max_queue=-1)
+
+
+def test_admission_drain_rate_scales_with_replicas():
+    """Regression for the dp fleet: the queue-drain term divides by the
+    replica count — at a load dp=1 sheds on the TTFT projection, dp=2
+    still admits (two replicas drain the shared queue twice as fast)."""
+    def controller(n):
+        adm = AdmissionController(ttft_slo_p95_s=2.5, n_replicas=n)
+        for _ in range(4):
+            adm.note_ttft(2.0)               # realized p95 = 2.0
+        for t in (10.0, 11.0, 12.0):         # 1 admit / 1.0s observed
+            adm.note_admit(t)
+        return adm
+
+    depth = 1                                # dp=1 projects 3.0 > 2.5
+    assert not controller(1).decide(depth).admit
+    d2 = controller(2).decide(depth)         # dp=2 projects 2.5 <= 2.5
+    assert d2.admit and d2.projected_ttft_s == pytest.approx(2.5)
+    assert controller(2).projected_ttft_p95(4) == pytest.approx(4.0)
+    with pytest.raises(ValueError):
+        AdmissionController(n_replicas=0)
 
 
 # ---------------------------------------------------------------------------
